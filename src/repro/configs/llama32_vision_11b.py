@@ -1,0 +1,25 @@
+"""llama-3.2-vision-11b — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; a gated
+cross-attention layer every 5th layer (8 total) attends over stub image
+patch embeddings — input_specs() provides precomputed (B, 1600, d_model)
+patch embeddings (the vision tower is the stubbed modality frontend).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    cross_attn_every=5,
+    n_img_tokens=1600,
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+)

@@ -1,0 +1,24 @@
+"""mamba2-2.7b — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+64L d_model=2560, attention-free, vocab=50280, ssm_state=128,
+expand=2 (d_inner=5120), head_dim=64 (80 ssm heads), conv width 4.
+O(1)-state decode -> runs long_500k natively.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    vocab=50280,
+    d_ff=0,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_conv=4,
+    ssm_chunk=256,
+    source="arXiv:2405.21060; unverified",
+)

@@ -1,0 +1,25 @@
+"""musicgen-medium — decoder-only over EnCodec tokens [arXiv:2306.05284; hf].
+
+48L d_model=1536 24H (MHA: kv=24) d_ff=6144 vocab=2048.  The EnCodec
+frontend is a STUB: input_specs() provides precomputed frame embeddings
+(B, S, d_model); the backbone is a standard decoder with logits over the
+codec vocabulary.  MusicGen uses full (not sliding-window) attention, so
+the long_500k shape is skipped (DESIGN.md §Shapes).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    act="gelu",
+    embed_stub=True,
+    source="arXiv:2306.05284; hf",
+)

@@ -1,0 +1,23 @@
+"""olmoe-1b-7b — 64 experts top-8 [arXiv:2409.02060; hf].
+
+16L d_model=2048 16H (MHA kv=16) d_ff=1024 per expert, vocab=50304,
+MoE 64e top-8.  Expert-parallel sharding is natural here (64 experts over
+a model axis of 16 -> 4 experts/chip); rules.moe_ep enables it.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab=50304,
+    n_experts=64,
+    top_k=8,
+    source="arXiv:2409.02060; hf",
+)

@@ -1,0 +1,65 @@
+"""Architecture registry: --arch <id> resolution + reduced smoke configs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+from repro.configs import (h2o_danube_18b, llama32_vision_11b, mamba2_27b,
+                           minitron_8b, mixtral_8x7b, musicgen_medium,
+                           olmoe_1b_7b, qwen15_110b, smollm_135m, zamba2_27b)
+
+ARCHS = {
+    "musicgen-medium": musicgen_medium.CONFIG,
+    "minitron-8b": minitron_8b.CONFIG,
+    "qwen1.5-110b": qwen15_110b.CONFIG,
+    "smollm-135m": smollm_135m.CONFIG,
+    "h2o-danube-1.8b": h2o_danube_18b.CONFIG,
+    "olmoe-1b-7b": olmoe_1b_7b.CONFIG,
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "mamba2-2.7b": mamba2_27b.CONFIG,
+    "zamba2-2.7b": zamba2_27b.CONFIG,
+    "llama-3.2-vision-11b": llama32_vision_11b.CONFIG,
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; choose from {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests: few layers, narrow
+    widths, small vocab — same structural features (GQA ratio, SWA, MoE
+    top-k, shared-attn cadence, cross-attn cadence) as the full config."""
+    cfg = get_config(arch)
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=max(2, (cfg.shared_attn_every or cfg.cross_attn_every or 2)
+                     * 2) if (cfg.family in ("hybrid", "vlm")) else 2,
+        d_model=64,
+        vocab=128,
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, 4 * cfg.n_kv_heads
+                                            // max(cfg.n_heads, 1)),
+                  head_dim=16)
+    if cfg.d_ff:
+        kw.update(d_ff=128)
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=min(cfg.top_k, 4))
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    if cfg.shared_attn_every:
+        kw.update(shared_attn_every=cfg.shared_attn_every // 3,
+                  shared_lora_rank=8)
+        kw.update(n_layers=2 * (cfg.shared_attn_every // 3))
+    if cfg.cross_attn_every:
+        kw.update(cross_attn_every=cfg.cross_attn_every,
+                  n_img_tokens=24)
+        kw.update(n_layers=2 * cfg.cross_attn_every)
+    return dataclasses.replace(cfg, **kw)

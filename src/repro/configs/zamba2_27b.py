@@ -1,0 +1,30 @@
+"""zamba2-2.7b — Mamba2 + shared attn blocks [arXiv:2411.15242; hf].
+
+54L d_model=2560 Mamba2 blocks (ssm_state=64) with ONE weight-shared
+attention+MLP block (32H MHA, d_ff=10240) applied every 6 mamba layers
+(9 invocations), each with its own LoRA adapter on Q/K/V, taking
+concat(hidden, embedding) as input (2*d_model), zamba-style.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    ssm_conv=4,
+    ssm_chunk=256,
+    shared_attn_every=6,
+    shared_lora_rank=128,
+    source="arXiv:2411.15242; hf",
+)

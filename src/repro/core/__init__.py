@@ -1,0 +1,19 @@
+"""The paper's contribution: Anderson-accelerated K-Means (Algorithm 1).
+
+Public surface:
+    AAKMeans              — sklearn-shaped estimator (multi-restart)
+    aa_kmeans             — jit-able Algorithm 1 (lax.while_loop)
+    aa_kmeans_traced      — instrumented driver (per-iteration stats)
+    lloyd_kmeans          — classical Lloyd baseline
+    hamerly_kmeans        — Hamerly-bound Lloyd baseline
+    KMeansConfig/AAConfig — solver configuration
+    make_distributed_kmeans — shard_map multi-pod solver
+"""
+
+from repro.core.anderson import AAConfig                       # noqa: F401
+from repro.core.api import AAKMeans                            # noqa: F401
+from repro.core.distributed import make_distributed_kmeans    # noqa: F401
+from repro.core.hamerly import hamerly_kmeans                  # noqa: F401
+from repro.core.kmeans import (KMeansConfig, aa_kmeans,        # noqa: F401
+                               aa_kmeans_traced)
+from repro.core.lloyd import lloyd_kmeans                      # noqa: F401

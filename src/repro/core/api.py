@@ -1,0 +1,94 @@
+"""Top-level estimator API for the paper's solver.
+
+    from repro.core.api import AAKMeans
+    model = AAKMeans(n_clusters=10, init="kmeans++", n_init=3).fit(x)
+    labels = model.predict(x_new)
+
+Thin, sklearn-shaped wrapper over Algorithm 1: multiple restarts (best
+energy wins), any seeding scheme from init_schemes, optional plain-Lloyd
+mode, optional mesh for the distributed solver.  All heavy work stays in
+the jit'd solvers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.anderson import AAConfig
+from repro.core.distributed import make_distributed_kmeans, shard_dataset
+from repro.core.init_schemes import make_init
+from repro.core.kmeans import KMeansConfig, KMeansResult, aa_kmeans
+from repro.core.lloyd import assign
+
+
+@dataclasses.dataclass
+class AAKMeans:
+    n_clusters: int
+    init: str = "kmeans++"
+    n_init: int = 1
+    max_iter: int = 500
+    accelerated: bool = True
+    m0: int = 2
+    mbar: int = 30
+    dynamic_m: bool = True
+    seed: int = 0
+    mesh: Optional[jax.sharding.Mesh] = None      # distributed when set
+    data_axes: tuple = ("data",)
+
+    # fitted state
+    centroids_: Optional[jax.Array] = None
+    labels_: Optional[jax.Array] = None
+    energy_: Optional[float] = None
+    n_iter_: Optional[int] = None
+    n_accepted_: Optional[int] = None
+
+    def _config(self) -> KMeansConfig:
+        return KMeansConfig(
+            k=self.n_clusters, max_iter=self.max_iter,
+            accelerated=self.accelerated,
+            aa=AAConfig(m0=self.m0, mbar=self.mbar,
+                        dynamic_m=self.dynamic_m))
+
+    def fit(self, x) -> "AAKMeans":
+        x = jnp.asarray(x)
+        cfg = self._config()
+        init_fn = make_init(self.init)
+        if self.mesh is not None:
+            fit_fn = make_distributed_kmeans(self.mesh, cfg, self.data_axes)
+            x_sharded, _ = shard_dataset(x, self.mesh, self.data_axes)
+        else:
+            fit_fn = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))
+            x_sharded = x
+
+        best: Optional[KMeansResult] = None
+        key = jax.random.PRNGKey(self.seed)
+        for _ in range(max(self.n_init, 1)):
+            key, sub = jax.random.split(key)
+            c0 = jnp.asarray(init_fn(sub, x, self.n_clusters))
+            res = fit_fn(x_sharded, c0)
+            if best is None or float(res.energy) < float(best.energy):
+                best = res
+        self.centroids_ = best.centroids
+        self.labels_ = best.labels[:x.shape[0]]
+        self.energy_ = float(best.energy)
+        self.n_iter_ = int(best.n_iter)
+        self.n_accepted_ = int(best.n_accepted)
+        return self
+
+    def predict(self, x) -> jax.Array:
+        assert self.centroids_ is not None, "call fit() first"
+        return assign(jnp.asarray(x), self.centroids_).labels
+
+    def transform(self, x) -> jax.Array:
+        """Distances to each centroid (N, K)."""
+        from repro.core.lloyd import pairwise_sqdist
+        assert self.centroids_ is not None, "call fit() first"
+        return jnp.sqrt(pairwise_sqdist(jnp.asarray(x), self.centroids_))
+
+    @property
+    def inertia_(self) -> float:
+        return self.energy_

@@ -1,0 +1,91 @@
+"""LM-stack applications of the paper's solver (DESIGN.md §Arch-applicability).
+
+1. `kv_codebook` / `compress_kv_cache` — per-layer K-Means codebooks over
+   cached K/V vectors: serving-time cache compression (store int codes +
+   (K, hd) codebooks instead of raw vectors).  The clustering problem is
+   exactly Eq. (1) over N = B*T*Hkv vectors in R^{hd}, solved with
+   Algorithm 1.
+2. `embedding_codebook` — product-quantisation of embedding tables: split
+   the d dims into sub-blocks, AA-KMeans per sub-block.
+3. Both report the quantities the paper's tables track (iterations,
+   acceptance rate, MSE) so the LM-side usage doubles as an evaluation of
+   the solver on realistic non-synthetic inputs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import KMeansConfig, aa_kmeans
+from repro.core.init_schemes import kmeanspp_init
+
+
+def kv_codebook(vectors: jax.Array, k: int, *, key=None,
+                max_iter: int = 60):
+    """Cluster (N, d) vectors; returns (codebook (k,d), codes (N,), res)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    v32 = vectors.astype(jnp.float32)
+    c0 = kmeanspp_init(key, v32, k)
+    res = aa_kmeans(v32, c0, KMeansConfig(k=k, max_iter=max_iter))
+    return res.centroids, res.labels, res
+
+
+def compress_kv_cache(cache: dict, k: int, valid_len: int) -> Tuple[dict, float]:
+    """Replace the K/V caches with their codebook reconstruction.
+
+    Returns the reconstructed cache (same pytree) and the relative L2
+    reconstruction error over the valid prefix — the serving-quality
+    proxy.  A production path would store (codes, codebook) and gather at
+    attention time; here we materialise the reconstruction so the decode
+    step is unchanged."""
+    def one(x):
+        # x: (..., T, Hkv, hd) — cluster the valid prefix vectors per tensor
+        lead = x.shape[:-3]
+        t, hkv, hd = x.shape[-3:]
+        v = x[..., :valid_len, :, :].reshape(-1, hd)
+        cb, codes, _ = kv_codebook(v, k)
+        rec = cb[codes].reshape(*lead, valid_len, hkv, hd).astype(x.dtype)
+        err = (jnp.linalg.norm((rec - x[..., :valid_len, :, :])
+                               .astype(jnp.float32))
+               / jnp.maximum(jnp.linalg.norm(
+                   x[..., :valid_len, :, :].astype(jnp.float32)), 1e-9))
+        out = x.at[..., :valid_len, :, :].set(rec)
+        return out, err
+
+    new_cache = dict(cache)
+    errs = []
+    for key_name in ("k", "v"):
+        if key_name in cache:
+            new_cache[key_name], e = one(cache[key_name])
+            errs.append(e)
+    err = float(jnp.mean(jnp.stack(errs))) if errs else 0.0
+    return new_cache, err
+
+
+def embedding_codebook(table: jax.Array, k: int, n_subspaces: int = 4,
+                       key=None, max_iter: int = 60):
+    """Product quantisation of an embedding table (V, d).
+
+    Returns (codebooks (n_sub, k, d/n_sub), codes (V, n_sub), rel_err)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    v, d = table.shape
+    assert d % n_subspaces == 0
+    sub = d // n_subspaces
+    t32 = table.astype(jnp.float32).reshape(v, n_subspaces, sub)
+    cbs, codes = [], []
+    for j in range(n_subspaces):
+        key, k1 = jax.random.split(key)
+        block = t32[:, j, :]
+        c0 = kmeanspp_init(k1, block, k)
+        res = aa_kmeans(block, c0, KMeansConfig(k=k, max_iter=max_iter))
+        cbs.append(res.centroids)
+        codes.append(res.labels)
+    cbs = jnp.stack(cbs)                      # (n_sub, k, sub)
+    codes = jnp.stack(codes, axis=1)          # (V, n_sub)
+    rec = jnp.stack([cbs[j][codes[:, j]] for j in range(n_subspaces)], 1)
+    err = float(jnp.linalg.norm(rec - t32)
+                / jnp.maximum(jnp.linalg.norm(t32), 1e-9))
+    return cbs, codes, err

@@ -1,0 +1,117 @@
+"""Distributed AA-KMeans: the paper's Algorithm 1 on a multi-pod TPU mesh.
+
+Parallelisation layout (see DESIGN.md §Distribution):
+
+  * Samples X (N, d) are sharded over the data axes — on the production
+    meshes that is ("data",) for a single pod and ("pod", "data") across
+    pods — so each of the 256/512 chips owns an N/devices slice.
+  * Centroids C (K, d) are replicated: K*d is tiny (<= a few MB) next to X.
+  * The assignment step is embarrassingly parallel (local distances).
+  * The update step computes local per-cluster partial sums/counts and
+    psum-reduces them over the data axes — one (K*(d+1))-sized all-reduce
+    per iteration, the *only* communication of the solver.
+  * The energy check and the convergence test reduce one scalar each.
+  * Anderson acceleration operates on the replicated centroids; every
+    device solves the identical tiny (mbar x mbar) system, so no extra
+    communication is introduced by the acceleration — the paper's overhead
+    argument (Sec. 2.1) carries over unchanged to the distributed setting.
+
+Because all cross-device traffic is inside `LloydOps`, the *same*
+Algorithm-1 driver (repro.core.kmeans.aa_kmeans) runs unchanged here.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import lloyd
+from repro.core.kmeans import KMeansConfig, KMeansResult, aa_kmeans
+from repro.core.lloyd import AssignResult, LloydOps
+
+
+def distributed_lloyd_ops(data_axes: Sequence[str],
+                          block_n: int = 0) -> LloydOps:
+    """LloydOps whose update/energy/convergence reduce over ``data_axes``.
+
+    The returned ops must be called *inside* shard_map with x as the local
+    shard and c replicated.
+    """
+    axes = tuple(data_axes)
+
+    def assign_fn(x, c):
+        return lloyd.assign(x, c, block_n=block_n)
+
+    def update_fn(x, labels, k, c_prev):
+        sums, counts = lloyd.cluster_sums(x, labels, k)
+        sums = jax.lax.psum(sums, axes)
+        counts = jax.lax.psum(counts, axes)
+        return lloyd.update_from_sums(sums, counts, c_prev)
+
+    def energy_fn(x, c, labels):
+        return jax.lax.psum(lloyd.energy(x, c, labels), axes)
+
+    def all_equal_fn(a, b):
+        neq = jnp.sum((a != b).astype(jnp.int32))
+        return jax.lax.psum(neq, axes) == 0
+
+    return LloydOps(assign_fn=assign_fn, update_fn=update_fn,
+                    energy_fn=energy_fn, all_equal_fn=all_equal_fn,
+                    reduce_scalar=lambda s: jax.lax.psum(s, axes))
+
+
+def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
+                            data_axes: Sequence[str] = ("data",),
+                            block_n: int = 0):
+    """Build the jitted multi-device solver.
+
+    Returns ``fit(x, c0) -> KMeansResult`` where x is (N, d) sharded (or
+    shardable) over ``data_axes`` and c0 is (K, d) replicated.  N must be
+    divisible by the product of the data-axis sizes.
+    """
+    axes = tuple(data_axes)
+    ops = distributed_lloyd_ops(axes, block_n=block_n)
+    x_spec = P(axes)           # shard rows over all data axes
+    rep = P()
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(x_spec, rep),
+        out_specs=KMeansResult(centroids=rep, labels=x_spec, energy=rep,
+                               n_iter=rep, n_accepted=rep, converged=rep))
+    def _run(x_local, c0):
+        return aa_kmeans(x_local, c0, cfg, ops)
+
+    x_sharding = NamedSharding(mesh, x_spec)
+    rep_sharding = NamedSharding(mesh, rep)
+
+    @jax.jit
+    def fit(x, c0):
+        x = jax.lax.with_sharding_constraint(x, x_sharding)
+        c0 = jax.lax.with_sharding_constraint(c0, rep_sharding)
+        return _run(x, c0)
+
+    return fit
+
+
+def shard_dataset(x, mesh: jax.sharding.Mesh,
+                  data_axes: Sequence[str] = ("data",)):
+    """Place a host array on the mesh, padding N to the shard count.
+
+    Padding rows replicate the final sample: duplicated points only bias the
+    padded copy's cluster weighting, and callers that need exactness should
+    pre-size N; the launcher reports when padding is applied."""
+    import numpy as np
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    n = x.shape[0]
+    pad = (-n) % n_shards
+    if pad:
+        x = np.concatenate([x, np.repeat(x[-1:], pad, axis=0)], axis=0)
+    sharding = NamedSharding(mesh, P(tuple(data_axes)))
+    return jax.device_put(x, sharding), pad

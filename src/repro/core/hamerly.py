@@ -1,0 +1,111 @@
+"""Hamerly-bound Lloyd baseline (Hamerly 2010), vectorised for JAX.
+
+The paper's experiments implement the Assignment-Step with Hamerly's
+algorithm: per sample keep an upper bound u_i on the distance to the
+assigned centroid and a lower bound l_i on the second-closest; after the
+centroids move, bounds are updated by the centroid drift and most samples
+skip the O(K) distance scan.
+
+TPU adaptation (DESIGN.md §Hardware-adaptation): bound checks are
+data-dependent branches, so a literal port would idle the MXU.  This
+implementation is *vectorised-masked*: bounds are maintained exactly and
+the full distance row is computed only logically for the failing mask (on
+CPU this is where the win lives; on TPU the dense Pallas path is faster and
+is the production choice).  We report `scan_fraction` — the fraction of
+samples that needed a full scan — which reproduces the paper's premise that
+bounds eliminate most distance work, independent of backend.
+
+Equivalence to plain Lloyd is exact (same assignments every iteration);
+tests/test_kmeans.py asserts it.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lloyd import pairwise_sqdist, update
+
+
+class HamerlyState(NamedTuple):
+    labels: jax.Array     # (N,)
+    upper: jax.Array      # (N,)  upper bound on dist(x, c_label)
+    lower: jax.Array      # (N,)  lower bound on dist(x, second closest)
+    c: jax.Array          # (K, d)
+
+
+def _full_scan(x, c):
+    d = jnp.sqrt(pairwise_sqdist(x, c))
+    order = jnp.argsort(d, axis=1)
+    lab = order[:, 0].astype(jnp.int32)
+    n = x.shape[0]
+    u = d[jnp.arange(n), lab]
+    l2 = d[jnp.arange(n), order[:, 1]]
+    return lab, u, l2
+
+
+def hamerly_init(x, c0) -> HamerlyState:
+    lab, u, l2 = _full_scan(x, c0)
+    return HamerlyState(lab, u, l2, c0)
+
+
+def hamerly_step(x, state: HamerlyState, k: int):
+    """One Lloyd iteration with Hamerly bounds.
+
+    Returns (new_state, changed, scan_fraction)."""
+    # s(j): half distance from centroid j to its nearest other centroid
+    cc = jnp.sqrt(pairwise_sqdist(state.c, state.c))
+    cc = jnp.where(jnp.eye(k, dtype=bool), jnp.inf, cc)
+    s_half = 0.5 * jnp.min(cc, axis=1)                       # (K,)
+
+    m = jnp.maximum(s_half[state.labels], state.lower)       # (N,)
+    needs1 = state.upper > m
+    # tighten u for the candidates: exact distance to assigned centroid
+    d_assigned = jnp.sqrt(jnp.sum(
+        (x - state.c[state.labels]) ** 2, axis=-1))
+    upper_t = jnp.where(needs1, d_assigned, state.upper)
+    needs2 = upper_t > m                                     # full scan mask
+
+    lab_f, u_f, l_f = _full_scan(x, state.c)                 # masked result
+    labels = jnp.where(needs2, lab_f, state.labels)
+    upper = jnp.where(needs2, u_f, upper_t)
+    lower = jnp.where(needs2, l_f, state.lower)
+
+    changed = jnp.sum((labels != state.labels).astype(jnp.int32))
+    scan_fraction = jnp.mean(needs2.astype(jnp.float32))
+
+    c_new = update(x, labels, k, state.c)
+    drift = jnp.sqrt(jnp.sum((c_new - state.c) ** 2, axis=-1))  # (K,)
+    upper = upper + drift[labels]
+    lower = lower - jnp.max(drift)
+    return HamerlyState(labels, upper, lower, c_new), changed, scan_fraction
+
+
+@partial(jax.jit, static_argnames=("k", "max_iter"))
+def hamerly_kmeans(x, c0, k: int, max_iter: int = 500):
+    """Lloyd-with-Hamerly-bounds run to convergence.
+
+    Returns (c, labels, energy, n_iter, mean_scan_fraction)."""
+    state0 = hamerly_init(x, c0)
+
+    def cond(carry):
+        _, changed, t, _ = carry
+        # the first step re-derives labels(C0) (always changed == 0); real
+        # convergence is "assignment unchanged after a centroid update"
+        return jnp.logical_and(jnp.logical_or(changed > 0, t < 2),
+                               t < max_iter)
+
+    def body(carry):
+        st, _, t, fsum = carry
+        st, changed, frac = hamerly_step(x, st, k)
+        return st, changed, t + 1, fsum + frac
+
+    st, _, t, fsum = jax.lax.while_loop(
+        cond, body, (state0, jnp.array(1, jnp.int32),
+                     jnp.array(0, jnp.int32), jnp.array(0.0)))
+    diff = x - st.c[st.labels]
+    energy = jnp.sum(diff * diff)
+    return st.c, st.labels, energy, t, fsum / jnp.maximum(t, 1)

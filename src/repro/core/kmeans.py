@@ -1,0 +1,238 @@
+"""Algorithm 1 of the paper: Anderson acceleration for the K-Means algorithm.
+
+Two drivers over the same primitives:
+
+  * ``aa_kmeans``        — fully jit-able ``lax.while_loop`` implementation
+                           (production path; runs unchanged under shard_map
+                           distribution and with Pallas kernel ops).
+  * ``aa_kmeans_traced`` — Python-loop driver that records the per-iteration
+                           statistics the paper reports (accepted / total
+                           iterations, energy trace, m trace, wall time);
+                           used by the Table 2 / Table 3 benchmarks.
+
+Faithfulness notes (vs. the pseudo-code in the paper):
+
+  * Convergence criterion: identical assignment between two consecutive
+    iterations (line 4).  Because an accelerated iterate is only kept when it
+    strictly decreases the energy, this is reached exactly when a fallback
+    Lloyd iterate repeats the previous assignment — the classical criterion.
+  * The energy check (lines 12-14) compares E(C^t) with E(C^{t-1}) and
+    reverts to the *previous* un-accelerated iterate C_AU^t = G(C^{t-1})
+    computed at line 16 of the previous iteration.
+  * m-adjustment (lines 7-11) happens *before* the revert check, so a
+    rejected iterate (negative decrease -> ratio < eps1) also shrinks m.
+  * E^0 = +inf, and the ratio test only activates once E^{t-2} is finite.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import anderson
+from repro.core.anderson import AAConfig, AAState
+from repro.core.lloyd import (DENSE_OPS, LloydOps, energy_from_mindist)
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    k: int
+    max_iter: int = 500
+    aa: AAConfig = dataclasses.field(default_factory=AAConfig)
+    accelerated: bool = True     # False -> plain Lloyd through the same driver
+    block_n: int = 0             # row blocking for the assignment step
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array   # (K, d)
+    labels: jax.Array      # (N,)
+    energy: jax.Array      # scalar, final E
+    n_iter: jax.Array      # total iterations (paper's "b" in a/b)
+    n_accepted: jax.Array  # iterations whose accelerated iterate was kept
+    converged: jax.Array   # bool
+
+
+class _LoopState(NamedTuple):
+    c: jax.Array           # C^t               (K, d)
+    c_au: jax.Array        # C_AU^t = G(C^{t-1})  fallback iterate
+    p_prev: jax.Array      # P^{t-1}           (N,)
+    e_prev: jax.Array      # E^{t-1}
+    e_prev2: jax.Array     # E^{t-2}
+    aa: AAState
+    t: jax.Array
+    n_acc: jax.Array
+    converged: jax.Array
+    labels: jax.Array      # last P^t (valid on exit)
+    e_last: jax.Array
+
+
+def _init_state(x, c0, cfg: KMeansConfig, ops: LloydOps) -> _LoopState:
+    k = cfg.k
+    inf = jnp.array(jnp.inf, x.dtype)
+    # Line 1:  C^1 = C_AU^1 = G(C^0);  F^0 = C^1 - C^0;  E^0 = +inf
+    c1, res0 = ops.g_map(x, c0, k)
+    aa_state = anderson.aa_init(k * x.shape[1], cfg.aa, x.dtype)
+    aa_state = anderson.aa_seed(aa_state, (c1 - c0).reshape(-1),
+                                c1.reshape(-1))
+    return _LoopState(
+        c=c1, c_au=c1, p_prev=res0.labels,
+        e_prev=inf, e_prev2=inf,
+        aa=aa_state,
+        t=jnp.array(0, jnp.int32), n_acc=jnp.array(0, jnp.int32),
+        converged=jnp.array(False),
+        labels=res0.labels,
+        # E(C^0) as the placeholder "last energy" — overwritten by the first
+        # loop body; min_sqdist is reused (no gather), reduced across shards.
+        e_last=ops.reduce_scalar(energy_from_mindist(res0.min_sqdist)))
+
+
+def _iteration(x, state: _LoopState, cfg: KMeansConfig,
+               ops: LloydOps):
+    """One body of Algorithm 1's for-loop (lines 3-19)."""
+    k = cfg.k
+
+    # Line 3: P^t = Assign(X, C^t)
+    res = ops.assign_fn(x, state.c)
+    p_t, c_t = res.labels, state.c
+
+    # Line 4: convergence <=> identical assignment.  Algorithm 1 returns
+    # (P^t, C^t) at line 5 *before* doing any further work.
+    converged = ops.all_equal_fn(p_t, state.p_prev)
+
+    # E(P^t, C^t) with P^t the fresh assignment of C^t is exactly the sum
+    # of min squared distances — reuse them instead of re-gathering
+    # (the paper's Sec-2.1 low-overhead argument; measured 25.6 ms vs the
+    # 16.2 ms assignment itself on Covtype before this reuse).
+    e_assign = ops.reduce_scalar(energy_from_mindist(res.min_sqdist))
+
+    def _finish(_):
+        new_state = state._replace(converged=jnp.array(True), labels=p_t,
+                                   e_last=e_assign, t=state.t + 1)
+        return new_state, jnp.array(False), e_assign
+
+    def _full(_):
+        # Line 7: E^t = E(P^t, C^t)
+        e_t = e_assign
+
+        # Lines 7-11: dynamic adjustment of m
+        aa_state = anderson.adjust_m(state.aa, e_t, state.e_prev,
+                                     state.e_prev2, cfg.aa)
+
+        # Lines 12-14: keep the accelerated iterate only if it decreases E;
+        # otherwise revert to the fallback iterate C_AU^t = G(C^{t-1}).
+        accepted = e_t < state.e_prev
+
+        def _revert(_):
+            res_f = ops.assign_fn(x, state.c_au)
+            e_f = ops.reduce_scalar(energy_from_mindist(res_f.min_sqdist))
+            return state.c_au, res_f.labels, e_f
+
+        def _keep(_):
+            return c_t, p_t, e_t
+
+        c_cur, p_cur, e_cur = jax.lax.cond(accepted, _keep, _revert,
+                                           operand=None)
+
+        # Line 16: C_AU^{t+1} = Update(X, P^t) — also the next fallback.
+        c_au_next = ops.update_fn(x, p_cur, k, c_cur)
+
+        # Lines 17-19: Anderson acceleration.
+        g_flat = c_au_next.reshape(-1)
+        f_flat = g_flat - c_cur.reshape(-1)
+        if cfg.accelerated:
+            aa_state, c_next_flat, _, _ = anderson.aa_push_and_solve(
+                aa_state, f_flat, g_flat, cfg.aa)
+            c_next = c_next_flat.reshape(c_cur.shape)
+        else:
+            c_next = c_au_next
+
+        new_state = _LoopState(
+            c=c_next, c_au=c_au_next, p_prev=p_cur,
+            e_prev=e_cur, e_prev2=state.e_prev,
+            aa=aa_state,
+            t=state.t + 1,
+            n_acc=state.n_acc + jnp.where(accepted, 1, 0).astype(jnp.int32),
+            converged=jnp.array(False),
+            labels=p_cur, e_last=e_cur)
+        return new_state, accepted, e_cur
+
+    new_state, accepted, e_cur = jax.lax.cond(converged, _finish, _full,
+                                              operand=None)
+    return new_state, converged, accepted, e_cur
+
+
+def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
+              ops: LloydOps = DENSE_OPS) -> KMeansResult:
+    """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d)."""
+
+    def cond(state: _LoopState):
+        return jnp.logical_and(~state.converged, state.t < cfg.max_iter)
+
+    def body(state: _LoopState):
+        new_state, _, _, _ = _iteration(x, state, cfg, ops)
+        return new_state
+
+    state = _init_state(x, c0, cfg, ops)
+    state = jax.lax.while_loop(cond, body, state)
+    # Iteration count convention of the paper's "a/b": b counts the initial
+    # C^1 = G(C^0) plus every fully-executed loop body; the body that merely
+    # *detects* convergence (line 4-5 early return) is not counted.
+    n_iter = state.t + jnp.where(state.converged, 0, 1)
+    return KMeansResult(state.c, state.labels, state.e_last,
+                        n_iter, state.n_acc, state.converged)
+
+
+def aa_kmeans_jit(x, c0, cfg: KMeansConfig, ops: LloydOps = DENSE_OPS):
+    fn = jax.jit(lambda xx, cc: aa_kmeans(xx, cc, cfg, ops))
+    return fn(x, c0)
+
+
+# ---------------------------------------------------------------------------
+# Instrumented Python driver (benchmark parity with the paper's tables)
+# ---------------------------------------------------------------------------
+
+class KMeansTrace(NamedTuple):
+    result: KMeansResult
+    energies: list          # E^t per iteration (post-revert)
+    m_values: list          # m after adjustment, per iteration
+    accepted: list          # bool per iteration
+    wall_time_s: float
+    mse: float              # final E / N — the paper's reported MSE
+
+
+def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
+                     ops: LloydOps = DENSE_OPS,
+                     jit_iteration: bool = True) -> KMeansTrace:
+    """Python-loop driver recording the statistics of Tables 2 and 3."""
+    iter_fn = _iteration
+    if jit_iteration:
+        iter_fn = jax.jit(_iteration, static_argnames=("cfg", "ops"))
+    init_fn = jax.jit(_init_state, static_argnames=("cfg", "ops")) \
+        if jit_iteration else _init_state
+
+    t0 = time.perf_counter()
+    state = init_fn(x, c0, cfg, ops)
+    energies, m_vals, acc = [], [], []
+    converged = False
+    while not converged and int(state.t) < cfg.max_iter:
+        state, conv, accepted, e_t = iter_fn(x, state, cfg, ops)
+        converged = bool(conv)
+        if converged:
+            break
+        energies.append(float(e_t))
+        m_vals.append(int(state.aa.m))
+        acc.append(bool(accepted))
+    jax.block_until_ready(state.c)
+    wall = time.perf_counter() - t0
+
+    n_iter = len(energies) + 1          # +1 for the initial G(C^0)
+    n_accepted = sum(acc)
+    result = KMeansResult(state.c, state.labels, state.e_last,
+                          jnp.array(n_iter), jnp.array(n_accepted),
+                          jnp.array(converged))
+    mse = float(state.e_last) / x.shape[0]
+    return KMeansTrace(result, energies, m_vals, acc, wall, mse)

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the K-Means assignment step (Eq. 3).
+
+This is the paper's stated per-iteration bottleneck: O(N*K) distance
+evaluations.  The paper's CPU implementation avoids work with Hamerly's
+bounds; on TPU the same insight does not transfer (data-dependent branching
+starves the MXU — see DESIGN.md §Hardware-adaptation), so the TPU-native
+formulation is a dense blocked computation
+
+    dist^2(i, k) = |x_i|^2 - 2 <x_i, c_k> + |c_k|^2
+
+where the cross term is an MXU matmul, tiled so each (TN x d) sample block
+and (TK x d) centroid block live in VMEM, with a running (min, argmin)
+reduction across centroid tiles.
+
+Grid layout: (n_tiles, k_tiles); the k dimension is the minor (sequential)
+axis so the running min/argmin accumulation into the output block (indexed
+by the n tile only) touches consecutive grid steps — the legal accumulation
+pattern on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TN = 512   # sample rows per tile
+DEFAULT_TK = 512   # centroid rows per tile
+
+
+def _assignment_kernel(x_ref, c_ref, csq_ref, labels_ref, mind_ref, *,
+                       tk: int):
+    """One (n_tile, k_tile) cell: distances + running min/argmin."""
+    j = pl.program_id(1)
+
+    x = x_ref[...]                                  # (TN, d)
+    c = c_ref[...]                                  # (TK, d)
+    csq = csq_ref[...]                              # (1, TK)
+
+    xf = x.astype(jnp.float32)
+    xsq = jnp.sum(xf * xf, axis=-1, keepdims=True)  # (TN, 1)
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (TN, TK) on the MXU
+    dist = jnp.maximum(xsq - 2.0 * cross + csq, 0.0)
+
+    local_arg = jnp.argmin(dist, axis=-1).astype(jnp.int32)   # (TN,)
+    local_min = jnp.min(dist, axis=-1)                        # (TN,)
+    local_arg_global = local_arg + j * tk
+
+    @pl.when(j == 0)
+    def _init():
+        labels_ref[...] = local_arg_global
+        mind_ref[...] = local_min
+
+    @pl.when(j > 0)
+    def _accum():
+        prev_min = mind_ref[...]
+        prev_lab = labels_ref[...]
+        better = local_min < prev_min                # strict: ties keep the
+        labels_ref[...] = jnp.where(better, local_arg_global, prev_lab)
+        mind_ref[...] = jnp.where(better, local_min, prev_min)
+
+
+def _pad_to(a: jax.Array, axis: int, multiple: int, value=0.0):
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tn", "tk", "interpret"))
+def assignment_pallas(x: jax.Array, c: jax.Array, *,
+                      tn: int = DEFAULT_TN, tk: int = DEFAULT_TK,
+                      interpret: bool = False):
+    """Nearest-centroid assignment via the Pallas kernel.
+
+    x: (N, d) f32/bf16; c: (K, d).  Returns (labels (N,) i32, mind (N,) f32).
+    Arbitrary N, K, d — inputs are padded to tile multiples; padded centroid
+    rows get +inf squared norms so they are never selected.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+    tn = min(tn, max(8, n))
+    tk = min(tk, max(8, k))
+
+    xp = _pad_to(x, 0, tn)
+    cp = _pad_to(c, 0, tk)
+    # Pad feature dim to the 128-lane boundary for MXU alignment.
+    xp = _pad_to(xp, 1, 128)
+    cp = _pad_to(cp, 1, 128)
+
+    cpf = cp.astype(jnp.float32)
+    csq = jnp.sum(cpf * cpf, axis=-1)
+    # Padded centroids must never win the argmin.
+    if cp.shape[0] != k:
+        mask = jnp.arange(cp.shape[0]) >= k
+        csq = jnp.where(mask, jnp.float32(jnp.finfo(jnp.float32).max), csq)
+    csq2 = csq[None, :]                              # (1, Kp)
+
+    np_, dp = xp.shape
+    kp = cp.shape[0]
+    grid = (np_ // tn, kp // tk)
+
+    labels, mind = pl.pallas_call(
+        functools.partial(_assignment_kernel, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((tk, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tk), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn,), lambda i, j: (i,)),
+            pl.BlockSpec((tn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, csq2)
+    return labels[:n], mind[:n]

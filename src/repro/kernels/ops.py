@@ -1,0 +1,114 @@
+"""Jit'd dispatch layer over the Pallas kernels.
+
+`use_pallas` resolution:
+  * on TPU backends the compiled kernels run natively;
+  * on CPU (this container) `interpret=True` executes the kernel bodies in
+    Python for correctness validation — the TPU lowering is exercised by the
+    dry-run path.
+
+`pallas_lloyd_ops()` adapts the kernels to the `LloydOps` interface so
+Algorithm 1 (repro.core.kmeans) runs unchanged on top of them, and
+`fused_ops()` wires the fused single-pass kernel in as the beyond-paper
+optimised backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lloyd import AssignResult, LloydOps, update_from_sums
+from repro.kernels import ref
+from repro.kernels.assignment import assignment_pallas
+from repro.kernels.fused_lloyd import fused_lloyd_pallas
+from repro.kernels.update import update_pallas
+
+# VMEM budget for holding the full centroid block in the fused kernel
+# (elements of C, f32): 2M elements = 8 MB, about half of one core's VMEM.
+FUSED_MAX_KD = 2 * 1024 * 1024
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def assignment(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
+    """(labels, min_sqdist) — Pallas kernel or jnp oracle."""
+    if use_pallas:
+        return assignment_pallas(x, c, interpret=_interpret())
+    return ref.assignment_ref(x, c)
+
+
+def cluster_update(x: jax.Array, labels: jax.Array, k: int, *,
+                   use_pallas: bool = True):
+    """(sums, counts) — Pallas kernel or jnp oracle."""
+    if use_pallas:
+        return update_pallas(x, labels, k, interpret=_interpret())
+    return ref.update_ref(x, labels, k)
+
+
+def fused_lloyd_step(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
+    """(labels, sums, counts, energy) in one X pass."""
+    if use_pallas:
+        return fused_lloyd_pallas(x, c, interpret=_interpret())
+    return ref.fused_lloyd_ref(x, c)
+
+
+# ---------------------------------------------------------------------------
+# LloydOps adapters
+# ---------------------------------------------------------------------------
+
+def pallas_lloyd_ops() -> LloydOps:
+    """Algorithm-1 ops backed by the separate assignment/update kernels."""
+
+    def assign_fn(x, c):
+        labels, mind = assignment(x, c)
+        return AssignResult(labels, mind)
+
+    def update_fn(x, labels, k, c_prev):
+        sums, counts = cluster_update(x, labels, k)
+        return update_from_sums(sums, counts,
+                                c_prev.astype(sums.dtype)).astype(c_prev.dtype)
+
+    def energy_fn(x, c, labels):
+        diff = x.astype(jnp.float32) - c.astype(jnp.float32)[labels]
+        return jnp.sum(diff * diff)
+
+    return LloydOps(assign_fn=assign_fn, update_fn=update_fn,
+                    energy_fn=energy_fn)
+
+
+class FusedGCache:
+    """The fused kernel computes assignment AND update in one pass; the
+    Algorithm-1 driver however consumes them at two separate call sites
+    (assign at line 3, update at line 16 after a possible revert).  The
+    driver stays kernel-agnostic; this thin cache lets the fused backend
+    reuse the pass when the accelerated iterate was accepted — exactly the
+    reuse argument of the paper's overhead analysis (Sec. 2.1 part ii)."""
+
+    def __init__(self):
+        self._key = None
+        self._val = None
+
+    def get(self, c):
+        if self._key is not None and self._key is c:
+            return self._val
+        return None
+
+    def put(self, c, val):
+        self._key, self._val = c, val
+
+
+def fused_step(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
+    """One full Lloyd iteration via the fused kernel:
+    returns (c_next, labels, energy)."""
+    labels, sums, counts, energy = fused_lloyd_step(x, c,
+                                                    use_pallas=use_pallas)
+    c_next = update_from_sums(sums, counts, c.astype(sums.dtype))
+    return c_next.astype(c.dtype), labels, energy

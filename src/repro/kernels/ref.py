@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and assert_allclose's).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assignment_ref(x: jax.Array, c: jax.Array):
+    """Nearest-centroid assignment.  x (N,d), c (K,d) ->
+    (labels (N,) int32, min_sqdist (N,) f32)."""
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x_sq = jnp.sum(x * x, axis=-1, keepdims=True)
+    c_sq = jnp.sum(c * c, axis=-1)
+    d = jnp.maximum(x_sq - 2.0 * (x @ c.T) + c_sq[None, :], 0.0)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32), jnp.min(d, axis=-1)
+
+
+def update_ref(x: jax.Array, labels: jax.Array, k: int):
+    """Per-cluster sums and counts.  -> (sums (K,d) f32, counts (K,) f32)."""
+    x = x.astype(jnp.float32)
+    sums = jax.ops.segment_sum(x, labels, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), labels,
+                                 num_segments=k)
+    return sums, counts
+
+
+def fused_lloyd_ref(x: jax.Array, c: jax.Array):
+    """One fused Lloyd pass: assignment + cluster sums + counts + energy,
+    reading X exactly once.  -> (labels, sums, counts, energy)."""
+    labels, mind = assignment_ref(x, c)
+    sums, counts = update_ref(x, labels, c.shape[0])
+    return labels, sums, counts, jnp.sum(mind)

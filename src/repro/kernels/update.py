@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the K-Means update step (Eq. 4): segment-sum.
+
+Scatter-add is hostile to the TPU's vector units; the TPU-native analogue is
+a one-hot matmul on the MXU:
+
+    sums[k, :]  = sum_i 1[labels_i == k] * x_i   =  onehot^T @ X
+    counts[k]   = sum_i 1[labels_i == k]
+
+tiled over samples (grid minor axis, sequential accumulation into the
+(TK x d) output block) and over centroid tiles (grid major axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.assignment import _pad_to
+
+DEFAULT_TN = 1024
+DEFAULT_TK = 1024
+
+
+def _update_kernel(labels_ref, x_ref, sums_ref, counts_ref, *, tk: int):
+    i = pl.program_id(1)          # sample tile (minor, sequential)
+    j = pl.program_id(0)          # centroid tile (major)
+
+    labels = labels_ref[...]                       # (TN,)
+    x = x_ref[...].astype(jnp.float32)             # (TN, d)
+
+    local = labels - j * tk                        # position within this tile
+    ks = jax.lax.broadcasted_iota(jnp.int32, (labels.shape[0], tk), 1)
+    onehot = (local[:, None] == ks).astype(jnp.float32)   # (TN, TK)
+
+    psum = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (TK, d) on the MXU
+    pcount = jnp.sum(onehot, axis=0)               # (TK,)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = psum
+        counts_ref[...] = pcount
+
+    @pl.when(i > 0)
+    def _accum():
+        sums_ref[...] += psum
+        counts_ref[...] += pcount
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tn", "tk", "interpret"))
+def update_pallas(x: jax.Array, labels: jax.Array, k: int, *,
+                  tn: int = DEFAULT_TN, tk: int = DEFAULT_TK,
+                  interpret: bool = False):
+    """Per-cluster sums (K,d) f32 and counts (K,) f32 via the Pallas kernel.
+
+    Padded sample rows are given label -1 so they land in no tile.
+    """
+    n, d = x.shape
+    tn = min(tn, max(8, n))
+    tk = min(tk, max(8, k))
+
+    xp = _pad_to(x, 0, tn)
+    xp = _pad_to(xp, 1, 128)
+    lp = _pad_to(labels.astype(jnp.int32), 0, tn, value=-1)
+
+    np_, dp = xp.shape
+    kp = k + ((-k) % tk)
+    grid = (kp // tk, np_ // tn)
+
+    sums, counts = pl.pallas_call(
+        functools.partial(_update_kernel, tk=tk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn,), lambda j, i: (i,)),
+            pl.BlockSpec((tn, dp), lambda j, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tk, dp), lambda j, i: (j, 0)),
+            pl.BlockSpec((tk,), lambda j, i: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lp, xp)
+    return sums[:k, :d], counts[:k]

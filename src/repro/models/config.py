@@ -1,0 +1,145 @@
+"""Unified model configuration covering all assigned architecture families.
+
+Families:
+  dense   — llama-style decoder (GQA, optional QKV bias, optional SWA)
+  moe     — dense skeleton with MoE FFN (top-k routing, capacity dispatch)
+  ssm     — Mamba2 (SSD) stack, attention-free
+  hybrid  — Zamba2: Mamba2 blocks + a weight-shared attention block applied
+            every `shared_attn_every` layers (with per-slot LoRA)
+  vlm     — llama + gated cross-attention layers over stub image embeddings
+  audio   — musicgen: decoder over EnCodec-token *embeddings* (stub
+            frontend); logits over the codec vocabulary
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None    # SWA width; None = full attention
+    # ffn
+    d_ff: int = 0
+    act: str = "silu"
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2)
+    shared_attn_every: int = 0        # one shared attn block per this many
+    shared_lora_rank: int = 0
+    # vlm
+    cross_attn_every: int = 0         # cross-attn layer each N layers
+    n_img_tokens: int = 0
+    # audio / embed stub
+    embed_stub: bool = False          # inputs are embeddings, not token ids
+    # numerics / structure
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"           # activation/compute dtype
+    param_dtype: str = "float32"      # master parameter dtype
+    tie_embeddings: bool = False
+    # notes for DESIGN.md / dry-run bookkeeping
+    source: str = ""
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for the long_500k shape (SSM/hybrid/sliding-window)."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (dense matmul weights + embeddings)."""
+        d, f, L, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        p = 0
+        if not self.embed_stub:
+            p += v * d
+        p += v * d if not self.tie_embeddings else 0     # lm head
+        if self.family in ("dense", "moe", "vlm", "audio"):
+            attn = d * self.attn_dim + 2 * d * self.kv_dim + self.attn_dim * d
+            if self.family == "moe":
+                ffn = self.n_experts * 3 * d * f
+            else:
+                ffn = 3 * d * f
+            p += L * (attn + ffn)
+            if self.family == "vlm" and self.cross_attn_every:
+                n_cross = L // self.cross_attn_every
+                p += n_cross * (d * self.attn_dim + 2 * d * self.kv_dim
+                                + self.attn_dim * d)
+        elif self.family == "ssm":
+            di, ns, nh = self.ssm_inner, self.ssm_state, self.ssm_heads
+            in_proj = d * (2 * di + 2 * self.ssm_groups * ns + nh)
+            p += L * (in_proj + di * d)
+        elif self.family == "hybrid":
+            di, ns, nh = self.ssm_inner, self.ssm_state, self.ssm_heads
+            in_proj = d * (2 * di + 2 * self.ssm_groups * ns + nh)
+            p += L * (in_proj + di * d)
+            # one shared attn+mlp block (+ tiny per-slot LoRA)
+            p += (2 * d) * self.attn_dim + 2 * (2 * d) * self.kv_dim \
+                + self.attn_dim * d + 3 * d * f
+        return p
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        total = self.n_params()
+        return total - L * (self.n_experts - self.top_k) * 3 * d * f
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell from the assignment."""
+    name: str            # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}

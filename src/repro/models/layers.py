@@ -1,0 +1,305 @@
+"""Shared neural-net layers: norms, rotary embeddings, attention, MLP.
+
+Attention is implemented blockwise (flash-attention-style online softmax via
+lax.scan over KV blocks, with the query axis chunked by an outer scan) so the
+(S x S) score matrix never materialises — required for the 32k-prefill and
+500k-context shapes.  Causal and sliding-window masks are applied per block.
+
+The `skip_blocks` option (beyond-paper perf lever, see EXPERIMENTS.md §Perf)
+unrolls the query chunks in Python so each chunk only scans the KV prefix it
+can actually attend to — removing the ~2x masked-flops waste of the scanned
+version at the price of a larger (but still layer-scanned) HLO.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rotary
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(d):
+    return {"scale": spec((d,), ("norm",), init="ones")}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def rotary(x, positions, theta=10000.0):
+    """Apply RoPE.  x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention
+# ---------------------------------------------------------------------------
+
+class AttnBlockCfg(NamedTuple):
+    block_q: int = 512
+    block_kv: int = 1024
+    skip_blocks: bool = False    # unroll q chunks, scan only the live prefix
+    unroll: bool = False         # python-unroll ALL block loops (cost calib)
+
+
+def _pick_block(total: int, want: int) -> int:
+    """Largest divisor of `total` that is <= want (block sizes must tile)."""
+    want = min(want, total)
+    for b in range(want, 0, -1):
+        if total % b == 0:
+            return b
+    return total
+
+
+def _attend_block(q, k, v, mask, scale):
+    """q (B,bq,H,hd), k/v (B,bk,Hkv,hd), mask (bq,bk) or None.
+    Returns (scores_exp_sum, new_max, weighted_v) pieces for online softmax.
+    GQA: H = Hkv * group."""
+    b, bq, h, hd = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, bq, hkv, group, hd)
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale    # (B,bq,Hkv,g,bk)
+    if mask is not None:
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    return s
+
+
+def _block_mask(q_pos, k_pos, causal, window):
+    """(bq, bk) boolean mask; True = attend."""
+    m = None
+    if causal:
+        m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        w = q_pos[:, None] - k_pos[None, :] < window
+        m = w if m is None else (m & w)
+    return m
+
+
+def blockwise_attention(q, k, v, *, causal=True,
+                        window: Optional[int] = None,
+                        cfg: AttnBlockCfg = AttnBlockCfg(),
+                        q_offset: int = 0):
+    """Flash-style attention.  q (B,S,H,hd); k,v (B,T,Hkv,hd).
+
+    q_offset: absolute position of q[0] relative to k[0] (prefill: 0;
+    decode-with-cache uses the dense path below instead).
+    """
+    b, sq, h, hd = q.shape
+    t = k.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+    bq = _pick_block(sq, cfg.block_q)
+    bk = _pick_block(t, cfg.block_kv)
+    nq, nk = sq // bq, t // bk
+    hkv = k.shape[2]
+    group = h // hkv
+
+    k_blocks = k.reshape(b, nk, bk, hkv, hd)
+    v_blocks = v.reshape(b, nk, bk, hkv, hd)
+
+    def q_chunk(qc, iq, nk_live):
+        """Online softmax over the first nk_live kv blocks (static).
+
+        Both the per-block body and the whole chunk are checkpointed: the
+        backward pass then recomputes score blocks instead of storing every
+        (bq x bk) block of the linearised scan — the flash-attention memory
+        property.  Without this, the scan backward stores O(S^2/bk) f32
+        scores per layer (measured: ~30 GiB/device on a 135M model)."""
+        q_pos = q_offset + iq * bq + jnp.arange(bq)
+
+        @jax.checkpoint
+        def body(carry, blk):
+            acc, mx, den = carry
+            kb, vb, jk = blk
+            k_pos = jk * bk + jnp.arange(bk)
+            mask = _block_mask(q_pos, k_pos, causal, window)
+            s = _attend_block(qc, kb, vb, mask, scale)   # (B,bq,Hkv,g,bk)
+            new_mx = jnp.maximum(mx, jnp.max(s, axis=-1))
+            # guard all-masked rows (new_mx = -inf)
+            safe_mx = jnp.where(jnp.isfinite(new_mx), new_mx, 0.0)
+            p = jnp.exp(s - safe_mx[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(mx), mx - safe_mx,
+                                     -jnp.inf))
+            den = den * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bqkgs,bskd->bqkgd", p,
+                            vb.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, new_mx, den), None
+
+        acc0 = jnp.zeros((b, bq, hkv, group, hd), jnp.float32)
+        mx0 = jnp.full((b, bq, hkv, group), -jnp.inf, jnp.float32)
+        den0 = jnp.zeros((b, bq, hkv, group), jnp.float32)
+        if cfg.unroll:
+            carry = (acc0, mx0, den0)
+            for jk in range(nk_live):
+                carry, _ = body(carry, (k_blocks[:, jk], v_blocks[:, jk],
+                                        jnp.int32(jk)))
+            acc, mx, den = carry
+        else:
+            kb = k_blocks[:, :nk_live].swapaxes(0, 1)
+            vb = v_blocks[:, :nk_live].swapaxes(0, 1)
+            (acc, mx, den), _ = jax.lax.scan(
+                body, (acc0, mx0, den0), (kb, vb, jnp.arange(nk_live)))
+        out = acc / jnp.maximum(den[..., None], 1e-30)
+        return out.reshape(b, bq, h, hd).astype(q.dtype)
+
+    q_chunk_ck = jax.checkpoint(q_chunk, static_argnums=(2,))
+
+    if (cfg.skip_blocks and causal and nq > 1) or cfg.unroll:
+        # Python-unrolled q chunks.  skip_blocks: each chunk processes only
+        # the prefix of KV blocks it can see.  unroll (cost-calibration
+        # builds): every block loop is unrolled so cost_analysis counts all
+        # block bodies.
+        outs = []
+        for iq in range(nq):
+            if cfg.skip_blocks and causal and t == sq:
+                # kv blocks covering positions [0, (iq+1)*bq) — bq != bk safe
+                hi = min(nk, -(-((iq + 1) * bq) // bk))
+            else:
+                hi = nk
+            qc = q[:, iq * bq:(iq + 1) * bq]
+            outs.append(q_chunk_ck(qc, iq, hi))
+        return jnp.concatenate(outs, axis=1)
+
+    def outer(qc_iq):
+        qc, iq = qc_iq
+        return q_chunk_ck(qc, iq, nk)
+
+    q_chunks = q.reshape(b, nq, bq, h, hd).swapaxes(0, 1)
+    out = jax.lax.map(outer, (q_chunks, jnp.arange(nq)))
+    return out.swapaxes(0, 1).reshape(b, sq, h, hd)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """Single-token attention against a cache.
+
+    q (B,1,H,hd); k_cache/v_cache (B,T,Hkv,hd); cache_len (B,) int32 —
+    number of valid cache entries (new token's kv already written).
+    """
+    b, _, h, hd = q.shape
+    t = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    group = h // hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(b, hkv, group, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale     # (B,Hkv,g,T)
+    pos = jnp.arange(t)[None, :]                            # (1,T)
+    valid = pos < cache_len[:, None]
+    if window is not None:
+        valid = valid & (pos >= (cache_len[:, None] - window))
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block parameter specs / application
+# ---------------------------------------------------------------------------
+
+def attention_spec(cfg, d_in=None, *, prefix_axes=()):
+    """Projection specs for one attention block.  d_in defaults to d_model
+    (zamba2's shared block passes 2*d_model)."""
+    d = d_in if d_in is not None else cfg.d_model
+    pa = tuple(prefix_axes)
+    px = tuple(None for _ in pa)  # leading dims (e.g. layers) — handled by caller
+
+    def sp(shape, axes, **kw):
+        return spec(shape, axes, **kw)
+
+    p = {
+        "wq": sp((d, cfg.n_heads, cfg.head_dim), ("embed", "heads", None)),
+        "wk": sp((d, cfg.n_kv_heads, cfg.head_dim), ("embed", "kv_heads", None)),
+        "wv": sp((d, cfg.n_kv_heads, cfg.head_dim), ("embed", "kv_heads", None)),
+        "wo": sp((cfg.n_heads, cfg.head_dim, cfg.d_model),
+                 ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = sp((cfg.n_heads, cfg.head_dim), ("heads", None), init="zeros")
+        p["bk"] = sp((cfg.n_kv_heads, cfg.head_dim), ("kv_heads", None),
+                     init="zeros")
+        p["bv"] = sp((cfg.n_kv_heads, cfg.head_dim), ("kv_heads", None),
+                     init="zeros")
+    return p
+
+
+def qkv_proj(p, x, cfg, positions, *, rope=True, lora=None):
+    """x (B,S,d_in) -> q (B,S,H,hd), k, v with RoPE at `positions`."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if lora is not None:
+        # per-slot LoRA on q/k/v (zamba2 shared block)
+        for nm, tgt in (("q", "q"), ("k", "k"), ("v", "v")):
+            a, bmat = lora[f"{nm}_a"].astype(x.dtype), lora[f"{nm}_b"].astype(x.dtype)
+            delta = jnp.einsum("bsd,dr,rhk->bshk", x, a, bmat)
+            if tgt == "q":
+                q = q + delta
+            elif tgt == "k":
+                k = k + delta
+            else:
+                v = v + delta
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if rope:
+        q = rotary(q, positions, cfg.rope_theta)
+        k = rotary(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(p, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out,
+                      p["wo"].astype(attn_out.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg, d_ff=None):
+    f = d_ff if d_ff is not None else cfg.d_ff
+    d = cfg.d_model
+    return {
+        "w_gate": spec((d, f), ("embed", "mlp")),
+        "w_up": spec((d, f), ("embed", "mlp")),
+        "w_down": spec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x, act="silu"):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = act_fn(act)(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))

@@ -1,0 +1,826 @@
+"""Model assembly: family dispatch, scan-over-layers, caches, entry points.
+
+Every architecture exposes the same three jit-able entry points:
+
+    forward(params, batch)              -> (per-token logits, aux)   [train]
+    prefill(params, batch)              -> (last-token logits, cache)
+    decode_step(params, batch, cache)   -> (logits, cache)           [serve]
+
+Layers are stacked with `jax.lax.scan` (params carry a leading "layers"
+axis) and rematerialised with a configurable policy, keeping the HLO small
+enough to compile 80-layer models and the activation memory bounded.
+
+Caches:
+  * attention — (L, B, T, Hkv, hd) K/V ring buffers; sliding-window archs
+    allocate only the window (the SWA memory win; seq lens here are
+    multiples of the window so ring slots align, asserted below),
+  * ssm — MambaState stacked per layer: O(1) in context length,
+  * vlm — cross-attention K/V computed once from the image embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec, spec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Per-run (not per-arch) knobs — the §Perf hillclimb levers."""
+    remat: str = "full"            # none | dots | full
+    block_q: int = 512
+    block_kv: int = 1024
+    skip_blocks: bool = False      # causal prefix-only attention chunks
+    loss_chunk: int = 0            # 0 = unchunked CE
+    scan_layers: bool = True       # False: python-unroll the layer stack
+    attn_unroll: bool = False      # unroll attention block loops (cost calib)
+    fold_heads: bool = False       # shard attention over folded batch x
+    #                                kv-heads (fixes non-divisible head counts)
+    cache_seq_model: bool = False  # decode: shard the KV cache sequence dim
+    #                                over "model" (flash-decode layout)
+    seq_shard_acts: bool = False   # Megatron-SP: residual-stream activations
+    #                                sequence-sharded over "model"
+
+
+def _remat(fn, flags: RunFlags):
+    if flags.remat == "none":
+        return fn
+    if flags.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def scan_or_loop(body, carry, xs, scan: bool):
+    """lax.scan, or an equivalent python unroll (XLA cost_analysis counts a
+    while body once regardless of trip count, so the dry-run calibration
+    builds unroll — see launch/dryrun.py)."""
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda t: t[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = ys[0] if ys else None
+    return carry, ys
+
+
+def _stack(specs: PyTree, n: int) -> PyTree:
+    """Prepend a scanned 'layers' axis to every spec in the tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _attn_cfg(flags: RunFlags) -> L.AttnBlockCfg:
+    return L.AttnBlockCfg(flags.block_q, flags.block_kv, flags.skip_blocks,
+                          flags.attn_unroll)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block (dense / moe / audio backbones)
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig) -> PyTree:
+    p = {
+        "ln1": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.moe_spec(cfg)
+    else:
+        p["mlp"] = L.mlp_spec(cfg)
+    return p
+
+
+def _folded_attention(q, k, v, cfg, flags, constrain, causal=True):
+    """Attention sharded over the folded (batch x kv-heads) axis.
+
+    Head counts that do not divide the model axis (9, 24, or GQA kv=8 vs
+    model=16) force head replication under plain head sharding; folding
+    batch into kv-heads gives a leading axis (B * Hkv) that divides the
+    full mesh for every assigned arch (B >= 128).  The GQA group dimension
+    rides along as the per-fold head dim.  §Perf lever."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+
+    def fold_q(t):   # (B,S,Hkv*g,hd) -> (B*Hkv, S, g, hd)
+        t = t.reshape(b, s, hkv, g, hd).transpose(0, 2, 1, 3, 4)
+        return t.reshape(b * hkv, s, g, hd)
+
+    def fold_kv(t):  # (B,S,Hkv,hd) -> (B*Hkv, S, 1, hd)
+        return t.transpose(0, 2, 1, 3).reshape(b * hkv, s, 1, hd)
+
+    qf = constrain(fold_q(q), ("fold_bh", "seq", None, None))
+    kf = constrain(fold_kv(k), ("fold_bh", "seq", None, None))
+    vf = constrain(fold_kv(v), ("fold_bh", "seq", None, None))
+    attn = L.blockwise_attention(qf, kf, vf, causal=causal,
+                                 window=cfg.sliding_window,
+                                 cfg=_attn_cfg(flags))
+    attn = attn.reshape(b, hkv, s, g, hd).transpose(0, 2, 1, 3, 4)
+    return attn.reshape(b, s, hq, hd)
+
+
+def block_apply(p, h, cfg: ModelConfig, flags: RunFlags, positions,
+                constrain):
+    """Training/prefill block.  Returns (h, (k, v), aux)."""
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], x, cfg, positions)
+    if flags.fold_heads:
+        attn = _folded_attention(q, k, v, cfg, flags, constrain)
+    else:
+        q = constrain(q, ("batch", "seq", "act_heads", None))
+        k = constrain(k, ("batch", "seq", "act_kv_heads", None))
+        v = constrain(v, ("batch", "seq", "act_kv_heads", None))
+        attn = L.blockwise_attention(q, k, v, causal=True,
+                                     window=cfg.sliding_window,
+                                     cfg=_attn_cfg(flags))
+    h = h + L.out_proj(p["attn"], attn)
+    h = constrain(h, ("batch", "seq_res", "act_embed"))
+    x2 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = MOE.moe_ffn(p["moe"], x2, cfg, cfg.act, constrain)
+    else:
+        y, aux = L.mlp(p["mlp"], x2, cfg.act), {}
+    h = h + y
+    h = constrain(h, ("batch", "seq_res", "act_embed"))
+    return h, (k, v), aux
+
+
+def block_decode(p, h, cfg: ModelConfig, k_cache, v_cache, cache_len,
+                 positions, constrain):
+    """One-token block step against a cache.  Returns (h, k_cache, v_cache)."""
+    bsz = h.shape[0]
+    x = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    q, k, v = L.qkv_proj(p["attn"], x, cfg, positions)
+    t = k_cache.shape[1]
+    widx = cache_len % t if cfg.sliding_window else jnp.minimum(
+        cache_len, t - 1)
+    k_cache = k_cache.at[jnp.arange(bsz), widx].set(k[:, 0])
+    v_cache = v_cache.at[jnp.arange(bsz), widx].set(v[:, 0])
+    new_len = cache_len + 1
+    attn = L.decode_attention(q, k_cache, v_cache, new_len, window=None)
+    h = h + L.out_proj(p["attn"], attn)
+    x2 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = MOE.moe_ffn(p["moe"], x2, cfg, cfg.act, constrain)
+    else:
+        y = L.mlp(p["mlp"], x2, cfg.act)
+    h = h + y
+    h = constrain(h, ("batch", None, "act_embed"))
+    return h, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg: ModelConfig) -> PyTree:
+    p = {"ln_f": L.rmsnorm_spec(cfg.d_model),
+         "unembed": spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))}
+    if not cfg.embed_stub:
+        p["embed"] = spec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                          scale=1.0)
+    return p
+
+
+def embed_tokens(p, cfg, batch, constrain):
+    if cfg.embed_stub:
+        h = batch["frames"]                    # (B, S, d) precomputed stub
+    else:
+        h = jnp.take(p["embed"], batch["tokens"], axis=0)
+    h = h.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    return constrain(h, ("batch", "seq_res", "act_embed"))
+
+
+def logits_fn(p, cfg, h, constrain):
+    logits = jnp.einsum("bsd,dv->bsv", h, p["unembed"].astype(h.dtype))
+    return constrain(logits, ("batch", "seq", "act_vocab"))
+
+
+def ce_loss(p, cfg, h, labels, constrain, flags: RunFlags):
+    """Cross-entropy; optionally chunked over the sequence so the (B,Sc,V)
+    logits block bounds peak memory (§Perf lever)."""
+    def chunk_loss(hc, yc):
+        logits = logits_fn(p, cfg, hc, constrain).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(yc, cfg.vocab, dtype=logits.dtype)
+        # keep the (B,S,V) one-hot sharded like the logits — unsharded it
+        # is the single biggest buffer in the whole step
+        onehot = constrain(onehot, ("batch", "seq", "act_vocab"))
+        correct = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum(lse - correct)
+
+    b, s, _ = h.shape
+    n_tok = b * s
+    if flags.loss_chunk and s % flags.loss_chunk == 0 and s > flags.loss_chunk:
+        nc = s // flags.loss_chunk
+        hc = h.reshape(b, nc, flags.loss_chunk, -1).swapaxes(0, 1)
+        yc = labels.reshape(b, nc, flags.loss_chunk).swapaxes(0, 1)
+        tot = jax.lax.map(lambda t: chunk_loss(t[0], t[1]), (hc, yc))
+        return jnp.sum(tot) / n_tok
+    return chunk_loss(h, labels) / n_tok
+
+
+# ---------------------------------------------------------------------------
+# Family: dense / moe / audio (shared skeleton)
+# ---------------------------------------------------------------------------
+
+def _tf_specs(cfg: ModelConfig) -> PyTree:
+    return {"blocks": _stack(block_spec(cfg), cfg.n_layers),
+            "head": embed_spec(cfg)}
+
+
+def _tf_forward(params, batch, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+    positions = jnp.arange(h.shape[1])[None, :]
+    aux_acc = {}
+
+    def body(hh, lp):
+        hh, _, aux = block_apply(lp, hh, cfg, flags, positions, constrain)
+        return hh, aux
+
+    body_r = _remat(body, flags)
+    h, auxs = scan_or_loop(body_r, h, params["blocks"], flags.scan_layers)
+    if auxs:
+        aux_acc = {k: jnp.sum(v) for k, v in auxs.items()}
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    return h, aux_acc
+
+
+def _tf_prefill(params, batch, cfg, flags, constrain, cache_t):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(hh, lp):
+        hh, (k, v), _ = block_apply(lp, hh, cfg, flags, positions, constrain)
+        if cache_t < s:      # SWA: keep the last window only (ring-aligned)
+            assert s % cache_t == 0
+            k, v = k[:, -cache_t:], v[:, -cache_t:]
+        elif cache_t > s:
+            pad = cache_t - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = constrain(k, ("cache_batch", "cache_seq", "act_kv_heads", None))
+        v = constrain(v, ("cache_batch", "cache_seq", "act_kv_heads", None))
+        return hh, (k, v)
+
+    body_r = _remat(body, flags)
+    h, (k_all, v_all) = scan_or_loop(body_r, h, params["blocks"],
+                                     flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    cache = {"k": k_all, "v": v_all,
+             "len": jnp.full((h.shape[0],), s, jnp.int32)}
+    return logits, cache
+
+
+def _tf_decode(params, batch, cache, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg,
+                     {"tokens": batch["token"][:, None]} if not cfg.embed_stub
+                     else {"frames": batch["frame"][:, None, :]}, constrain)
+    cache_len = cache["len"]
+    positions = cache_len[:, None]
+
+    def body(hh, xs):
+        lp, kc, vc = xs
+        hh, kc, vc = block_decode(lp, hh, cfg, kc, vc, cache_len,
+                                  positions, constrain)
+        return hh, (kc, vc)
+
+    h, (k_new, v_new) = scan_or_loop(body, h, (params["blocks"],
+                                               cache["k"], cache["v"]),
+                                     flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    return logits, {"k": k_new, "v": v_new, "len": cache_len + 1}
+
+
+def _tf_cache_specs(cfg: ModelConfig, batch: int, cache_t: int) -> PyTree:
+    kv = {"k": spec((cfg.n_layers, batch, cache_t, cfg.n_kv_heads,
+                     cfg.head_dim),
+                    ("layers", "cache_batch", "cache_seq", "act_kv_heads",
+                     None)),
+          "v": spec((cfg.n_layers, batch, cache_t, cfg.n_kv_heads,
+                     cfg.head_dim),
+                    ("layers", "cache_batch", "cache_seq", "act_kv_heads",
+                     None)),
+          "len": spec((batch,), ("cache_batch",), init="zeros")}
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# Family: ssm (mamba2)
+# ---------------------------------------------------------------------------
+
+def _ssm_specs(cfg: ModelConfig) -> PyTree:
+    blk = {"ln": L.rmsnorm_spec(cfg.d_model), "mamba": SSM.mamba2_spec(cfg)}
+    return {"blocks": _stack(blk, cfg.n_layers), "head": embed_spec(cfg)}
+
+
+def _ssm_forward(params, batch, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+
+    def body(hh, lp):
+        x = L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+        y, _ = SSM.mamba2_forward(lp["mamba"], x, cfg)
+        hh = constrain(hh + y, ("batch", "seq_res", "act_embed"))
+        return hh, None
+
+    body_r = _remat(body, flags)
+    h, _ = scan_or_loop(body_r, h, params["blocks"], flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    return h, {}
+
+
+def _ssm_prefill(params, batch, cfg, flags, constrain, cache_t):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+
+    def body(hh, lp):
+        x = L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+        y, st = SSM.mamba2_forward(lp["mamba"], x, cfg)
+        hh = constrain(hh + y, ("batch", "seq_res", "act_embed"))
+        return hh, st
+
+    body_r = _remat(body, flags)
+    h, states = scan_or_loop(body_r, h, params["blocks"], flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    cache = {"conv": states.conv, "ssm": states.ssm,
+             "len": jnp.full((h.shape[0],), batch_len(batch), jnp.int32)}
+    return logits, cache
+
+
+def batch_len(batch) -> int:
+    if "tokens" in batch:
+        return batch["tokens"].shape[1]
+    return batch["frames"].shape[1]
+
+
+def _ssm_decode(params, batch, cache, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg,
+                     {"tokens": batch["token"][:, None]}, constrain)
+
+    def body(hh, xs):
+        lp, conv, st = xs
+        x = L.rmsnorm(lp["ln"], hh, cfg.norm_eps)
+        y, new_state = SSM.mamba2_decode_step(
+            lp["mamba"], x, cfg, SSM.MambaState(conv, st))
+        hh = hh + y
+        return hh, (new_state.conv, new_state.ssm)
+
+    h, (conv_new, ssm_new) = scan_or_loop(
+        body, h, (params["blocks"], cache["conv"], cache["ssm"]),
+        flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    return logits, {"conv": conv_new, "ssm": ssm_new,
+                    "len": cache["len"] + 1}
+
+
+def _ssm_cache_specs(cfg: ModelConfig, batch: int, cache_t: int) -> PyTree:
+    st = SSM.mamba2_state_spec(cfg, batch)
+    return {"conv": _stack(st["conv"], cfg.n_layers),
+            "ssm": _stack(st["ssm"], cfg.n_layers),
+            "len": spec((batch,), ("cache_batch",), init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# Family: hybrid (zamba2: mamba2 + weight-shared attention block w/ LoRA)
+# ---------------------------------------------------------------------------
+
+def _hybrid_groups(cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+    return cfg.n_layers // every, every
+
+
+def _shared_block_spec(cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    return {
+        "ln": L.rmsnorm_spec(2 * d),
+        "attn": L.attention_spec(cfg, d_in=2 * d),
+        "ln2": L.rmsnorm_spec(d),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _lora_spec(cfg: ModelConfig) -> PyTree:
+    d, r = 2 * cfg.d_model, cfg.shared_lora_rank
+    out = {}
+    for nm, heads in (("q", cfg.n_heads), ("k", cfg.n_kv_heads),
+                      ("v", cfg.n_kv_heads)):
+        out[f"{nm}_a"] = spec((d, r), ("embed", "lora"))
+        out[f"{nm}_b"] = spec((r, heads, cfg.head_dim),
+                              ("lora", "kv_heads", None), init="zeros")
+    return out
+
+
+def _hybrid_specs(cfg: ModelConfig) -> PyTree:
+    ng, every = _hybrid_groups(cfg)
+    blk = {"ln": L.rmsnorm_spec(cfg.d_model), "mamba": SSM.mamba2_spec(cfg)}
+    return {
+        "mamba_blocks": _stack(_stack(blk, every), ng),
+        "shared": _shared_block_spec(cfg),
+        "lora": _stack(_lora_spec(cfg), ng),
+        "head": embed_spec(cfg),
+    }
+
+
+def _shared_attn_apply(params, h, h0, lora, cfg, flags, positions, constrain,
+                       kv_out=False):
+    """Shared attention block on concat(h, h0) (zamba2)."""
+    hcat = jnp.concatenate([h, h0], axis=-1)
+    x = L.rmsnorm(params["ln"], hcat, cfg.norm_eps)
+    q, k, v = L.qkv_proj(params["attn"], x, cfg, positions, lora=lora)
+    q = constrain(q, ("batch", "seq", "act_heads", None))
+    attn = L.blockwise_attention(q, k, v, causal=True, cfg=_attn_cfg(flags))
+    h = h + L.out_proj(params["attn"], attn)
+    x2 = L.rmsnorm(params["ln2"], h, cfg.norm_eps)
+    h = h + L.mlp(params["mlp"], x2, cfg.act)
+    h = constrain(h, ("batch", "seq_res", "act_embed"))
+    return (h, (k, v)) if kv_out else (h, None)
+
+
+def _hybrid_forward_impl(params, batch, cfg, flags, constrain, collect_kv,
+                         cache_t=None):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+    h0 = h
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def group(hh, xs):
+        gp, lora = xs
+        hh, kv = _shared_attn_apply(params["shared"], hh, h0, lora, cfg,
+                                    flags, positions, constrain,
+                                    kv_out=collect_kv)
+
+        def inner(hh2, lp):
+            x = L.rmsnorm(lp["ln"], hh2, cfg.norm_eps)
+            y, st = SSM.mamba2_forward(lp["mamba"], x, cfg)
+            return constrain(hh2 + y, ("batch", "seq_res", "act_embed")), st
+
+        hh, states = scan_or_loop(inner, hh, gp, flags.scan_layers)
+        return hh, (kv, states)
+
+    group_r = _remat(group, flags)
+    h, (kvs, states) = scan_or_loop(group_r, h,
+                                    (params["mamba_blocks"], params["lora"]),
+                                    flags.scan_layers)
+    return h, kvs, states
+
+
+def _hybrid_forward(params, batch, cfg, flags, constrain):
+    h, _, _ = _hybrid_forward_impl(params, batch, cfg, flags, constrain,
+                                   collect_kv=False)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    return h, {}
+
+
+def _hybrid_prefill(params, batch, cfg, flags, constrain, cache_t):
+    h, kvs, states = _hybrid_forward_impl(params, batch, cfg, flags,
+                                          constrain, collect_kv=True,
+                                          cache_t=cache_t)
+    k_all, v_all = kvs
+    k_all = constrain(k_all, (None, "cache_batch", "cache_seq",
+                              "act_kv_heads", None))
+    v_all = constrain(v_all, (None, "cache_batch", "cache_seq",
+                              "act_kv_heads", None))
+    s = batch_len(batch)
+    h = L.rmsnorm(params["head"]["ln_f"], h[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    if cache_t > s:
+        pad = cache_t - s
+        k_all = jnp.pad(k_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_all = jnp.pad(v_all, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k_all, "v": v_all, "conv": states.conv, "ssm": states.ssm,
+             "len": jnp.full((logits.shape[0],), s, jnp.int32)}
+    return logits, cache
+
+
+def _hybrid_decode(params, batch, cache, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg,
+                     {"tokens": batch["token"][:, None]}, constrain)
+    h0 = h
+    cache_len = cache["len"]
+    positions = cache_len[:, None]
+    bsz = h.shape[0]
+
+    def group(hh, xs):
+        lora, kc, vc, conv, st, gp = xs
+        # shared attention against this group's cache slice
+        hcat = jnp.concatenate([hh, h0], axis=-1)
+        x = L.rmsnorm(params["shared"]["ln"], hcat, cfg.norm_eps)
+        q, k, v = L.qkv_proj(params["shared"]["attn"], x, cfg, positions,
+                             lora=lora)
+        widx = jnp.minimum(cache_len, kc.shape[1] - 1)
+        kc = kc.at[jnp.arange(bsz), widx].set(k[:, 0])
+        vc = vc.at[jnp.arange(bsz), widx].set(v[:, 0])
+        attn = L.decode_attention(q, kc, vc, cache_len + 1)
+        hh = hh + L.out_proj(params["shared"]["attn"], attn)
+        x2 = L.rmsnorm(params["shared"]["ln2"], hh, cfg.norm_eps)
+        hh = hh + L.mlp(params["shared"]["mlp"], x2, cfg.act)
+
+        def inner(hh2, xs2):
+            lp, conv_l, st_l = xs2
+            x3 = L.rmsnorm(lp["ln"], hh2, cfg.norm_eps)
+            y, ns = SSM.mamba2_decode_step(lp["mamba"], x3, cfg,
+                                           SSM.MambaState(conv_l, st_l))
+            return hh2 + y, (ns.conv, ns.ssm)
+
+        hh, (conv_n, ssm_n) = scan_or_loop(inner, hh, (gp, conv, st),
+                                           flags.scan_layers)
+        return hh, (kc, vc, conv_n, ssm_n)
+
+    h, (k_n, v_n, conv_n, ssm_n) = scan_or_loop(
+        group, h, (params["lora"], cache["k"], cache["v"], cache["conv"],
+                   cache["ssm"], params["mamba_blocks"]), flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    return logits, {"k": k_n, "v": v_n, "conv": conv_n, "ssm": ssm_n,
+                    "len": cache_len + 1}
+
+
+def _hybrid_cache_specs(cfg: ModelConfig, batch: int, cache_t: int) -> PyTree:
+    ng, every = _hybrid_groups(cfg)
+    st = SSM.mamba2_state_spec(cfg, batch)
+    return {
+        "k": spec((ng, batch, cache_t, cfg.n_kv_heads, cfg.head_dim),
+                  (None, "cache_batch", "cache_seq", "act_kv_heads", None)),
+        "v": spec((ng, batch, cache_t, cfg.n_kv_heads, cfg.head_dim),
+                  (None, "cache_batch", "cache_seq", "act_kv_heads", None)),
+        "conv": _stack(_stack(st["conv"], every), ng),
+        "ssm": _stack(_stack(st["ssm"], every), ng),
+        "len": spec((batch,), ("cache_batch",), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Family: vlm (llama + gated cross-attention over stub image embeddings)
+# ---------------------------------------------------------------------------
+
+def _vlm_groups(cfg: ModelConfig):
+    every = cfg.cross_attn_every
+    assert cfg.n_layers % every == 0
+    return cfg.n_layers // every, every - 1   # (groups, self layers/group)
+
+
+def _cross_spec(cfg: ModelConfig) -> PyTree:
+    return {
+        "ln": L.rmsnorm_spec(cfg.d_model),
+        "attn": L.attention_spec(cfg),
+        "gate": spec((1,), (None,), init="zeros"),
+        "ln2": L.rmsnorm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg),
+        "gate_mlp": spec((1,), (None,), init="zeros"),
+    }
+
+
+def _vlm_specs(cfg: ModelConfig) -> PyTree:
+    ng, n_self = _vlm_groups(cfg)
+    return {
+        "self_blocks": _stack(_stack(block_spec(cfg), n_self), ng),
+        "cross_blocks": _stack(_cross_spec(cfg), ng),
+        "head": embed_spec(cfg),
+    }
+
+
+def _cross_apply(cp, h, img_kv, cfg, flags, constrain):
+    """Gated cross-attention (llama-3.2-vision style)."""
+    k_img, v_img = img_kv
+    x = L.rmsnorm(cp["ln"], h, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", x, cp["attn"]["wq"].astype(x.dtype))
+    attn = L.blockwise_attention(q, k_img, v_img, causal=False,
+                                 cfg=_attn_cfg(flags))
+    gate = jnp.tanh(cp["gate"].astype(h.dtype))
+    h = h + gate * L.out_proj(cp["attn"], attn)
+    x2 = L.rmsnorm(cp["ln2"], h, cfg.norm_eps)
+    gate2 = jnp.tanh(cp["gate_mlp"].astype(h.dtype))
+    h = h + gate2 * L.mlp(cp["mlp"], x2, cfg.act)
+    return constrain(h, ("batch", "seq_res", "act_embed"))
+
+
+def _vlm_img_kv(cp, img, cfg):
+    """Image-side K/V for one cross block (no RoPE on image tokens)."""
+    k = jnp.einsum("bsd,dhk->bshk", img, cp["attn"]["wk"].astype(img.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", img, cp["attn"]["wv"].astype(img.dtype))
+    return k, v
+
+
+def _vlm_forward_impl(params, batch, cfg, flags, constrain, collect_kv,
+                      cache_t=None):
+    h = embed_tokens(params["head"], cfg, batch, constrain)
+    img = batch["img_embeds"].astype(h.dtype)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def group(hh, xs):
+        sp, cp = xs
+        # 3 self layers, cross at slot 3, final self layer (cross_every=5)
+        def self_body(hh2, lp):
+            hh2, kv, _ = block_apply(lp, hh2, cfg, flags, positions,
+                                     constrain)
+            return hh2, kv
+
+        n_self = jax.tree.leaves(sp)[0].shape[0]
+        first = jax.tree.map(lambda t: t[:n_self - 1], sp)
+        last = jax.tree.map(lambda t: t[n_self - 1], sp)
+        hh, kv_first = scan_or_loop(self_body, hh, first,
+                                    flags.scan_layers)
+        img_kv = _vlm_img_kv(cp, img, cfg)
+        hh = _cross_apply(cp, hh, img_kv, cfg, flags, constrain)
+        hh, kv_last = self_body(hh, last)
+        kvs = None
+        if collect_kv:
+            kvs = (jnp.concatenate([kv_first[0], kv_last[0][None]], 0),
+                   jnp.concatenate([kv_first[1], kv_last[1][None]], 0),
+                   img_kv[0], img_kv[1])
+        return hh, kvs
+
+    group_r = _remat(group, flags)
+    h, kvs = scan_or_loop(group_r, h, (params["self_blocks"],
+                                       params["cross_blocks"]),
+                          flags.scan_layers)
+    return h, kvs
+
+
+def _vlm_forward(params, batch, cfg, flags, constrain):
+    h, _ = _vlm_forward_impl(params, batch, cfg, flags, constrain, False)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    return h, {}
+
+
+def _vlm_prefill(params, batch, cfg, flags, constrain, cache_t):
+    h, kvs = _vlm_forward_impl(params, batch, cfg, flags, constrain, True)
+    k_self, v_self, k_img, v_img = kvs
+    s = batch_len(batch)
+    if cache_t > s:
+        pad = ((0, 0), (0, 0), (0, 0), (0, cache_t - s), (0, 0), (0, 0))
+        k_self = jnp.pad(k_self, pad)
+        v_self = jnp.pad(v_self, pad)
+    h = L.rmsnorm(params["head"]["ln_f"], h[:, -1:], cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    cache = {"k": k_self, "v": v_self, "k_img": k_img, "v_img": v_img,
+             "len": jnp.full((logits.shape[0],), s, jnp.int32)}
+    return logits, cache
+
+
+def _vlm_decode(params, batch, cache, cfg, flags, constrain):
+    h = embed_tokens(params["head"], cfg,
+                     {"tokens": batch["token"][:, None]}, constrain)
+    cache_len = cache["len"]
+    positions = cache_len[:, None]
+    bsz = h.shape[0]
+
+    def group(hh, xs):
+        sp, cp, kc, vc, k_img, v_img = xs
+        n_self = jax.tree.leaves(sp)[0].shape[0]
+
+        def self_body(hh2, xs2):
+            lp, kc_l, vc_l = xs2
+            hh2, kc_l, vc_l = block_decode(lp, hh2, cfg, kc_l, vc_l,
+                                           cache_len, positions, constrain)
+            return hh2, (kc_l, vc_l)
+
+        first = jax.tree.map(lambda t: t[:n_self - 1], sp)
+        last = jax.tree.map(lambda t: t[n_self - 1], sp)
+        hh, (kc1, vc1) = scan_or_loop(self_body, hh,
+                                      (first, kc[:n_self - 1],
+                                       vc[:n_self - 1]), flags.scan_layers)
+        # cross attention against the static image cache
+        x = L.rmsnorm(cp["ln"], hh, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, cp["attn"]["wq"].astype(x.dtype))
+        img_len = jnp.full((bsz,), k_img.shape[1], jnp.int32)
+        attn = L.decode_attention(q, k_img, v_img, img_len)
+        gate = jnp.tanh(cp["gate"].astype(hh.dtype))
+        hh = hh + gate * L.out_proj(cp["attn"], attn)
+        x2 = L.rmsnorm(cp["ln2"], hh, cfg.norm_eps)
+        gate2 = jnp.tanh(cp["gate_mlp"].astype(hh.dtype))
+        hh = hh + gate2 * L.mlp(cp["mlp"], x2, cfg.act)
+        hh, (kc2, vc2) = self_body(hh, (last, kc[n_self - 1], vc[n_self - 1]))
+        k_new = jnp.concatenate([kc1, kc2[None]], 0)
+        v_new = jnp.concatenate([vc1, vc2[None]], 0)
+        return hh, (k_new, v_new)
+
+    h, (k_n, v_n) = scan_or_loop(group, h,
+                                 (params["self_blocks"],
+                                  params["cross_blocks"], cache["k"],
+                                  cache["v"], cache["k_img"],
+                                  cache["v_img"]), flags.scan_layers)
+    h = L.rmsnorm(params["head"]["ln_f"], h, cfg.norm_eps)
+    logits = logits_fn(params["head"], cfg, h, constrain)
+    return logits, {"k": k_n, "v": v_n, "k_img": cache["k_img"],
+                    "v_img": cache["v_img"], "len": cache_len + 1}
+
+
+def _vlm_cache_specs(cfg: ModelConfig, batch: int, cache_t: int) -> PyTree:
+    ng, n_self = _vlm_groups(cfg)
+    kv_shape = (ng, n_self, batch, cache_t, cfg.n_kv_heads, cfg.head_dim)
+    kv_axes = (None, "layers", "cache_batch", "cache_seq", "act_kv_heads",
+               None)
+    return {
+        "k": spec(kv_shape, kv_axes),
+        "v": spec(kv_shape, kv_axes),
+        "k_img": spec((ng, batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                       cfg.head_dim),
+                      (None, "cache_batch", None, "act_kv_heads", None)),
+        "v_img": spec((ng, batch, cfg.n_img_tokens, cfg.n_kv_heads,
+                       cfg.head_dim),
+                      (None, "cache_batch", None, "act_kv_heads", None)),
+        "len": spec((batch,), ("cache_batch",), init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Public dispatch
+# ---------------------------------------------------------------------------
+
+_FAMILY = {
+    "dense": (_tf_specs, _tf_forward, _tf_prefill, _tf_decode,
+              _tf_cache_specs),
+    "moe": (_tf_specs, _tf_forward, _tf_prefill, _tf_decode,
+            _tf_cache_specs),
+    "audio": (_tf_specs, _tf_forward, _tf_prefill, _tf_decode,
+              _tf_cache_specs),
+    "ssm": (_ssm_specs, _ssm_forward, _ssm_prefill, _ssm_decode,
+            _ssm_cache_specs),
+    "hybrid": (_hybrid_specs, _hybrid_forward, _hybrid_prefill,
+               _hybrid_decode, _hybrid_cache_specs),
+    "vlm": (_vlm_specs, _vlm_forward, _vlm_prefill, _vlm_decode,
+            _vlm_cache_specs),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    flags: RunFlags
+
+    def param_specs(self) -> PyTree:
+        return _FAMILY[self.cfg.family][0](self.cfg)
+
+    def cache_specs(self, batch: int, seq: int) -> PyTree:
+        cache_t = seq
+        if self.cfg.sliding_window is not None:
+            cache_t = min(seq, self.cfg.sliding_window)
+        return _FAMILY[self.cfg.family][4](self.cfg, batch, cache_t)
+
+    def cache_len_for(self, seq: int) -> int:
+        if self.cfg.sliding_window is not None:
+            return min(seq, self.cfg.sliding_window)
+        return seq
+
+    def forward(self, params, batch, constrain):
+        """Train-mode forward: returns (hidden (B,S,d), aux)."""
+        return _FAMILY[self.cfg.family][1](params, batch, self.cfg,
+                                           self.flags, constrain)
+
+    def loss(self, params, batch, constrain):
+        h, aux = self.forward(params, batch, constrain)
+        loss = ce_loss(params["head"], self.cfg, h, batch["labels"],
+                       constrain, self.flags)
+        if "moe_lb_loss" in aux:
+            loss = loss + self.cfg.router_aux_coef * aux["moe_lb_loss"] \
+                + 1e-3 * aux["moe_z_loss"]
+        return loss, aux
+
+    def prefill(self, params, batch, constrain, max_len: int = 0):
+        """max_len > seq reserves decode headroom in the attention caches."""
+        cache_t = self.cache_len_for(max(batch_len(batch), max_len))
+        return _FAMILY[self.cfg.family][2](params, batch, self.cfg,
+                                           self.flags, constrain, cache_t)
+
+    def decode_step(self, params, batch, cache, constrain):
+        return _FAMILY[self.cfg.family][3](params, batch, cache, self.cfg,
+                                           self.flags, constrain)
+
+
+def no_constrain(x, axes=None):
+    return x
+
+
+def make_constrain(mesh, rules):
+    def constrain(x, axes):
+        return jax.lax.with_sharding_constraint(
+            x, rules.shape_sharding(mesh, axes, x.shape))
+    return constrain

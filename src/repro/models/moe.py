@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN with grouped, sort-based capacity dispatch.
+
+Dispatch strategy (pjit/GSPMD-friendly — no data-dependent shapes, no
+(tokens x experts) one-hot materialisation):
+
+  1. router logits -> top_k experts + normalised weights per token,
+  2. tokens are processed in GROUPS (one group = one batch row), the group
+     axis sharded over the data mesh axes — dispatch state never crosses
+     shards, so every buffer below is data-parallel,
+  3. position-in-expert via SORT within the group: argsort the flat expert
+     ids, rank within each equal-id run (searchsorted on the sorted ids),
+     scatter ranks back — O(T log T) and O(T) memory instead of the
+     O(T x E) cumsum tensor,
+  4. tokens beyond an expert's per-group capacity are dropped (standard
+     capacity-factor semantics, cf. Switch/GShard/MaxText),
+  5. scatter into an (E, cap_g, d) per-group buffer; batched expert
+     einsums; gather back and combine with routing weights.
+
+Sharding: with `moe_ep` rules the expert axis additionally shards over
+"model" (olmoe: 64 experts / 16 = 4 per chip) so the dispatch buffer is
+(groups/data, E/model, cap_g, d) — fully distributed.  With <16 experts
+(mixtral) the expert weights shard their d_ff over "model" instead.
+
+Aux: Switch load-balancing loss + router z-loss + dropped-token fraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec
+
+
+def moe_spec(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": spec((d, e), ("embed", "experts")),
+        "w_gate": spec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": spec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": spec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _group_capacity(group_tokens: int, cfg) -> int:
+    cap = int(group_tokens * cfg.top_k * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def _dispatch_group(xg, top_e, top_p, e: int, cap: int):
+    """One group's dispatch.  xg (T, d); top_e/top_p (T, k).
+    Returns (buf (e, cap, d), combine metadata)."""
+    t, d = xg.shape
+    k = top_e.shape[1]
+    flat_e = top_e.reshape(-1)                      # (T*k,)
+
+    # position-in-expert via sort: rank within each expert's run
+    order = jnp.argsort(flat_e, stable=True)        # (T*k,)
+    sorted_e = flat_e[order]
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(e))   # (e,)
+    pos_sorted = jnp.arange(t * k) - run_start[sorted_e]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32))
+
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)     # drop bucket
+
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((e * cap + 1, d), xg.dtype)
+    buf = buf.at[slot].set(xg[tok_idx], mode="drop")
+    return buf[:e * cap].reshape(e, cap, d), (slot, keep, tok_idx)
+
+
+def _combine_group(y, meta, top_p, t: int, e: int, cap: int):
+    """Gather expert outputs back to token order, weighted."""
+    slot, keep, tok_idx = meta
+    d = y.shape[-1]
+    y_flat = y.reshape(e * cap, d)
+    gathered = y_flat.at[jnp.minimum(slot, e * cap - 1)].get(mode="clip")
+    w = (top_p.reshape(-1) * keep).astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype)
+    return out.at[tok_idx].add(gathered * w[:, None])
+
+
+def moe_ffn(p, x, cfg, act="silu", constrain=None):
+    """x (B,S,d) -> (out (B,S,d), aux).  Groups = batch rows."""
+    from repro.models.layers import act_fn
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _group_capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits_f = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits_f, axis=-1)                # (b,s,e)
+    top_p, top_e = jax.lax.top_k(probs, k)                   # (b,s,k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    top_p = top_p.astype(x.dtype)
+
+    bufs, metas = jax.vmap(
+        lambda xg, te, tp: _dispatch_group(xg, te, tp, e, cap)
+    )(x, top_e, top_p)                                       # (b,e,cap,d)
+    if constrain is not None:
+        bufs = constrain(bufs, ("batch", "act_experts", "act_cap", None))
+
+    g = jnp.einsum("becd,edf->becf", bufs, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", bufs, p["w_up"].astype(x.dtype))
+    h = act_fn(act)(g) * u
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    if constrain is not None:
+        y = constrain(y, ("batch", "act_experts", "act_cap", None))
+
+    out = jax.vmap(
+        lambda yy, meta, tp: _combine_group(yy, meta, tp, s, e, cap)
+    )(y, metas, top_p)
+    out = out.reshape(b, s, d)
+
+    # aux losses (fp32): Switch load-balance + z-loss
+    pm = probs.reshape(-1, e)
+    me = jnp.mean(pm, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_e.reshape(-1)[::k], e,
+                                 dtype=jnp.float32), axis=0)
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits_f, axis=-1) ** 2)
+    keep_frac = jnp.mean(jnp.stack(
+        [m.astype(jnp.float32) for m in metas[1]]) if isinstance(
+            metas[1], (list, tuple)) else metas[1].astype(jnp.float32))
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_dropped": 1.0 - keep_frac}
+    return out, aux

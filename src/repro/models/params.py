@@ -1,0 +1,95 @@
+"""Parameter specification trees.
+
+A model is described once as a pytree of `ParamSpec`s (shape + logical axes +
+initialiser).  From that single description we derive:
+
+  * real initialised parameters (smoke tests, examples) — `init_tree`,
+  * ShapeDtypeStructs with shardings, **no allocation** (dry-run) —
+    `abstract_tree`,
+  * PartitionSpec / NamedSharding trees — via repro.sharding.rules.
+
+This keeps init, sharding and abstract lowering impossible to de-sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.sharding.rules import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis names, len == ndim
+    init: str = "normal"                # normal | zeros | ones | normal_out
+    scale: Optional[float] = None       # override fan-in scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def spec(shape, axes, init="normal", scale=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), init, scale)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in(shape) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    return math.prod(shape[:-1])
+
+
+def init_leaf(key, s: ParamSpec, dtype) -> jax.Array:
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    scale = s.scale if s.scale is not None else 1.0 / math.sqrt(
+        max(_fan_in(s.shape), 1))
+    return (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_tree(specs, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def abstract_tree(specs, mesh: Mesh, rules: ShardingRules,
+                  dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins with shardings attached — dry-run inputs."""
+    def mk(s: ParamSpec):
+        return jax.ShapeDtypeStruct(
+            s.shape, dtype,
+            sharding=rules.shape_sharding(mesh, s.axes, s.shape))
+    return jax.tree.map(mk, specs, is_leaf=_is_spec)
+
+
+def sharding_tree(specs, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda s: rules.shape_sharding(mesh, s.axes, s.shape), specs,
+        is_leaf=_is_spec)
+
+
+def spec_tree(specs, rules: ShardingRules):
+    return jax.tree.map(lambda s: rules.spec(s.axes), specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,228 @@
+"""Mamba2 (state-space duality) block: chunked parallel scan + O(1) decode.
+
+Implements the SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060): the
+sequence is split into chunks of length Q; within a chunk the recurrence is
+computed in its quadratic "attention-like" dual form (MXU-friendly matmuls),
+while a lax.scan over chunk boundaries carries the (P x N) per-head state.
+
+Semantics per head (headdim P, state N, scalar A < 0):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (x_t outer B_t)        h: (P, N)
+    y_t = h_t @ C_t + D * x_t
+
+Decode is the recurrence applied once — O(1) in context length, which is why
+the ssm/hybrid families run the long_500k shape (DESIGN.md §Shapes).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import spec
+
+
+def mamba2_spec(cfg):
+    d = cfg.d_model
+    di = cfg.ssm_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    return {
+        # order of in_proj outputs: [z, x, B, C, dt]
+        "in_proj": spec((d, 2 * di + 2 * g * n + h), ("embed", "ssm_inner")),
+        "conv_w": spec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": spec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": spec((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": spec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": spec((h,), ("ssm_heads",), init="zeros"),
+        "norm_scale": spec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_dim) ring of last inputs
+    ssm: jax.Array    # (B, H, P, N) recurrent state
+
+
+def mamba2_state_spec(cfg, batch):
+    di, g, n = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return {
+        "conv": spec((batch, cfg.ssm_conv - 1, conv_dim),
+                     ("cache_batch", None, "ssm_inner")),
+        "ssm": spec((batch, cfg.ssm_heads, cfg.ssm_head_dim, n),
+                    ("cache_batch", "ssm_heads_act", None, None)),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, g, n, h = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                   cfg.ssm_heads)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * g * n]
+    dt = proj[..., di + di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, init_state=None):
+    """Depthwise causal conv over time.  xbc (B,S,C); w (W,C); b (C,).
+    init_state (B,W-1,C) prepended (decode continuity)."""
+    bsz, s, c = xbc.shape
+    w_width = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((bsz, w_width - 1, c), xbc.dtype)
+    else:
+        pad = init_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # (B, S+W-1, C)
+    # depthwise conv as a sum of W shifted scalings — W is tiny (4)
+    out = jnp.zeros_like(xbc)
+    for i in range(w_width):
+        out = out + xp[:, i:i + s, :] * w[i][None, None, :].astype(xbc.dtype)
+    out = out + b[None, None, :].astype(xbc.dtype)
+    return jax.nn.silu(out), xp[:, s:, :]             # new conv tail
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, a, chunk):
+    """Chunked SSD.  xh (B,S,H,P); bmat/cmat (B,S,G,N); dt (B,S,H) > 0;
+    a (H,) < 0.  Returns y (B,S,H,P) and final state (B,H,P,N)."""
+    bsz, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    def r(t):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xh_, b_, c_, dt_ = r(xh.astype(jnp.float32)), r(bmat.astype(jnp.float32)), \
+        r(cmat.astype(jnp.float32)), r(dt.astype(jnp.float32))
+    bh = jnp.repeat(b_, rep, axis=3)      # (B,nc,Q,H,N)
+    ch = jnp.repeat(c_, rep, axis=3)
+
+    aa = dt_ * a[None, None, None, :]                 # (B,nc,Q,H) log-decay
+    cum = jnp.cumsum(aa, axis=2)                      # inclusive
+    # intra-chunk: L[t,s] = exp(cum_t - cum_s) * dt_s   for s <= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Qt,Qs,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    l_mat = l_mat * dt_[:, :, None, :, :]             # weight by dt_s
+    cb = jnp.einsum("bqthn,bqshn->bqtsh", ch, bh)      # C_t . B_s
+    y_intra = jnp.einsum("bqtsh,bqtsh,bqshp->bqthp", cb, l_mat, xh_)
+
+    # chunk state contribution: S_q = sum_s exp(cum_Q - cum_s) dt_s x_s B_s^T
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dt_    # (B,nc,Q,H)
+    state_c = jnp.einsum("bqsh,bqshp,bqshn->bqhpn", w_end, xh_, bh)
+    decay_c = jnp.exp(jnp.sum(aa, axis=2))            # (B,nc,H)
+
+    def scan_body(carry, inp):
+        st_prev = carry                               # (B,H,P,N)
+        st_c, dec = inp                               # (B,H,P,N), (B,H)
+        st = dec[:, :, None, None] * st_prev + st_c
+        return st, st_prev
+
+    st0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    stc_t = state_c.swapaxes(0, 1)                    # (nc,B,H,P,N)
+    dec_t = decay_c.swapaxes(0, 1)                    # (nc,B,H)
+    st_final, st_prevs = jax.lax.scan(scan_body, st0, (stc_t, dec_t))
+    st_prevs = st_prevs.swapaxes(0, 1)                # (B,nc,H,P,N)
+
+    # inter-chunk: y_t += exp(cum_t) * C_t . S_{prev}
+    w_in = jnp.exp(cum)                               # (B,nc,Q,H)
+    y_inter = jnp.einsum("bqth,bqthn,bqhpn->bqthp", w_in, ch, st_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, st_final
+
+
+def mamba2_forward(p, x, cfg, conv_init=None, ssm_init=None):
+    """Full Mamba2 block.  x (B,S,d_model) -> (y (B,S,d_model), MambaState)."""
+    di, g, n, h_heads = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                         cfg.ssm_heads)
+    phd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_init)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + g * n].reshape(*xbc.shape[:2], g, n)
+    cmat = xbc[..., di + g * n:].reshape(*xbc.shape[:2], g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:2], h_heads, phd)
+    y, st = _ssd_chunked(xh, bmat, cmat, dt, a, min(cfg.ssm_chunk, x.shape[1]))
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(*xs.shape[:2], di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    yz = y * jax.nn.silu(z)
+    yf = yz.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", yn, p["out_proj"].astype(x.dtype))
+    return out, MambaState(conv_tail, st)
+
+
+def mamba2_decode_step(p, x, cfg, state: MambaState):
+    """One-token decode.  x (B,1,d_model) -> (y (B,1,d_model), new state)."""
+    di, g, n, h_heads = (cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state,
+                         cfg.ssm_heads)
+    phd = cfg.ssm_head_dim
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + g * n].reshape(xbc.shape[0], g, n)   # S=1 squeezed
+    cmat = xbc[..., di + g * n:].reshape(xbc.shape[0], g, n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(xs.shape[0], h_heads, phd).astype(jnp.float32)
+    rep = h_heads // g
+    bh = jnp.repeat(bmat, rep, axis=1).astype(jnp.float32)       # (B,H,N)
+    ch = jnp.repeat(cmat, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                             # (B,H)
+    st = state.ssm.astype(jnp.float32)
+    st = decay[:, :, None, None] * st \
+        + (dt[:, :, None] * xh)[..., None] * bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", st, ch) \
+        + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(xs.shape[0], 1, di).astype(x.dtype)
+    yz = y * jax.nn.silu(z)
+    yf = yz.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yn = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", yn, p["out_proj"].astype(x.dtype))
+    return out, MambaState(conv_tail, st.astype(state.ssm.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Naive recurrent reference (tests only)
+# ---------------------------------------------------------------------------
+
+def ssd_reference(xh, bmat, cmat, dt, a):
+    """Literal recurrence; xh (B,S,H,P), bmat/cmat (B,S,G,N), dt (B,S,H)."""
+    bsz, s, h, p = xh.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    xf = xh.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(carry, t):
+        st = carry
+        decay = jnp.exp(dtf[:, t] * a[None, :])       # (B,H)
+        st = decay[:, :, None, None] * st \
+            + (dtf[:, t][:, :, None] * xf[:, t])[..., None] \
+            * bh[:, t][:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", st, ch[:, t])
+        return st, y
+
+    st0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    st, ys = jax.lax.scan(step, st0, jnp.arange(s))
+    return ys.swapaxes(0, 1), st                      # (B,S,H,P), (B,H,P,N)

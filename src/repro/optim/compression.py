@@ -1,0 +1,40 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 quantisation with per-tensor scale + error-feedback residual
+(Seide et al. 2014 / Karimireddy et al. 2019 style): the quantisation error
+of step t is added back into the gradient at step t+1, preserving
+convergence.  On the production mesh this models compressing the cross-pod
+gradient all-reduce 4x (int8 vs f32); the quantise/dequantise pair here is
+the numerics — the wire format on real hardware is the int8 tensor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_error_feedback(grads, ef):
+    """Quantise (grad + residual), carry the new residual."""
+    def one(g, e):
+        corrected = g + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e

@@ -1,0 +1,95 @@
+"""Elastic scaling controller: re-mesh on host loss / gain.
+
+State machine consumed by the launcher:
+
+    RUN -> (host lost / straggler evicted) -> CHECKPOINT -> RESHAPE ->
+    RESTORE(new mesh) -> RUN
+
+Supported transitions on the production topology:
+  * lose a pod:   (pod=2, data=16, model=16) -> (data=16, model=16)
+  * lose hosts within a pod: shrink the data axis to the largest divisor
+    (model-parallel groups are a failure unit: losing one chip of a TP
+    group evicts the group's host row),
+  * gain capacity back: any registered mesh shape upward.
+
+The controller only *decides*; mechanics live in checkpoint/reshard.py and
+the index-based data pipeline (both degree-independent).  The decision
+logic is pure and unit-tested.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+# Preference-ordered fallback ladder for the production topology.
+LADDER = (
+    MeshPlan((2, 16, 16), ("pod", "data", "model")),
+    MeshPlan((16, 16), ("data", "model")),
+    MeshPlan((8, 16), ("data", "model")),
+    MeshPlan((4, 16), ("data", "model")),
+)
+
+
+def plan_for(available_devices: int,
+             ladder: Tuple[MeshPlan, ...] = LADDER) -> Optional[MeshPlan]:
+    """Largest plan that fits the surviving device count."""
+    for plan in ladder:
+        if plan.n_devices <= available_devices:
+            return plan
+    return None
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    kind: str            # SHRINK | GROW | NOOP
+    plan: Optional[MeshPlan]
+    reason: str = ""
+
+
+class ElasticController:
+    def __init__(self, initial: MeshPlan = LADDER[0],
+                 ladder: Tuple[MeshPlan, ...] = LADDER):
+        self.current = initial
+        self.ladder = ladder
+
+    def on_membership_change(self, available_devices: int) -> ElasticEvent:
+        plan = plan_for(available_devices, self.ladder)
+        if plan is None:
+            return ElasticEvent("NOOP", None,
+                                f"only {available_devices} devices left — "
+                                "below the smallest runnable mesh")
+        if plan == self.current:
+            return ElasticEvent("NOOP", plan, "mesh unchanged")
+        kind = "SHRINK" if plan.n_devices < self.current.n_devices else "GROW"
+        prev = self.current
+        self.current = plan
+        return ElasticEvent(kind, plan,
+                            f"{prev.shape}->{plan.shape} with "
+                            f"{available_devices} devices")
+
+
+def global_batch_plan(global_batch: int, plan: MeshPlan) -> int:
+    """Per-shard batch after a re-mesh; global batch is preserved as long
+    as the data-axis product divides it (guaranteed on the ladder above for
+    the assigned shapes)."""
+    data = 1
+    for s, a in zip(plan.shape, plan.axes):
+        if a in ("pod", "data"):
+            data *= s
+    assert global_batch % data == 0, (global_batch, data)
+    return global_batch // data

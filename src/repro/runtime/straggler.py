@@ -1,0 +1,103 @@
+"""Straggler detection & mitigation policy.
+
+At multi-thousand-chip scale the dominant availability hazards are slow
+hosts (thermal throttling, failing HBM, flaky ICI links) and dead hosts.
+The *policy* layer here is transport-agnostic and fully unit-testable on
+one host; the launcher wires it to whatever signal source exists (per-host
+step-duration reports in a real deployment; synthetic timings in tests).
+
+Policy (EWMA + robust z-score):
+  * track an exponentially-weighted mean/variance of each host's step time,
+  * a host whose EWMA exceeds `threshold` x the fleet median for
+    `patience` consecutive reports is flagged STRAGGLER,
+  * a host silent for `dead_after_s` is flagged DEAD,
+  * flagged hosts produce an action: first REBALANCE (shrink its data
+    shard — supported by the index-based pipeline), then EVICT (trigger the
+    elastic controller to re-mesh without it; see runtime/elastic.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    alpha: float = 0.2           # EWMA weight of the newest sample
+    threshold: float = 1.5       # x fleet median EWMA
+    patience: int = 3            # consecutive slow reports before flagging
+    dead_after_s: float = 120.0  # silence -> DEAD
+    rebalance_first: bool = True
+
+
+@dataclasses.dataclass
+class HostState:
+    ewma: Optional[float] = None
+    slow_count: int = 0
+    last_seen: float = 0.0
+    status: str = "OK"           # OK | STRAGGLER | DEAD | EVICTED
+
+
+class StragglerMonitor:
+    def __init__(self, hosts: List[str],
+                 cfg: StragglerConfig = StragglerConfig(),
+                 clock=time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.hosts: Dict[str, HostState] = {
+            h: HostState(last_seen=clock()) for h in hosts}
+
+    def report(self, host: str, step_time_s: float):
+        st = self.hosts[host]
+        st.last_seen = self.clock()
+        a = self.cfg.alpha
+        st.ewma = step_time_s if st.ewma is None else \
+            a * step_time_s + (1 - a) * st.ewma
+
+    def _median_ewma(self) -> Optional[float]:
+        vals = sorted(s.ewma for s in self.hosts.values()
+                      if s.ewma is not None and s.status == "OK")
+        if not vals:
+            return None
+        return vals[len(vals) // 2]
+
+    def evaluate(self) -> List[dict]:
+        """Returns mitigation actions: {host, action: REBALANCE|EVICT}."""
+        actions = []
+        med = self._median_ewma()
+        now = self.clock()
+        for h, st in self.hosts.items():
+            if st.status == "EVICTED":
+                continue
+            if now - st.last_seen > self.cfg.dead_after_s:
+                st.status = "DEAD"
+                actions.append({"host": h, "action": "EVICT",
+                                "reason": "dead"})
+                st.status = "EVICTED"
+                continue
+            if med is None or st.ewma is None:
+                continue
+            if st.ewma > self.cfg.threshold * med:
+                st.slow_count += 1
+                if st.slow_count >= self.cfg.patience:
+                    if self.cfg.rebalance_first and st.status == "OK":
+                        st.status = "STRAGGLER"
+                        actions.append({"host": h, "action": "REBALANCE",
+                                        "reason": f"ewma {st.ewma:.2f}s > "
+                                        f"{self.cfg.threshold}x median "
+                                        f"{med:.2f}s"})
+                    else:
+                        actions.append({"host": h, "action": "EVICT",
+                                        "reason": "persistent straggler"})
+                        st.status = "EVICTED"
+            else:
+                st.slow_count = 0
+                if st.status == "STRAGGLER":
+                    st.status = "OK"    # recovered after rebalance
+        return actions
+
+    def healthy_hosts(self) -> List[str]:
+        return [h for h, s in self.hosts.items()
+                if s.status in ("OK", "STRAGGLER")]

@@ -1,0 +1,10 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count:
+# smoke tests and benches must see 1 device (system prompt).  Multi-device
+# tests spawn subprocesses that set XLA_FLAGS before importing jax.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,106 @@
+"""Anderson-acceleration unit behaviour (independent of K-Means)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import anderson
+from repro.core.anderson import AAConfig
+
+
+def _aa_solve_linear(a, b, x0, m, iters):
+    """Accelerate the fixed-point iteration x <- Ax + b."""
+    cfg = AAConfig(m0=m, mbar=max(m, 2), dynamic_m=False)
+    d = x0.shape[0]
+    st = anderson.aa_init(d, cfg)
+    x = x0
+    g = a @ x + b
+    st = anderson.aa_seed(st, g - x, g)
+    x = g
+    errs = []
+    for _ in range(iters):
+        g = a @ x + b
+        f = g - x
+        st, x, _, _ = anderson.aa_push_and_solve(st, f, g, cfg)
+        errs.append(float(jnp.linalg.norm(f)))
+    return x, errs
+
+
+def test_aa_accelerates_linear_fixed_point():
+    """On x <- Ax + b (contraction), AA-m should far outpace Picard."""
+    rng = np.random.default_rng(0)
+    d = 12
+    q, _ = np.linalg.qr(rng.standard_normal((d, d)))
+    a = jnp.asarray(q @ np.diag(rng.uniform(0.5, 0.95, d)) @ q.T,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    x0 = jnp.zeros(d)
+    x_star = jnp.linalg.solve(jnp.eye(d) - a, b)
+
+    x_aa, errs_aa = _aa_solve_linear(a, b, x0, m=d, iters=25)
+    # plain Picard for the same budget
+    x_p = x0
+    for _ in range(26):
+        x_p = a @ x_p + b
+    err_aa = float(jnp.linalg.norm(x_aa - x_star))
+    err_p = float(jnp.linalg.norm(x_p - x_star))
+    assert err_aa < err_p * 1e-2, (err_aa, err_p)
+
+
+def test_aa_window_m0_is_picard():
+    """m = 0 must reduce to the unaccelerated iteration exactly."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(-0.2, 0.2, (6, 6)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(6), jnp.float32)
+    x0 = jnp.zeros(6)
+    x_aa, _ = _aa_solve_linear(a, b, x0, m=0, iters=10)
+    x_p = x0
+    g = a @ x_p + b
+    x_p = g
+    for _ in range(10):
+        x_p = a @ x_p + b
+    np.testing.assert_allclose(np.asarray(x_aa), np.asarray(x_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_adjust_m_policy():
+    cfg = AAConfig(m0=5, mbar=8, eps1=0.02, eps2=0.5)
+    st = anderson.aa_init(4, cfg)
+    one = jnp.array(1.0)
+    # big relative decrease -> grow
+    st2 = anderson.adjust_m(st, e_curr=one * 1.0, e_prev=one * 10.0,
+                            e_prev2=one * 11.0, cfg=cfg)
+    assert int(st2.m) == 6
+    # tiny decrease -> shrink
+    st3 = anderson.adjust_m(st, e_curr=one * 9.999, e_prev=one * 10.0,
+                            e_prev2=one * 20.0, cfg=cfg)
+    assert int(st3.m) == 4
+    # energy increase (negative ratio) -> shrink
+    st4 = anderson.adjust_m(st, e_curr=one * 11.0, e_prev=one * 10.0,
+                            e_prev2=one * 20.0, cfg=cfg)
+    assert int(st4.m) == 4
+    # undefined history (inf) -> unchanged
+    st5 = anderson.adjust_m(st, e_curr=one * 5.0, e_prev=one * 10.0,
+                            e_prev2=one * jnp.inf, cfg=cfg)
+    assert int(st5.m) == 5
+    # clamping at mbar and 0
+    st = st._replace(m=jnp.array(8, jnp.int32))
+    st6 = anderson.adjust_m(st, one * 1.0, one * 10.0, one * 11.0, cfg)
+    assert int(st6.m) == 8
+    st = st._replace(m=jnp.array(0, jnp.int32))
+    st7 = anderson.adjust_m(st, one * 9.999, one * 10.0, one * 20.0, cfg)
+    assert int(st7.m) == 0
+
+
+def test_circular_buffer_ages():
+    cfg = AAConfig(m0=3, mbar=4)
+    st = anderson.aa_init(2, cfg)
+    st = anderson.aa_seed(st, jnp.zeros(2), jnp.zeros(2))
+    for i in range(6):   # wrap the mbar=4 buffer
+        f = jnp.full((2,), float(i + 1))
+        g = jnp.full((2,), float(2 * i + 1))
+        st, _, _, m_t = anderson.aa_push_and_solve(st, f, g, cfg)
+    assert int(st.ncols) == 4
+    # newest column holds f_6 - f_5 = 1 at head-1
+    newest = (int(st.head) - 1) % 4
+    np.testing.assert_allclose(np.asarray(st.dF[newest]), [1.0, 1.0])

@@ -1,0 +1,32 @@
+"""Estimator-API tests + emergency-checkpoint behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import AAKMeans
+from repro.data.synthetic import make_blobs
+
+
+def test_estimator_fit_predict():
+    x = make_blobs(2000, 6, 5, seed=0, spread=4.0)
+    m = AAKMeans(n_clusters=5, n_init=2, seed=1).fit(x)
+    assert m.centroids_.shape == (5, 6)
+    assert m.labels_.shape == (2000,)
+    assert m.energy_ > 0 and m.n_iter_ >= 1
+    labs = np.asarray(m.predict(x[:100]))
+    assert labs.min() >= 0 and labs.max() < 5
+    assert m.transform(x[:10]).shape == (10, 5)
+
+
+def test_estimator_restarts_pick_best():
+    x = make_blobs(1500, 4, 6, seed=2, spread=1.2)
+    e1 = AAKMeans(n_clusters=6, n_init=1, init="random", seed=0).fit(x).energy_
+    e5 = AAKMeans(n_clusters=6, n_init=5, init="random", seed=0).fit(x).energy_
+    assert e5 <= e1 + 1e-3
+
+
+def test_estimator_plain_lloyd_mode():
+    x = make_blobs(800, 4, 4, seed=3, spread=4.0)
+    maa = AAKMeans(n_clusters=4, accelerated=True, seed=4).fit(x)
+    mll = AAKMeans(n_clusters=4, accelerated=False, seed=4).fit(x)
+    assert abs(maa.energy_ - mll.energy_) / mll.energy_ < 0.02

@@ -1,0 +1,89 @@
+"""K-Means <-> LM integration (applications.py) and dry-run helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.applications import (compress_kv_cache, embedding_codebook,
+                                     kv_codebook)
+
+
+def test_kv_codebook_error_decreases_with_k(rng):
+    v = jnp.asarray(rng.standard_normal((2000, 16)), jnp.float32)
+    errs = []
+    for k in (2, 8, 32):
+        cb, codes, res = kv_codebook(v, k)
+        rec = cb[codes]
+        errs.append(float(jnp.linalg.norm(rec - v)))
+        assert cb.shape == (k, 16)
+        assert int(res.n_iter) >= 1
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_compress_kv_cache_shapes(rng):
+    cache = {"k": jnp.asarray(rng.standard_normal((2, 3, 10, 2, 8)),
+                              jnp.float32),
+             "v": jnp.asarray(rng.standard_normal((2, 3, 10, 2, 8)),
+                              jnp.float32),
+             "len": jnp.full((3,), 8, jnp.int32)}
+    out, err = compress_kv_cache(dict(cache), k=4, valid_len=8)
+    assert out["k"].shape == cache["k"].shape
+    assert 0.0 <= err <= 1.5
+    # beyond valid_len untouched
+    np.testing.assert_array_equal(np.asarray(out["k"][..., 8:, :, :]),
+                                  np.asarray(cache["k"][..., 8:, :, :]))
+
+
+def test_embedding_codebook(rng):
+    table = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    cbs, codes, err = embedding_codebook(table, k=16, n_subspaces=4)
+    assert cbs.shape == (4, 16, 8)
+    assert codes.shape == (256, 4)
+    assert err < 1.0
+
+
+# ----------------------------------------------------------- dryrun helpers
+
+def test_parse_collectives_toy_hlo():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %ag = f32[128,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[32,32]{1,0} all-reduce(%y), replica_groups=[8,32]<=[256], to_apply=%sum
+  %cp = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %fusion.1 = f32[2,2]{1,0} fusion(%a), kind=kLoop
+"""
+    operand, wire, counts = parse_collectives(hlo)
+    assert counts == {"all-gather": 1, "all-reduce": 1,
+                      "reduce-scatter": 0, "all-to-all": 0,
+                      "collective-permute": 1}
+    assert operand["all-gather"] == 128 * 64 * 4 // 16
+    assert operand["all-reduce"] == 32 * 32 * 2
+    assert wire["all-reduce"] == pytest.approx(2 * 32 * 32 * 2 * 31 / 32)
+    assert wire["collective-permute"] == 8 * 4
+
+
+def test_model_flops_conventions():
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import model_flops
+    from repro.models.config import SHAPES
+    cfg = get_config("qwen1.5-110b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    assert f_train == pytest.approx(6 * cfg.n_params() * 256 * 4096,
+                                    rel=1e-6)
+    moe = get_config("mixtral-8x7b")
+    f_moe = model_flops(moe, SHAPES["train_4k"])
+    assert f_moe == pytest.approx(6 * moe.n_active_params() * 256 * 4096,
+                                  rel=1e-6)
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_dec == pytest.approx(2 * cfg.n_params() * 128, rel=1e-6)
+
+
+def test_calibration_units():
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import n_units, with_units
+    assert n_units(get_config("qwen1.5-110b")) == 80
+    assert n_units(get_config("zamba2-2.7b")) == 9
+    assert n_units(get_config("llama-3.2-vision-11b")) == 8
+    c2 = with_units(get_config("zamba2-2.7b"), 2)
+    assert c2.n_layers == 12

@@ -1,0 +1,149 @@
+"""Core Algorithm-1 behaviour: faithfulness + solver invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.anderson import AAConfig
+from repro.core.hamerly import hamerly_kmeans
+from repro.core.init_schemes import (afkmc2_init, bf_init, clarans_init,
+                                     kmeanspp_init, random_init)
+from repro.core.kmeans import KMeansConfig, aa_kmeans, aa_kmeans_traced
+from repro.core.lloyd import assign, energy, lloyd_kmeans, update
+from repro.data.synthetic import make_blobs
+
+
+def _data(n=2000, d=8, k=7, seed=0, spread=1.5):
+    x = jnp.asarray(make_blobs(n, d, k, seed=seed, spread=spread))
+    c0 = kmeanspp_init(jax.random.PRNGKey(seed), x, k)
+    return x, c0
+
+
+def test_aa_monotone_energy_and_convergence():
+    x, c0 = _data()
+    tr = aa_kmeans_traced(x, c0, KMeansConfig(k=7, max_iter=300))
+    e = tr.energies
+    assert all(e[i + 1] <= e[i] + 1e-3 for i in range(len(e) - 1)), \
+        "safeguarded AA must decrease the energy monotonically"
+    assert bool(tr.result.converged)
+
+
+def test_jit_matches_traced_driver():
+    x, c0 = _data(seed=3)
+    cfg = KMeansConfig(k=7, max_iter=300)
+    tr = aa_kmeans_traced(x, c0, cfg)
+    res = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))(x, c0)
+    assert int(res.n_iter) == int(tr.result.n_iter)
+    assert int(res.n_accepted) == int(tr.result.n_accepted)
+    np.testing.assert_allclose(float(res.energy), float(tr.result.energy),
+                               rtol=1e-6)
+
+
+def test_aa_final_energy_close_to_lloyd():
+    # same local-minimum quality (paper: identical MSE in nearly all cases)
+    x, c0 = _data(n=4000, d=6, k=10, seed=1)
+    _, _, e_l, _ = lloyd_kmeans(x, c0, 10, 500)
+    res = aa_kmeans(x, c0, KMeansConfig(k=10, max_iter=500))
+    mse_l, mse_a = float(e_l) / 4000, float(res.energy) / 4000
+    assert mse_a <= mse_l * 1.02, (mse_a, mse_l)
+
+
+def test_unaccelerated_driver_equals_lloyd():
+    x, c0 = _data(seed=5)
+    cfg = KMeansConfig(k=7, max_iter=300, accelerated=False)
+    res = aa_kmeans(x, c0, cfg)
+    c_l, lab_l, e_l, it_l = lloyd_kmeans(x, c0, 7, 300)
+    np.testing.assert_allclose(float(res.energy), float(e_l), rtol=1e-6)
+    assert (np.asarray(res.labels) == np.asarray(lab_l)).all()
+
+
+def test_hamerly_equals_lloyd_separated():
+    """On separated clusters the bound-based trajectory is identical to
+    Lloyd's (on heavily-overlapping data borderline samples may flip under
+    the two fp distance formulations — both still valid Lloyd runs)."""
+    x, c0 = _data(n=1500, seed=7, spread=5.0)
+    c_h, lab_h, e_h, it_h, frac = hamerly_kmeans(x, c0, 7, 300)
+    c_l, lab_l, e_l, it_l = lloyd_kmeans(x, c0, 7, 300)
+    assert (np.asarray(lab_h) == np.asarray(lab_l)).all()
+    np.testing.assert_allclose(float(e_h), float(e_l), rtol=1e-5)
+    # separated clusters: bounds should eliminate most full scans
+    assert float(frac) < 0.7
+
+
+def test_hamerly_energy_parity_overlapping():
+    x, c0 = _data(n=1500, seed=7)          # hard, overlapping regime
+    *_, e_h, it_h, frac = hamerly_kmeans(x, c0, 7, 500)
+    *_, e_l, it_l = lloyd_kmeans(x, c0, 7, 500)
+    assert abs(float(e_h) - float(e_l)) / float(e_l) < 0.02
+    assert 0.0 <= float(frac) <= 1.0
+
+
+def test_dynamic_m_stays_in_bounds():
+    x, c0 = _data(n=3000, k=7, seed=2, spread=1.0)
+    cfg = KMeansConfig(k=7, max_iter=300,
+                       aa=AAConfig(m0=2, mbar=10))
+    tr = aa_kmeans_traced(x, c0, cfg)
+    assert all(0 <= m <= 10 for m in tr.m_values)
+    assert len(set(tr.m_values)) > 1, "m should actually adapt"
+
+
+def test_acceptance_counted():
+    x, c0 = _data(seed=4)
+    tr = aa_kmeans_traced(x, c0, KMeansConfig(k=7, max_iter=300))
+    assert int(tr.result.n_accepted) == sum(tr.accepted)
+    assert int(tr.result.n_accepted) <= int(tr.result.n_iter)
+
+
+@pytest.mark.parametrize("init_fn", [random_init, kmeanspp_init, afkmc2_init])
+def test_init_schemes_shapes(init_fn):
+    x, _ = _data(n=500, d=5, k=6)
+    c = init_fn(jax.random.PRNGKey(0), x, 6)
+    assert c.shape == (6, 5)
+    assert bool(jnp.isfinite(c).all())
+
+
+def test_bf_and_clarans_init():
+    x, _ = _data(n=400, d=4, k=5)
+    c = bf_init(jax.random.PRNGKey(0), x, 5, n_subsets=3, max_iter=10)
+    assert c.shape == (5, 4) and bool(jnp.isfinite(c).all())
+    c2 = clarans_init(jax.random.PRNGKey(0), x, 5, num_local=1,
+                      max_neighbor=8, sample_n=256)
+    assert c2.shape == (5, 4) and bool(jnp.isfinite(c2).all())
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(50, 400), d=st.integers(1, 12), k=st.integers(2, 8),
+       seed=st.integers(0, 10_000))
+def test_property_solver_invariants(n, d, k, seed):
+    """Property: for arbitrary data, AA-KMeans converges to a valid
+    clustering with energy <= initial, labels in range, finite centroids."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    c0 = x[rng.choice(n, k, replace=False)]
+    res = aa_kmeans(x, c0, KMeansConfig(k=k, max_iter=200))
+    lab0, mind0 = assign(x, c0)
+    assert float(res.energy) <= float(jnp.sum(mind0)) + 1e-4
+    labs = np.asarray(res.labels)
+    assert labs.min() >= 0 and labs.max() < k
+    assert bool(jnp.isfinite(res.centroids).all())
+    # labels consistent with returned centroids
+    lab_re, _ = assign(x, res.centroids)
+    assert (np.asarray(lab_re) == labs).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_update_is_argmin_of_surrogate(seed):
+    """Update step minimises the surrogate (5): cluster means are optimal."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((300, 4)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((5, 4)), jnp.float32)
+    lab, _ = assign(x, c)
+    c_new = update(x, lab, 5, c)
+    e_new = energy(x, c_new, lab)
+    for _ in range(5):
+        pert = c_new + jnp.asarray(
+            rng.standard_normal(c_new.shape), jnp.float32) * 0.05
+        assert float(energy(x, pert, lab)) >= float(e_new) - 1e-4

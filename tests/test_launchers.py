@@ -1,0 +1,47 @@
+"""End-to-end launcher tests (CLI surface, CPU-sized)."""
+
+import tempfile
+
+import pytest
+
+from repro.launch import serve as S
+from repro.launch import train as T
+
+
+@pytest.mark.slow
+def test_train_cli_loss_decreases_and_resumes():
+    with tempfile.TemporaryDirectory() as d:
+        args = T.parse_args([
+            "--arch", "smollm-135m", "--smoke", "--steps", "30",
+            "--seq-len", "64", "--global-batch", "4",
+            "--ckpt-dir", d, "--ckpt-every", "10", "--log-every", "10"])
+        out = T.run(args)
+        assert out["final_loss"] < out["first_loss"]
+        # resume from step 30 checkpoint and do 10 more
+        args2 = T.parse_args([
+            "--arch", "smollm-135m", "--smoke", "--steps", "40",
+            "--seq-len", "64", "--global-batch", "4",
+            "--ckpt-dir", d, "--resume", "--log-every", "10"])
+        out2 = T.run(args2)
+        assert out2["steps"] == 10          # 30 -> 40 only
+        assert out2["final_loss"] < out["first_loss"]
+
+
+@pytest.mark.slow
+def test_serve_cli_with_kv_codebook():
+    args = S.parse_args([
+        "--arch", "h2o-danube-1.8b", "--smoke", "--prompt-len", "32",
+        "--new-tokens", "8", "--batch", "2", "--kv-codebook", "8"])
+    out = S.run(args)
+    assert out["tokens"] == (2, 8)
+    assert out["prefill_s"] > 0 and out["decode_s"] > 0
+
+
+@pytest.mark.slow
+def test_train_cli_with_compression():
+    args = T.parse_args([
+        "--arch", "smollm-135m", "--smoke", "--steps", "15",
+        "--seq-len", "64", "--global-batch", "4",
+        "--compression", "int8_ef", "--log-every", "5"])
+    out = T.run(args)
+    assert out["final_loss"] < out["first_loss"] + 0.1

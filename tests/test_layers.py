@@ -1,0 +1,158 @@
+"""Layer-level references: blockwise attention vs dense, SSD vs recurrence,
+MoE dispatch vs dense expert evaluation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import params as pr
+from repro.models.config import ModelConfig
+from repro.models.moe import moe_ffn, moe_spec
+from repro.models.ssm import _ssd_chunked, ssd_reference
+
+
+def dense_attention_ref(q, k, v, causal=True, window=None):
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg,
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (4, 2), (6, 2)])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, None)])
+@pytest.mark.parametrize("skip", [False, True])
+def test_blockwise_attention_matches_dense(h, hkv, causal, window, skip,
+                                           rng):
+    b, s, hd = 2, 32, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    cfg = L.AttnBlockCfg(block_q=8, block_kv=8, skip_blocks=skip)
+    out = L.blockwise_attention(q, k, v, causal=causal, window=window,
+                                cfg=cfg)
+    ref = dense_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_unroll_matches_scan(rng):
+    b, s, h, hd = 2, 32, 4, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    a = L.blockwise_attention(q, k, v, cfg=L.AttnBlockCfg(8, 8, False,
+                                                          False))
+    bb = L.blockwise_attention(q, k, v, cfg=L.AttnBlockCfg(8, 8, False,
+                                                           True))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(bb, np.float32), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_decode_attention_matches_dense(rng):
+    b, t, h, hkv, hd = 3, 24, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((b, t, hkv, hd)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, t, hkv, hd)), jnp.float32)
+    lens = jnp.asarray([5, 24, 17], jnp.int32)
+    out = L.decode_attention(q, kc, vc, lens)
+    for i, ln in enumerate([5, 24, 17]):
+        ref = dense_attention_ref(q[i:i + 1], kc[i:i + 1, :ln],
+                                  vc[i:i + 1, :ln], causal=False)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1], np.float32),
+                                   np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 64]), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 1000))
+def test_property_ssd_chunk_invariance(s, chunk, seed):
+    """SSD output must not depend on the chunk size."""
+    rng = np.random.default_rng(seed)
+    b, h, p, g, n = 2, 2, 4, 1, 8
+    xh = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, g, n)) * .5, jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, g, n)) * .5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.3, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.1, 1.0, h), jnp.float32)
+    y_ref, st_ref = ssd_reference(xh, bm, cm, dt, a)
+    y, stt = _ssd_chunked(xh, bm, cm, dt, a, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(stt), np.asarray(st_ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def _moe_cfg(e=8, k=2, cap=64.0):
+    return ModelConfig(name="m", family="moe", n_layers=1, d_model=16,
+                       vocab=32, n_heads=2, n_kv_heads=2, head_dim=8,
+                       d_ff=32, n_experts=e, top_k=k, capacity_factor=cap)
+
+
+def test_moe_matches_dense_when_no_drops(rng):
+    """With huge capacity, dispatch == dense weighted expert evaluation."""
+    cfg = _moe_cfg(cap=1000.0)
+    specs = moe_spec(cfg)
+    p = pr.init_tree(specs, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32)
+    out, aux = moe_ffn(p, x, cfg)
+    assert float(aux["moe_dropped"]) == 0.0
+
+    # dense reference: every expert on every token, weighted combine
+    xt = x.reshape(-1, 16)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    y_all = []
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+        y_all.append(h @ p["w_down"][e])
+    y_all = jnp.stack(y_all, 1)                     # (n, E, d)
+    ref = jnp.zeros_like(xt)
+    for j in range(cfg.top_k):
+        ref = ref + top_p[:, j:j + 1] * jnp.take_along_axis(
+            y_all, top_e[:, j][:, None, None].repeat(16, -1), 1)[:, 0]
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 16)),
+                               np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_drops_under_tight_capacity(rng):
+    cfg = _moe_cfg(cap=0.1)
+    specs = moe_spec(cfg)
+    p = pr.init_tree(specs, jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.standard_normal((2, 32, 16)), jnp.float32)
+    out, aux = moe_ffn(p, x, cfg)
+    assert float(aux["moe_dropped"]) > 0.0
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_rotary_relative_property(rng):
+    """RoPE: <q_i, k_j> depends only on i - j."""
+    hd = 8
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, hd)), jnp.float32)
+    def dot_at(i, j):
+        qi = L.rotary(q, jnp.array([[i]]))
+        kj = L.rotary(k, jnp.array([[j]]))
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(5, 5) - dot_at(0, 0)) < 1e-4

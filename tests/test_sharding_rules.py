@@ -1,0 +1,95 @@
+"""Sharding-rule unit tests (pure metadata — no device execution)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import make_rules
+
+MESH2 = jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _mesh3():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+
+
+def test_basic_table():
+    r = make_rules(MESH2)
+    assert r.spec(("batch", "seq", "act_embed")) == P("data", None, None)
+    assert r.spec(("embed", "mlp")) == P("data", "model")
+    assert r.spec(("vocab", "embed")) == P("model", "data")
+
+
+def test_multi_pod_batch_axes():
+    r = make_rules(_mesh3())
+    assert r.spec(("batch",)) == P(("pod", "data"))
+    assert r.spec(("embed",)) == P(("pod", "data"))
+    assert r.spec(("fold_bh",)) == P(("pod", "data", "model"))
+
+
+def test_divisibility_fallback():
+    """A dim that does not divide its axis extent must fall back to
+    replication (shape_spec), e.g. 9 heads on model=16."""
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = jax.sharding.Mesh(dev, ("data", "model"))
+    # pretend-extent check happens against mesh.shape: with size-1 axes
+    # everything divides, so craft the check through the rule API directly
+    r = make_rules(MESH2)
+    spec = r.shape_spec(MESH2, ("batch", "seq", "act_heads", None),
+                        (4, 32, 9, 64))
+    # model axis extent is 1 here -> divisible; the semantic test is in
+    # test_dryrun-side artifacts; assert the API keeps rank and order
+    assert len(spec) == 4
+
+
+def test_seq_shard_modes():
+    r_sp = make_rules(MESH2, seq_shard_acts=True)
+    assert r_sp.spec(("batch", "seq_res", "act_embed")) == \
+        P("data", "model", None)
+    r_long = make_rules(MESH2, seq_sharded=True)
+    assert r_long.spec(("batch",)) == P(None)
+    assert r_long.spec(("cache_seq",)) == P("data")
+    r_dec = make_rules(MESH2, cache_seq_model=True)
+    assert r_dec.spec(("cache_seq",)) == P("model")
+
+
+def test_moe_ep_rules():
+    r_tp = make_rules(MESH2, moe_ep=False)
+    assert r_tp.spec(("experts", "embed", "expert_mlp")) == \
+        P(None, "data", "model")
+    r_ep = make_rules(MESH2, moe_ep=True)
+    assert r_ep.spec(("experts", "embed", "expert_mlp")) == \
+        P("model", "data", None)
+
+
+def test_unknown_logical_axis_raises():
+    r = make_rules(MESH2)
+    with pytest.raises(KeyError):
+        r.spec(("not_an_axis",))
+
+
+def test_artifacts_complete_and_coherent():
+    """Deliverable-e integration check: 40 cells x 2 meshes accounted for
+    (compiled or assignment-mandated skip), zero failures."""
+    import json
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("dry-run artifacts not generated in this checkout")
+    recs = [json.loads(p.read_text()) for p in art.glob("*.json")
+            if not p.name.startswith("aa-kmeans") and "__" in p.name
+            and p.name.count("__") == 2]     # baseline (untagged) cells
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+    assert len(cells) == 80, len(cells)
+    bad = [r for r in recs if not (r.get("ok") or r.get("skipped"))]
+    assert not bad, bad[:2]
+    skips = [r for r in recs if r.get("skipped")]
+    assert len(skips) == 12
+    for r in recs:
+        if r.get("skipped"):
+            continue
+        assert r.get("time_compile_s", 0) > 0
+        assert "memory" in r

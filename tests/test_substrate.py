@@ -1,0 +1,212 @@
+"""Substrate tests: optimizer, compression, data pipeline, checkpointing,
+straggler/elastic policies."""
+
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.tokens import DataConfig, TokenStream, global_batch_at
+from repro.optim import adamw
+from repro.optim.compression import int8_error_feedback, quantize_int8
+from repro.runtime.elastic import (LADDER, ElasticController, MeshPlan,
+                                   global_batch_plan, plan_for)
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------------------- optim
+
+def _quad_problem():
+    a = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                    jnp.float32)
+    q = a @ a.T + 0.5 * jnp.eye(8)
+    b = jnp.ones(8)
+
+    def loss(p):
+        return 0.5 * p["x"] @ q @ p["x"] - b @ p["x"]
+    return loss
+
+
+def test_adamw_decreases_quadratic():
+    loss = _quad_problem()
+    cfg = adamw.AdamWConfig(lr=5e-2, warmup_steps=5, decay_steps=200,
+                            weight_decay=0.0)
+    params = {"x": jnp.zeros(8)}
+    state = adamw.init_state(params, cfg)
+    l0 = float(loss(params))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw.apply_updates(params, g, state, cfg)
+    assert float(loss(params)) < l0 - 0.5
+    assert int(state.step) == 150
+
+
+def test_int8_ef_compression_converges_like_fp32():
+    loss = _quad_problem()
+    outs = {}
+    for comp in ("none", "int8_ef"):
+        cfg = adamw.AdamWConfig(lr=5e-2, warmup_steps=5, decay_steps=300,
+                                weight_decay=0.0, compression=comp)
+        params = {"x": jnp.zeros(8)}
+        state = adamw.init_state(params, cfg)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw.apply_updates(params, g, state, cfg)
+        outs[comp] = float(loss(params))
+    # error feedback keeps the quantised run within a small margin
+    assert outs["int8_ef"] < outs["none"] + 0.05, outs
+
+
+def test_quantize_int8_roundtrip(rng):
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(q.astype(jnp.float32) * s - x)))
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_carries_residual():
+    g = {"w": jnp.asarray([0.001, 1.0], jnp.float32)}
+    ef = {"w": jnp.zeros(2)}
+    out, ef2 = int8_error_feedback(g, ef)
+    # small component is quantised away but preserved in the residual
+    np.testing.assert_allclose(np.asarray(out["w"] + ef2["w"]),
+                               np.asarray(g["w"]), rtol=1e-6)
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+# ----------------------------------------------------------------------- data
+
+def test_data_deterministic_and_shard_invariant():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8, seed=7)
+    b1 = global_batch_at(cfg, step=3, shard_count=1)
+    b2 = global_batch_at(cfg, step=3, shard_count=4)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # resume: stream at start_step t yields batch_at(t)
+    s = TokenStream(cfg, start_step=3)
+    np.testing.assert_array_equal(next(s)["tokens"],
+                                  TokenStream(cfg).batch_at(3)["tokens"])
+    # different steps differ
+    assert not np.array_equal(b1["tokens"],
+                              global_batch_at(cfg, 4)["tokens"])
+    # labels are next-token shifted
+    row = TokenStream(cfg)._row(0, 0)
+    b = TokenStream(cfg).batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][0], row[:-1])
+    np.testing.assert_array_equal(b["labels"][0], row[1:])
+
+
+def test_data_tokens_in_range():
+    cfg = DataConfig(vocab=50, seq_len=32, global_batch=4)
+    b = TokenStream(cfg).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 50
+
+
+# ----------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_and_latest():
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "opt": {"m": jnp.ones(4)}}
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        ckpt.save(root / "step_00000005", tree, step=5,
+                  extra={"data": {"step": 5}})
+        ckpt.save(root / "step_00000009", tree, step=9)
+        assert ckpt.latest_step_dir(root).name == "step_00000009"
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            tree)
+        restored, meta = ckpt.restore(root / "step_00000005", like)
+        assert meta["step"] == 5 and meta["data"]["step"] == 5
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    tree = {"w": jnp.ones((2, 3))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(Path(d) / "step_00000001", tree, step=1)
+        bad = {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)}
+        with pytest.raises(ValueError, match="shape mismatch"):
+            ckpt.restore(Path(d) / "step_00000001", bad)
+
+
+def test_async_checkpointer_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ac = ckpt.AsyncCheckpointer(Path(d), keep=2)
+        for s in (1, 2, 3, 4):
+            ac.save({"w": jnp.full((3,), float(s))}, step=s)
+        ac.wait()
+        kept = sorted(p.name for p in Path(d).glob("step_*"))
+        assert kept == ["step_00000003", "step_00000004"]
+        restored, meta = ac.restore_latest(
+            {"w": jax.ShapeDtypeStruct((3,), jnp.float32)})
+        assert meta["step"] == 4
+        assert float(restored["w"][0]) == 4.0
+
+
+def test_checkpoint_atomicity_tmp_ignored():
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        ckpt.save(root / "step_00000001", {"w": jnp.ones(2)}, step=1)
+        # a crashed half-write leaves only a .tmp dir — must be ignored
+        (root / "step_00000002.tmp").mkdir()
+        assert ckpt.latest_step_dir(root).name == "step_00000001"
+
+
+# -------------------------------------------------------------------- runtime
+
+def test_straggler_policy_flags_slow_host():
+    clock = [0.0]
+    mon = StragglerMonitor([f"h{i}" for i in range(4)],
+                           StragglerConfig(patience=2),
+                           clock=lambda: clock[0])
+    actions = []
+    for step in range(6):
+        clock[0] += 10
+        for i in range(4):
+            mon.report(f"h{i}", 1.0 if i else 3.0)   # h0 is slow
+        actions += mon.evaluate()
+    assert any(a["host"] == "h0" and a["action"] == "REBALANCE"
+               for a in actions)
+    assert all(a["host"] == "h0" for a in actions)
+
+
+def test_straggler_dead_host_evicted():
+    clock = [0.0]
+    mon = StragglerMonitor(["h0", "h1"],
+                           StragglerConfig(dead_after_s=50),
+                           clock=lambda: clock[0])
+    mon.report("h0", 1.0)
+    mon.report("h1", 1.0)
+    clock[0] = 100.0
+    mon.report("h1", 1.0)       # h0 silent
+    actions = mon.evaluate()
+    assert [a for a in actions if a["host"] == "h0"][0]["action"] == "EVICT"
+    assert mon.healthy_hosts() == ["h1"]
+
+
+def test_elastic_ladder():
+    c = ElasticController()
+    assert c.on_membership_change(512).kind == "NOOP"
+    ev = c.on_membership_change(300)       # lost most of a pod
+    assert ev.kind == "SHRINK" and ev.plan.shape == (16, 16)
+    ev = c.on_membership_change(100)
+    assert ev.plan.shape == (4, 16)
+    ev = c.on_membership_change(512)
+    assert ev.kind == "GROW" and ev.plan.shape == (2, 16, 16)
+    assert c.on_membership_change(10).kind == "NOOP"
+
+
+def test_elastic_batch_replan():
+    assert global_batch_plan(256, MeshPlan((2, 16, 16),
+                                           ("pod", "data", "model"))) == 8
+    assert global_batch_plan(256, MeshPlan((16, 16), ("data", "model"))) == 16
