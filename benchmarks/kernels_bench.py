@@ -15,10 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, timed
+from repro.core.backends import get_backend
 from repro.kernels import ref
 
 HBM_BW = 819e9
 PEAK = 197e12
+
+# Deliberately a curated subset of backends.backend_names(): the backends
+# whose CPU wall clock is meaningful (Pallas engines join on real TPUs —
+# see step_bench).
+STEP_BACKENDS = ("dense", "blocked", "hamerly")
 
 
 def analyze(n, d, k, fused: bool):
@@ -39,6 +45,32 @@ def analyze(n, d, k, fused: bool):
     return {"bytes": bytes_moved, "flops": flops, "ai": ai,
             "t_mem_us": t_mem * 1e6, "t_comp_us": t_comp * 1e6,
             "bound": "compute" if t_comp > t_mem else "memory"}
+
+
+def step_bench(backends=None, n=100_000, d=9, k=100):
+    """Wall time of one step() — the solver's per-iteration unit — per
+    backend.  The Pallas backends ("pallas"/"fused") are only timed on a
+    real TPU: in CPU interpret mode their wall numbers would be pure
+    Python-emulation overhead and read as the opposite of the TPU story
+    (which the analytic roofline in `analyze` covers)."""
+    if backends is None:
+        backends = STEP_BACKENDS + (("pallas", "fused")
+                                    if jax.default_backend() == "tpu"
+                                    else ())
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+    rows = []
+    for name in backends:
+        # block size must divide N for the row-blocked path to engage
+        bk = get_backend(name, block_n=n // 8) if name == "blocked" \
+            else get_backend(name)
+        carry = bk.init_carry(x, c, k)
+        fn = jax.jit(lambda a, b, cr, bk=bk: bk.step(a, b, k, cr)[0])
+        res, t = timed(fn, x, c, carry)
+        rows.append(csv_row(f"backend.step.{name}.n{n}_d{d}_k{k}", t * 1e6,
+                            f"energy={float(res.energy):.3e}"))
+    return rows
 
 
 def main():
@@ -66,6 +98,7 @@ def main():
             f"tpu_bytes={a_f['bytes']:.2e};ai={a_f['ai']:.1f};"
             f"tpu_{a_f['bound']}_us={max(a_f['t_mem_us'], a_f['t_comp_us']):.1f};"
             f"mem_term_speedup={a_s['bytes']/a_f['bytes']:.2f}x"))
+    rows += step_bench()
     for r in rows:
         print(r)
     return rows

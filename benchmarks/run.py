@@ -12,11 +12,17 @@ import traceback
 
 
 def main() -> None:
+    from repro.core.backends import backend_names
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.05,
                     help="fraction of Table-1 dataset sizes (1.0 = paper)")
     ap.add_argument("--fast", action="store_true",
                     help="first 6 datasets only")
+    ap.add_argument("--backend", default="dense",
+                    choices=sorted(backend_names()),
+                    help="solver engine for the table runs "
+                         "(repro.core.backends registry)")
     args = ap.parse_args()
 
     from benchmarks import kernels_bench, roofline, table2_dynamic_m, \
@@ -27,7 +33,8 @@ def main() -> None:
 
     print("# === Table 2: fixed vs dynamic m ===", flush=True)
     try:
-        s2 = table2_dynamic_m.run(scale=args.scale, datasets=datasets)
+        s2 = table2_dynamic_m.run(scale=args.scale, datasets=datasets,
+                                  backend=args.backend)
         n = s2["total"]
         mean = lambda key: sum(r[key]["time_s"] for r in s2["rows"]) / n
         print(f"table2.fixed_m2,{mean('fixed_m2')*1e6:.1f},")
@@ -41,7 +48,8 @@ def main() -> None:
 
     print("# === Table 3: AA-KMeans vs Lloyd ===", flush=True)
     try:
-        s3 = table3_vs_lloyd.run(scale=args.scale, datasets=datasets)
+        s3 = table3_vs_lloyd.run(scale=args.scale, datasets=datasets,
+                                 backend=args.backend)
         mean_l = sum(c["lloyd_time_s"] for c in s3["cases"]) / s3["total"]
         mean_a = sum(c["aa_time_s"] for c in s3["cases"]) / s3["total"]
         print(f"table3.lloyd,{mean_l*1e6:.1f},")

@@ -23,16 +23,17 @@ from repro.data.synthetic import DATASETS, make_dataset
 DEFAULT_DATASETS = list(DATASETS)
 
 
-def run_one(x, c0, k, m0, dynamic):
+def run_one(x, c0, k, m0, dynamic, backend="dense"):
     cfg = KMeansConfig(k=k, max_iter=1000,
                        aa=AAConfig(m0=m0, dynamic_m=dynamic))
-    fn = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))
+    fn = jax.jit(lambda a, b: aa_kmeans(a, b, cfg, backend=backend))
     res, dt = timed(fn, x, c0)
     return {"a": int(res.n_accepted), "b": int(res.n_iter),
             "time_s": dt, "mse": float(res.energy) / x.shape[0]}
 
 
-def run(scale=0.05, k=10, datasets=None, seed=0, verbose=True):
+def run(scale=0.05, k=10, datasets=None, seed=0, verbose=True,
+        backend="dense"):
     rows = []
     wins = {2: 0, 5: 0}
     total = {2: 0, 5: 0}
@@ -41,8 +42,8 @@ def run(scale=0.05, k=10, datasets=None, seed=0, verbose=True):
         c0 = kmeanspp_init(jax.random.PRNGKey(seed), x, k)
         line = {"dataset": name, "n": x.shape[0]}
         for m0 in (2, 5):
-            fx = run_one(x, c0, k, m0, dynamic=False)
-            dy = run_one(x, c0, k, m0, dynamic=True)
+            fx = run_one(x, c0, k, m0, dynamic=False, backend=backend)
+            dy = run_one(x, c0, k, m0, dynamic=True, backend=backend)
             line[f"fixed_m{m0}"] = fx
             line[f"dyn_m{m0}"] = dy
             total[m0] += 1
@@ -62,8 +63,8 @@ def run(scale=0.05, k=10, datasets=None, seed=0, verbose=True):
     return summary
 
 
-def main(scale=0.05):
-    s = run(scale=scale)
+def main(scale=0.05, backend="dense"):
+    s = run(scale=scale, backend=backend)
     mean_t = lambda key: sum(r[key]["time_s"] for r in s["rows"]) / len(s["rows"])
     print(csv_row("table2.fixed_m2", mean_t("fixed_m2") * 1e6,
                   f"wins_dyn={s['wins_dynamic_m2']}/{s['total']}"))

@@ -25,11 +25,11 @@ INITS = {"kmeans++": kmeanspp_init, "afk-mc2": afkmc2_init,
          "bf": bf_init, "clarans": clarans_init}
 
 
-def one_case(x, c0, k):
+def one_case(x, c0, k, backend="dense"):
     lf = jax.jit(lambda a, b: lloyd_kmeans(a, b, k, 1000))
     (c, lab, e_l, it_l), t_l = timed(lf, x, c0)
     cfg = KMeansConfig(k=k, max_iter=1000)
-    af = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))
+    af = jax.jit(lambda a, b: aa_kmeans(a, b, cfg, backend=backend))
     res, t_a = timed(af, x, c0)
     return {"lloyd_iter": int(it_l), "lloyd_time_s": t_l,
             "lloyd_mse": float(e_l) / x.shape[0],
@@ -38,7 +38,7 @@ def one_case(x, c0, k):
 
 
 def run(scale=0.05, datasets=None, seed=0, ks=(10,), clarans_ks=(10, 100),
-        verbose=True):
+        verbose=True, backend="dense"):
     rows, cases = [], []
     for name in (datasets or list(DATASETS)):
         x = jnp.asarray(make_dataset(name, scale=scale, seed=seed))
@@ -50,7 +50,7 @@ def run(scale=0.05, datasets=None, seed=0, ks=(10,), clarans_ks=(10, 100),
                     continue
                 c0 = init_fn(key, x, k)
                 c0 = jnp.asarray(c0)
-                case = one_case(x, c0, k)
+                case = one_case(x, c0, k, backend=backend)
                 case.update(dataset=name, init=init_name, k=k)
                 cases.append(case)
                 if verbose:
@@ -72,8 +72,8 @@ def run(scale=0.05, datasets=None, seed=0, ks=(10,), clarans_ks=(10, 100),
             "mse_parity": mse_ok}
 
 
-def main(scale=0.05):
-    s = run(scale=scale)
+def main(scale=0.05, backend="dense"):
+    s = run(scale=scale, backend=backend)
     print(csv_row("table3.aa_vs_lloyd", 0.0,
                   f"wins={s['wins']}/{s['total']} "
                   f"iter_wins={s['iter_wins']}/{s['total']} "

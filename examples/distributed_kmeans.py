@@ -21,17 +21,26 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--backend", default="dense",
+                    help="per-shard engine composed with the mesh via "
+                         "distribute() (any repro.core.backends registry "
+                         "name; validated after jax init)")
     args = ap.parse_args()
 
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={args.devices}")
     import jax
     import jax.numpy as jnp
+    from repro.core.backends import backend_names
     from repro.core.distributed import (make_distributed_kmeans,
                                         shard_dataset)
     from repro.core.init_schemes import kmeanspp_init
     from repro.core.kmeans import KMeansConfig, aa_kmeans
     from repro.data.synthetic import make_blobs
+
+    if args.backend not in backend_names():
+        ap.error(f"--backend {args.backend!r}: unknown backend "
+                 f"(registered: {', '.join(backend_names())})")
 
     assert len(jax.devices()) == args.devices
     pods = 2 if args.devices % 2 == 0 else 1
@@ -45,9 +54,10 @@ def main():
     c0 = kmeanspp_init(jax.random.PRNGKey(1), jnp.asarray(x_host), k)
 
     cfg = KMeansConfig(k=k, max_iter=500)
-    fit = make_distributed_kmeans(mesh, cfg, ("pod", "data"))
+    fit = make_distributed_kmeans(mesh, cfg, ("pod", "data"),
+                                  backend=args.backend)
     res = jax.block_until_ready(fit(x, c0))
-    print(f"distributed ({args.devices} devices): "
+    print(f"distributed ({args.devices} devices, {args.backend}): "
           f"{int(res.n_accepted)}/{int(res.n_iter)} iterations, "
           f"MSE {float(res.energy)/args.n:.4f}, "
           f"converged={bool(res.converged)}")

@@ -1,18 +1,22 @@
 """Quickstart: Anderson-accelerated K-Means vs Lloyd in ~40 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend fused]
 
 Generates an overlapping Gaussian mixture (the slow-convergence regime the
 paper targets), seeds with K-Means++, runs classical Lloyd and Algorithm 1
 from the same centroids, and prints the head-to-head — the paper's
-headline result (fewer iterations, same MSE) in miniature.
+headline result (fewer iterations, same MSE) in miniature.  ``--backend``
+selects the solver engine (repro.core.backends): the ``fused`` Pallas
+backend reads X exactly once per accepted iteration.
 """
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends import backend_names
 from repro.core.init_schemes import kmeanspp_init
 from repro.core.kmeans import KMeansConfig, aa_kmeans, aa_kmeans_traced
 from repro.core.lloyd import lloyd_kmeans
@@ -20,10 +24,15 @@ from repro.data.synthetic import make_dataset
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="dense",
+                    choices=sorted(backend_names()))
+    args = ap.parse_args()
+
     k = 10
     x = jnp.asarray(make_dataset("Colorment", scale=0.2, seed=0))
     print(f"dataset: Colorment stand-in, N={x.shape[0]}, d={x.shape[1]}, "
-          f"K={k}")
+          f"K={k}, backend={args.backend}")
     c0 = kmeanspp_init(jax.random.PRNGKey(0), x, k)
 
     lloyd = jax.jit(lambda a, b: lloyd_kmeans(a, b, k, 1000))
@@ -33,7 +42,7 @@ def main():
     t_l = time.perf_counter() - t0
 
     cfg = KMeansConfig(k=k, max_iter=1000)
-    aa = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))
+    aa = jax.jit(lambda a, b: aa_kmeans(a, b, cfg, backend=args.backend))
     jax.block_until_ready(aa(x, c0))
     t0 = time.perf_counter()
     res = jax.block_until_ready(aa(x, c0))
@@ -49,7 +58,7 @@ def main():
           f"time reduction: {100*(1 - t_a/t_l):.0f}%")
 
     # peek at the dynamic window in action
-    tr = aa_kmeans_traced(x, c0, cfg)
+    tr = aa_kmeans_traced(x, c0, cfg, backend=args.backend)
     print(f"\ndynamic m trace (first 20): {tr.m_values[:20]}")
     print(f"accepted pattern (first 20): "
           f"{''.join('Y' if a else '.' for a in tr.accepted[:20])}")

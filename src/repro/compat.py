@@ -1,0 +1,88 @@
+"""Version shims for jax APIs that moved between 0.4.x and 0.5+.
+
+This repo targets the newer spellings (`jax.shard_map`,
+`jax.sharding.AxisType`, `jax.make_mesh(..., axis_types=...)`); on the
+jax 0.4.x line those either live under `jax.experimental` or do not exist.
+Importing this module resolves each symbol once and — where the canonical
+location is missing — installs the shim *at* the canonical location, so
+call sites (including tests and examples that use `jax.sharding.AxisType`
+or `jax.shard_map` directly) work on either version.
+
+Shimmed surface:
+
+    AxisType   — `jax.sharding.AxisType`; on 0.4.x a stand-in enum with the
+                 same member names (Auto / Explicit / Manual).  0.4.x meshes
+                 have no axis-type machinery, so the values are inert tags.
+    shard_map  — `jax.shard_map`, falling back to
+                 `jax.experimental.shard_map.shard_map` (same call
+                 convention for the subset used here: f positional,
+                 mesh/in_specs/out_specs keywords).
+    make_mesh  — `jax.make_mesh` accepting and discarding `axis_types`
+                 when the installed version's signature lacks it.
+
+Import this module (for the side effects) from any module that touches
+mesh construction or shard_map: launch/mesh.py, core/distributed.py,
+sharding/rules.py.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+import jax.sharding
+
+
+# --- jax.sharding.AxisType ------------------------------------------------
+
+try:
+    AxisType = jax.sharding.AxisType
+except AttributeError:
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType on jax 0.4.x (inert tags)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+# --- jax.shard_map --------------------------------------------------------
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _experimental_sm
+
+    def shard_map(f, /, **kwargs):
+        # The 0.4.x replication checker has no rule for lax.while_loop (the
+        # solver's main loop); out_specs still declare the replication
+        # contract, so disable the static check rather than the feature.
+        kwargs.setdefault("check_rep", False)
+        return _experimental_sm(f, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+# --- jax.make_mesh(..., axis_types=...) -----------------------------------
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a flat dict on every jax version
+    (0.4.x returns a per-device *list* of dicts; newer versions a dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+_native_make_mesh = jax.make_mesh
+
+if "axis_types" in inspect.signature(_native_make_mesh).parameters:
+    make_mesh = _native_make_mesh
+else:
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types  # no axis-type machinery on this jax version
+        return _native_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh

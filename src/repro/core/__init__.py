@@ -8,10 +8,14 @@ Public surface:
     hamerly_kmeans        — Hamerly-bound Lloyd baseline
     KMeansConfig/AAConfig — solver configuration
     make_distributed_kmeans — shard_map multi-pod solver
+    get_backend/distribute/Precision — composable step-primitive engine
+                            (DESIGN.md §Backends)
 """
 
 from repro.core.anderson import AAConfig                       # noqa: F401
 from repro.core.api import AAKMeans                            # noqa: F401
+from repro.core.backends import (Backend, Precision,           # noqa: F401
+                                 StepResult, distribute, get_backend)
 from repro.core.distributed import make_distributed_kmeans    # noqa: F401
 from repro.core.hamerly import hamerly_kmeans                  # noqa: F401
 from repro.core.kmeans import (KMeansConfig, aa_kmeans,        # noqa: F401

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from repro.core.anderson import AAConfig
 from repro.core.distributed import make_distributed_kmeans, shard_dataset
 from repro.core.init_schemes import make_init
-from repro.core.kmeans import KMeansConfig, KMeansResult, aa_kmeans
-from repro.core.lloyd import assign
+from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
+                               resolve_backend)
 
 
 @dataclasses.dataclass
@@ -38,6 +38,9 @@ class AAKMeans:
     seed: int = 0
     mesh: Optional[jax.sharding.Mesh] = None      # distributed when set
     data_axes: tuple = ("data",)
+    # local-compute engine: "dense" | "blocked" | "pallas" | "fused" |
+    # "hamerly" or a Backend instance; composed with the mesh when set.
+    backend: object = "dense"
 
     # fitted state
     centroids_: Optional[jax.Array] = None
@@ -58,10 +61,12 @@ class AAKMeans:
         cfg = self._config()
         init_fn = make_init(self.init)
         if self.mesh is not None:
-            fit_fn = make_distributed_kmeans(self.mesh, cfg, self.data_axes)
+            fit_fn = make_distributed_kmeans(self.mesh, cfg, self.data_axes,
+                                             backend=self.backend)
             x_sharded, _ = shard_dataset(x, self.mesh, self.data_axes)
         else:
-            fit_fn = jax.jit(lambda a, b: aa_kmeans(a, b, cfg))
+            fit_fn = jax.jit(
+                lambda a, b: aa_kmeans(a, b, cfg, backend=self.backend))
             x_sharded = x
 
         best: Optional[KMeansResult] = None
@@ -81,7 +86,8 @@ class AAKMeans:
 
     def predict(self, x) -> jax.Array:
         assert self.centroids_ is not None, "call fit() first"
-        return assign(jnp.asarray(x), self.centroids_).labels
+        bk = resolve_backend(self.backend)
+        return bk.assign(jnp.asarray(x), self.centroids_).labels
 
     def transform(self, x) -> jax.Array:
         """Distances to each centroid (N, K)."""

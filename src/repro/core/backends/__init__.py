@@ -1,0 +1,34 @@
+"""Composable backend engine for Algorithm 1 (DESIGN.md §Backends).
+
+    from repro.core.backends import get_backend, distribute, Precision
+
+    backend = get_backend("fused")                       # local compute
+    backend = get_backend("dense",
+                          precision=Precision(jnp.bfloat16))  # precision
+    ops = distribute(backend, ("pod", "data"))           # any mesh
+
+Registered backends:
+
+    dense    — jnp reference semantics (the oracle; legacy DENSE_OPS math)
+    blocked  — row-blocked distances, bounded (block_n, K) intermediate
+    pallas   — separate tiled assignment/update kernels (large K*d)
+    fused    — single-pass Pallas kernel: one X read per accepted iteration
+    hamerly  — bound-based assignment carried across iterations
+"""
+
+from repro.core.backends.base import (Backend, Precision,        # noqa: F401
+                                      StepResult, backend_names,
+                                      distribute, from_lloyd_ops,
+                                      get_backend, instrument,
+                                      register_backend)
+from repro.core.backends.dense import (blocked_backend,          # noqa: F401
+                                       dense_backend)
+from repro.core.backends.hamerly import hamerly_backend          # noqa: F401
+from repro.core.backends.pallas import (fused_backend,           # noqa: F401
+                                        pallas_backend)
+
+register_backend("dense", dense_backend)
+register_backend("blocked", blocked_backend)
+register_backend("pallas", pallas_backend)
+register_backend("fused", fused_backend)
+register_backend("hamerly", hamerly_backend)

@@ -6,41 +6,47 @@ Parallelisation layout (see DESIGN.md §Distribution):
     meshes that is ("data",) for a single pod and ("pod", "data") across
     pods — so each of the 256/512 chips owns an N/devices slice.
   * Centroids C (K, d) are replicated: K*d is tiny (<= a few MB) next to X.
-  * The assignment step is embarrassingly parallel (local distances).
-  * The update step computes local per-cluster partial sums/counts and
-    psum-reduces them over the data axes — one (K*(d+1))-sized all-reduce
-    per iteration, the *only* communication of the solver.
+  * The assignment half of the step is embarrassingly parallel (local
+    distances); the step's cluster stats are psum-reduced over the data
+    axes — one (K*(d+1))-sized all-reduce per iteration, the *only*
+    communication of the solver.
   * The energy check and the convergence test reduce one scalar each.
   * Anderson acceleration operates on the replicated centroids; every
     device solves the identical tiny (mbar x mbar) system, so no extra
     communication is introduced by the acceleration — the paper's overhead
     argument (Sec. 2.1) carries over unchanged to the distributed setting.
 
-Because all cross-device traffic is inside `LloydOps`, the *same*
-Algorithm-1 driver (repro.core.kmeans.aa_kmeans) runs unchanged here.
+Distribution is the `distribute(backend, axes)` combinator over *any*
+local backend (`repro.core.backends`): dense, blocked, the Pallas kernels,
+the fused single-pass kernel, or Hamerly bounds all run under the same
+shard_map wrapping — "fused Pallas + sharded mesh + mixed precision" is a
+configuration, not a code path.  The *same* Algorithm-1 driver
+(repro.core.kmeans.aa_kmeans) runs unchanged here.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Sequence
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import lloyd
-from repro.core.kmeans import KMeansConfig, KMeansResult, aa_kmeans
-from repro.core.lloyd import AssignResult, LloydOps
+from repro.core.backends import Backend, distribute
+from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
+                               resolve_backend)
+from repro.core.lloyd import LloydOps
 
 
 def distributed_lloyd_ops(data_axes: Sequence[str],
                           block_n: int = 0) -> LloydOps:
-    """LloydOps whose update/energy/convergence reduce over ``data_axes``.
-
-    The returned ops must be called *inside* shard_map with x as the local
-    shard and c replicated.
-    """
+    """DEPRECATED: LloydOps whose update/energy/convergence reduce over
+    ``data_axes``.  Superseded by ``distribute(backend, axes)``; kept so
+    legacy injection sites keep working.  Must be called *inside* shard_map
+    with x as the local shard and c replicated."""
     axes = tuple(data_axes)
 
     def assign_fn(x, c):
@@ -66,25 +72,37 @@ def distributed_lloyd_ops(data_axes: Sequence[str],
 
 def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
                             data_axes: Sequence[str] = ("data",),
-                            block_n: int = 0):
+                            block_n: int = 0,
+                            backend: Union[str, Backend, None] = None):
     """Build the jitted multi-device solver.
 
     Returns ``fit(x, c0) -> KMeansResult`` where x is (N, d) sharded (or
     shardable) over ``data_axes`` and c0 is (K, d) replicated.  N must be
-    divisible by the product of the data-axis sizes.
+    divisible by the product of the data-axis sizes.  ``backend`` picks the
+    per-shard engine (any registry name or local Backend instance, wrapped
+    here by ``distribute``); an already distribute()-wrapped backend is
+    used as-is provided its axes match ``data_axes``.
     """
     axes = tuple(data_axes)
-    ops = distributed_lloyd_ops(axes, block_n=block_n)
+    local = resolve_backend(backend, cfg=cfg, block_n=block_n)
+    if local.axes:
+        if local.axes != axes:
+            raise ValueError(
+                f"backend {local.name!r} is distributed over {local.axes} "
+                f"but the solver reduces over {axes}")
+        ops = local
+    else:
+        ops = distribute(local, axes)
     x_spec = P(axes)           # shard rows over all data axes
     rep = P()
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(x_spec, rep),
         out_specs=KMeansResult(centroids=rep, labels=x_spec, energy=rep,
                                n_iter=rep, n_accepted=rep, converged=rep))
     def _run(x_local, c0):
-        return aa_kmeans(x_local, c0, cfg, ops)
+        return aa_kmeans(x_local, c0, cfg, backend=ops)
 
     x_sharding = NamedSharding(mesh, x_spec)
     rep_sharding = NamedSharding(mesh, rep)

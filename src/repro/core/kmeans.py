@@ -4,11 +4,20 @@ Two drivers over the same primitives:
 
   * ``aa_kmeans``        — fully jit-able ``lax.while_loop`` implementation
                            (production path; runs unchanged under shard_map
-                           distribution and with Pallas kernel ops).
+                           distribution and with Pallas kernel backends).
   * ``aa_kmeans_traced`` — Python-loop driver that records the per-iteration
                            statistics the paper reports (accepted / total
                            iterations, energy trace, m trace, wall time);
                            used by the Table 2 / Table 3 benchmarks.
+
+Both consume a `Backend` (repro.core.backends) whose core op is the
+single-pass ``step(x, c) -> StepResult``, so one *accepted* Algorithm-1
+iteration costs exactly one pass over X (the paper's Sec-2.1 cost model):
+the step's assignment doubles as the energy evaluation AND as the cluster
+statistics from which the next fallback iterate C_AU follows without
+re-reading X.  A *rejected* iteration takes one extra step — the fallback
+must be re-assigned — and that second step's stats are reused the same way
+(the legacy driver paid a third pass here).
 
 Faithfulness notes (vs. the pseudo-code in the paper):
 
@@ -28,14 +37,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import anderson
 from repro.core.anderson import AAConfig, AAState
-from repro.core.lloyd import (DENSE_OPS, LloydOps, energy_from_mindist)
+from repro.core.backends import Backend, from_lloyd_ops, get_backend
+from repro.core.lloyd import DENSE_OPS, LloydOps
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,16 +78,55 @@ class _LoopState(NamedTuple):
     converged: jax.Array
     labels: jax.Array      # last P^t (valid on exit)
     e_last: jax.Array
+    carry: Any             # opaque backend carry (e.g. Hamerly bounds)
 
 
-def _init_state(x, c0, cfg: KMeansConfig, ops: LloydOps) -> _LoopState:
+BackendLike = Union[str, Backend, None]
+
+
+def resolve_backend(backend: BackendLike, ops: Optional[LloydOps] = None,
+                    cfg: Optional[KMeansConfig] = None,
+                    block_n: int = 0) -> Backend:
+    """Resolve the (backend=, ops=) pair the solver entry points accept —
+    the single backend-selection policy for both the local and the
+    distributed drivers.
+
+    Priority: an explicit Backend instance wins; a registry name is looked
+    up (with "dense"/"blocked" promoted to the row-blocked engine when a
+    block size is configured — via ``block_n`` or ``cfg.block_n``); a
+    non-default legacy LloydOps is adapted through the deprecation shim;
+    otherwise the dense engine."""
+    block_n = block_n or (cfg.block_n if cfg is not None else 0)
+    if isinstance(backend, Backend):
+        return backend
+    if isinstance(backend, str):
+        if backend in ("dense", "blocked") and block_n:
+            return get_backend("blocked", block_n=block_n)
+        return get_backend(backend)
+    if isinstance(backend, LloydOps):   # migration path off the ops= param
+        return from_lloyd_ops(backend)
+    if backend is not None:
+        raise TypeError(
+            f"backend= expects a registry name, a Backend, or a legacy "
+            f"LloydOps; got {type(backend).__name__}")
+    if ops is not None and ops is not DENSE_OPS:
+        return from_lloyd_ops(ops)
+    if block_n:
+        return get_backend("blocked", block_n=block_n)
+    return get_backend("dense")
+
+
+def _init_state(x, c0, cfg: KMeansConfig, backend: Backend) -> _LoopState:
     k = cfg.k
-    inf = jnp.array(jnp.inf, x.dtype)
     # Line 1:  C^1 = C_AU^1 = G(C^0);  F^0 = C^1 - C^0;  E^0 = +inf
-    c1, res0 = ops.g_map(x, c0, k)
+    # — one step: the same pass yields E(C^0), P^0 and the stats of G(C^0).
+    carry = backend.init_carry(x, c0, k)
+    res0, carry = backend.step(x, c0, k, carry)
+    c1 = backend.centroids_from_step(x, res0, k, c0)
     aa_state = anderson.aa_init(k * x.shape[1], cfg.aa, x.dtype)
     aa_state = anderson.aa_seed(aa_state, (c1 - c0).reshape(-1),
                                 c1.reshape(-1))
+    inf = jnp.array(jnp.inf, res0.energy.dtype)
     return _LoopState(
         c=c1, c_au=c1, p_prev=res0.labels,
         e_prev=inf, e_prev2=inf,
@@ -86,36 +135,34 @@ def _init_state(x, c0, cfg: KMeansConfig, ops: LloydOps) -> _LoopState:
         converged=jnp.array(False),
         labels=res0.labels,
         # E(C^0) as the placeholder "last energy" — overwritten by the first
-        # loop body; min_sqdist is reused (no gather), reduced across shards.
-        e_last=ops.reduce_scalar(energy_from_mindist(res0.min_sqdist)))
+        # loop body; already reduced across shards by the backend.
+        e_last=res0.energy,
+        carry=carry)
 
 
-def _iteration(x, state: _LoopState, cfg: KMeansConfig,
-               ops: LloydOps):
-    """One body of Algorithm 1's for-loop (lines 3-19)."""
+def _iteration(x, state: _LoopState, cfg: KMeansConfig, backend: Backend):
+    """One body of Algorithm 1's for-loop (lines 3-19) — ONE pass over X
+    when the accelerated iterate is accepted, two when it reverts."""
     k = cfg.k
 
-    # Line 3: P^t = Assign(X, C^t)
-    res = ops.assign_fn(x, state.c)
-    p_t, c_t = res.labels, state.c
+    # Lines 3 + 7 + 16 fused: P^t = Assign(X, C^t), E^t = E(P^t, C^t) and
+    # the cluster stats of Update(X, P^t), all from a single step.
+    res, carry = backend.step(x, state.c, k, state.carry)
+    p_t, c_t, e_assign = res.labels, state.c, res.energy
 
     # Line 4: convergence <=> identical assignment.  Algorithm 1 returns
     # (P^t, C^t) at line 5 *before* doing any further work.
-    converged = ops.all_equal_fn(p_t, state.p_prev)
+    converged = backend.all_equal(p_t, state.p_prev)
 
-    # E(P^t, C^t) with P^t the fresh assignment of C^t is exactly the sum
-    # of min squared distances — reuse them instead of re-gathering
-    # (the paper's Sec-2.1 low-overhead argument; measured 25.6 ms vs the
-    # 16.2 ms assignment itself on Covtype before this reuse).
-    e_assign = ops.reduce_scalar(energy_from_mindist(res.min_sqdist))
-
-    def _finish(_):
+    def _finish(carry):
         new_state = state._replace(converged=jnp.array(True), labels=p_t,
-                                   e_last=e_assign, t=state.t + 1)
+                                   e_last=e_assign, t=state.t + 1,
+                                   carry=carry)
         return new_state, jnp.array(False), e_assign
 
-    def _full(_):
-        # Line 7: E^t = E(P^t, C^t)
+    def _full(carry):
+        # Line 7: E^t = E(P^t, C^t) — the step's min-dist sum (the paper's
+        # Sec-2.1 low-overhead argument; no re-gather).
         e_t = e_assign
 
         # Lines 7-11: dynamic adjustment of m
@@ -124,21 +171,25 @@ def _iteration(x, state: _LoopState, cfg: KMeansConfig,
 
         # Lines 12-14: keep the accelerated iterate only if it decreases E;
         # otherwise revert to the fallback iterate C_AU^t = G(C^{t-1}).
+        # The revert's single step supplies labels, energy AND the stats of
+        # the next fallback — the legacy driver re-assigned and then paid a
+        # separate update pass on top.
         accepted = e_t < state.e_prev
 
-        def _revert(_):
-            res_f = ops.assign_fn(x, state.c_au)
-            e_f = ops.reduce_scalar(energy_from_mindist(res_f.min_sqdist))
-            return state.c_au, res_f.labels, e_f
+        def _keep(carry):
+            return c_t, res, e_t, carry
 
-        def _keep(_):
-            return c_t, p_t, e_t
+        def _revert(carry):
+            res_f, carry = backend.step(x, state.c_au, k, carry)
+            return state.c_au, res_f, res_f.energy, carry
 
-        c_cur, p_cur, e_cur = jax.lax.cond(accepted, _keep, _revert,
-                                           operand=None)
+        c_cur, res_cur, e_cur, carry = jax.lax.cond(accepted, _keep, _revert,
+                                                    carry)
+        p_cur = res_cur.labels
 
-        # Line 16: C_AU^{t+1} = Update(X, P^t) — also the next fallback.
-        c_au_next = ops.update_fn(x, p_cur, k, c_cur)
+        # Line 16: C_AU^{t+1} = Update(X, P^t) — from the already-computed
+        # stats; no further pass over X.
+        c_au_next = backend.centroids_from_step(x, res_cur, k, c_cur)
 
         # Lines 17-19: Anderson acceleration.
         g_flat = c_au_next.reshape(-1)
@@ -157,26 +208,33 @@ def _iteration(x, state: _LoopState, cfg: KMeansConfig,
             t=state.t + 1,
             n_acc=state.n_acc + jnp.where(accepted, 1, 0).astype(jnp.int32),
             converged=jnp.array(False),
-            labels=p_cur, e_last=e_cur)
+            labels=p_cur, e_last=e_cur, carry=carry)
         return new_state, accepted, e_cur
 
     new_state, accepted, e_cur = jax.lax.cond(converged, _finish, _full,
-                                              operand=None)
+                                              carry)
     return new_state, converged, accepted, e_cur
 
 
 def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
-              ops: LloydOps = DENSE_OPS) -> KMeansResult:
-    """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d)."""
+              ops: Optional[LloydOps] = None,
+              backend: BackendLike = None) -> KMeansResult:
+    """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d).
+
+    ``backend`` selects the engine ("dense" | "blocked" | "pallas" |
+    "fused" | "hamerly", a Backend instance, or a distribute()-wrapped
+    one).  ``ops`` is the deprecated LloydOps injection point, adapted via
+    the shim when passed."""
+    bk = resolve_backend(backend, ops, cfg)
 
     def cond(state: _LoopState):
         return jnp.logical_and(~state.converged, state.t < cfg.max_iter)
 
     def body(state: _LoopState):
-        new_state, _, _, _ = _iteration(x, state, cfg, ops)
+        new_state, _, _, _ = _iteration(x, state, cfg, bk)
         return new_state
 
-    state = _init_state(x, c0, cfg, ops)
+    state = _init_state(x, c0, cfg, bk)
     state = jax.lax.while_loop(cond, body, state)
     # Iteration count convention of the paper's "a/b": b counts the initial
     # C^1 = G(C^0) plus every fully-executed loop body; the body that merely
@@ -186,8 +244,9 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
                         n_iter, state.n_acc, state.converged)
 
 
-def aa_kmeans_jit(x, c0, cfg: KMeansConfig, ops: LloydOps = DENSE_OPS):
-    fn = jax.jit(lambda xx, cc: aa_kmeans(xx, cc, cfg, ops))
+def aa_kmeans_jit(x, c0, cfg: KMeansConfig, ops: Optional[LloydOps] = None,
+                  backend: BackendLike = None):
+    fn = jax.jit(lambda xx, cc: aa_kmeans(xx, cc, cfg, ops, backend))
     return fn(x, c0)
 
 
@@ -205,21 +264,23 @@ class KMeansTrace(NamedTuple):
 
 
 def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
-                     ops: LloydOps = DENSE_OPS,
-                     jit_iteration: bool = True) -> KMeansTrace:
+                     ops: Optional[LloydOps] = None,
+                     jit_iteration: bool = True,
+                     backend: BackendLike = None) -> KMeansTrace:
     """Python-loop driver recording the statistics of Tables 2 and 3."""
+    bk = resolve_backend(backend, ops, cfg)
     iter_fn = _iteration
     if jit_iteration:
-        iter_fn = jax.jit(_iteration, static_argnames=("cfg", "ops"))
-    init_fn = jax.jit(_init_state, static_argnames=("cfg", "ops")) \
+        iter_fn = jax.jit(_iteration, static_argnames=("cfg", "backend"))
+    init_fn = jax.jit(_init_state, static_argnames=("cfg", "backend")) \
         if jit_iteration else _init_state
 
     t0 = time.perf_counter()
-    state = init_fn(x, c0, cfg, ops)
+    state = init_fn(x, c0, cfg, bk)
     energies, m_vals, acc = [], [], []
     converged = False
     while not converged and int(state.t) < cfg.max_iter:
-        state, conv, accepted, e_t = iter_fn(x, state, cfg, ops)
+        state, conv, accepted, e_t = iter_fn(x, state, cfg, bk)
         converged = bool(conv)
         if converged:
             break

@@ -137,7 +137,13 @@ def energy_from_mindist(min_sqdist: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class LloydOps:
-    """The three primitives Algorithm 1 needs, swappable per backend.
+    """DEPRECATED dependency-injection container (see DESIGN.md §Backends).
+
+    Superseded by `repro.core.backends.Backend`, whose single-pass
+    ``step()`` primitive lets the driver run one pass over X per accepted
+    iteration; separate assign/update call sites cannot express that.
+    Passing a LloydOps to the solvers still works — it is adapted through
+    `repro.core.backends.from_lloyd_ops` with the legacy two-pass cost.
 
     assign_fn(x, c)            -> AssignResult
     update_fn(x, labels, k, c) -> new centroids (K,d)

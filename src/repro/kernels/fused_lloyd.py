@@ -30,8 +30,8 @@ from repro.kernels.assignment import _pad_to
 DEFAULT_TN = 512
 
 
-def _fused_kernel(x_ref, c_ref, csq_ref, labels_ref, sums_ref, counts_ref,
-                  energy_ref):
+def _fused_kernel(x_ref, c_ref, csq_ref, labels_ref, mind_ref, sums_ref,
+                  counts_ref, energy_ref):
     i = pl.program_id(0)
 
     x = x_ref[...]                                   # (TN, d)
@@ -48,6 +48,7 @@ def _fused_kernel(x_ref, c_ref, csq_ref, labels_ref, sums_ref, counts_ref,
     labels = jnp.argmin(dist, axis=-1).astype(jnp.int32)
     mind = jnp.min(dist, axis=-1)
     labels_ref[...] = labels
+    mind_ref[...] = mind
 
     ks = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
     onehot = (labels[:, None] == ks).astype(jnp.float32)
@@ -74,7 +75,8 @@ def _fused_kernel(x_ref, c_ref, csq_ref, labels_ref, sums_ref, counts_ref,
 def fused_lloyd_pallas(x: jax.Array, c: jax.Array, *,
                        tn: int = DEFAULT_TN, interpret: bool = False):
     """Fused assignment+update+energy.  x (N,d), c (K,d) ->
-    (labels (N,) i32, sums (K,d) f32, counts (K,) f32, energy () f32).
+    (labels (N,) i32, min_sqdist (N,) f32, sums (K,d) f32, counts (K,) f32,
+    energy () f32).
 
     Requires K*d to fit in VMEM (checked by the ops.py dispatcher).
     Padded sample rows carry +0 contribution: their distances are computed
@@ -105,7 +107,7 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, *,
     # We pass padded rows as all-zero and post-subtract their contribution.
     n_pad = np_ - n
 
-    labels, sums, counts, energy = pl.pallas_call(
+    labels, mind, sums, counts, energy = pl.pallas_call(
         _fused_kernel,
         grid=(np_ // tn,),
         in_specs=[
@@ -115,12 +117,14 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, *,
         ],
         out_specs=[
             pl.BlockSpec((tn,), lambda i: (i,)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
             pl.BlockSpec((kp, dp), lambda i: (0, 0)),
             pl.BlockSpec((kp,), lambda i: (0,)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
             jax.ShapeDtypeStruct((kp, dp), jnp.float32),
             jax.ShapeDtypeStruct((kp,), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
@@ -135,5 +139,5 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, *,
         sums = sums  # zero rows add nothing to sums
         counts = counts.at[zlab].add(-jnp.float32(n_pad))
         energy = energy - jnp.float32(n_pad) * zmind
-    return (labels[:n], sums[:k, :d], counts[:k],
+    return (labels[:n], mind[:n], sums[:k, :d], counts[:k],
             energy[0, 0])

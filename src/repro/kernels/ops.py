@@ -6,28 +6,25 @@
     Python for correctness validation — the TPU lowering is exercised by the
     dry-run path.
 
-`pallas_lloyd_ops()` adapts the kernels to the `LloydOps` interface so
-Algorithm 1 (repro.core.kmeans) runs unchanged on top of them, and
-`fused_ops()` wires the fused single-pass kernel in as the beyond-paper
-optimised backend.
+The solver-facing integration lives in `repro.core.backends`
+(`get_backend("pallas" | "fused")`): the fused single-pass kernel is
+consumed through the step primitive, so Algorithm 1 reads X exactly once
+per accepted iteration.  `pallas_lloyd_ops()` remains as the deprecated
+LloydOps adapter for code still injecting assign/update separately.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends import fused_backend, pallas_backend  # noqa: F401
+from repro.core.backends.pallas import FUSED_MAX_KD            # noqa: F401
 from repro.core.lloyd import AssignResult, LloydOps, update_from_sums
 from repro.kernels import ref
 from repro.kernels.assignment import assignment_pallas
 from repro.kernels.fused_lloyd import fused_lloyd_pallas
 from repro.kernels.update import update_pallas
-
-# VMEM budget for holding the full centroid block in the fused kernel
-# (elements of C, f32): 2M elements = 8 MB, about half of one core's VMEM.
-FUSED_MAX_KD = 2 * 1024 * 1024
 
 
 def on_tpu() -> bool:
@@ -54,18 +51,31 @@ def cluster_update(x: jax.Array, labels: jax.Array, k: int, *,
 
 
 def fused_lloyd_step(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
-    """(labels, sums, counts, energy) in one X pass."""
+    """(labels, min_sqdist, sums, counts, energy) in one X pass."""
     if use_pallas:
         return fused_lloyd_pallas(x, c, interpret=_interpret())
     return ref.fused_lloyd_ref(x, c)
 
 
+def fused_step(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
+    """One full Lloyd iteration via the fused kernel:
+    returns (c_next, labels, energy)."""
+    labels, _, sums, counts, energy = fused_lloyd_step(
+        x, c, use_pallas=use_pallas)
+    c_next = update_from_sums(sums, counts, c.astype(sums.dtype))
+    return c_next.astype(c.dtype), labels, energy
+
+
 # ---------------------------------------------------------------------------
-# LloydOps adapters
+# Deprecated LloydOps adapter — prefer get_backend("pallas"/"fused")
 # ---------------------------------------------------------------------------
 
 def pallas_lloyd_ops() -> LloydOps:
-    """Algorithm-1 ops backed by the separate assignment/update kernels."""
+    """Algorithm-1 ops backed by the separate assignment/update kernels.
+
+    Deprecated: the step-driven solver consumes `pallas_backend()` /
+    `fused_backend()` directly (one pass per accepted iteration); this
+    container remains for callers injecting assign/update separately."""
 
     def assign_fn(x, c):
         labels, mind = assignment(x, c)
@@ -82,33 +92,3 @@ def pallas_lloyd_ops() -> LloydOps:
 
     return LloydOps(assign_fn=assign_fn, update_fn=update_fn,
                     energy_fn=energy_fn)
-
-
-class FusedGCache:
-    """The fused kernel computes assignment AND update in one pass; the
-    Algorithm-1 driver however consumes them at two separate call sites
-    (assign at line 3, update at line 16 after a possible revert).  The
-    driver stays kernel-agnostic; this thin cache lets the fused backend
-    reuse the pass when the accelerated iterate was accepted — exactly the
-    reuse argument of the paper's overhead analysis (Sec. 2.1 part ii)."""
-
-    def __init__(self):
-        self._key = None
-        self._val = None
-
-    def get(self, c):
-        if self._key is not None and self._key is c:
-            return self._val
-        return None
-
-    def put(self, c, val):
-        self._key, self._val = c, val
-
-
-def fused_step(x: jax.Array, c: jax.Array, *, use_pallas: bool = True):
-    """One full Lloyd iteration via the fused kernel:
-    returns (c_next, labels, energy)."""
-    labels, sums, counts, energy = fused_lloyd_step(x, c,
-                                                    use_pallas=use_pallas)
-    c_next = update_from_sums(sums, counts, c.astype(sums.dtype))
-    return c_next.astype(c.dtype), labels, energy

@@ -32,7 +32,7 @@ def update_ref(x: jax.Array, labels: jax.Array, k: int):
 
 def fused_lloyd_ref(x: jax.Array, c: jax.Array):
     """One fused Lloyd pass: assignment + cluster sums + counts + energy,
-    reading X exactly once.  -> (labels, sums, counts, energy)."""
+    reading X exactly once.  -> (labels, min_sqdist, sums, counts, energy)."""
     labels, mind = assignment_ref(x, c)
     sums, counts = update_ref(x, labels, c.shape[0])
-    return labels, sums, counts, jnp.sum(mind)
+    return labels, mind, sums, counts, jnp.sum(mind)

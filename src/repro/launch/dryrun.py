@@ -26,6 +26,7 @@ from pathlib import Path
 
 import jax
 
+from repro import compat
 from repro.configs.registry import ARCHS, get_config
 from repro.launch import steps as ST
 from repro.launch.mesh import make_production_mesh
@@ -184,7 +185,7 @@ _CAL_METRICS = ("flops", "bytes", "dot_flops")
 
 
 def _collect_costs(compiled):
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     _, wire, _ = parse_collectives(hlo)
     return {"flops": float(ca.get("flops", 0.0)),
@@ -268,7 +269,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         rec["time_compile_s"] = round(time.perf_counter() - t1, 2)
 
-        ca = compiled.cost_analysis() or {}
+        ca = compat.cost_analysis(compiled)
         rec["hlo_flops_per_device"] = float(ca.get("flops", 0.0))
         rec["hlo_bytes_per_device"] = float(ca.get("bytes accessed", 0.0))
         rec["memory"] = memory_dict(compiled)

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the single entry point local runs and CI share, so
+# the two stop diverging on environment setup.
+#
+#   ./test.sh              # full tier-1 suite
+#   ./test.sh -m 'not slow'  # skip the multi-device / launcher tests
+#
+# Notes:
+#   * PYTHONPATH=src — the package is not installed in the container.
+#   * XLA_FLAGS forces 8 virtual host devices so mesh-shaped code paths are
+#     exercised; tests that need a specific device count (test_distributed)
+#     spawn subprocesses that override XLA_FLAGS themselves.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
+# Containers with libtpu installed stall for minutes probing GCP instance
+# metadata unless the platform is pinned; override for real-TPU runs.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,37 @@
+"""Optional-`hypothesis` shim for the property-based tests.
+
+`hypothesis` is a dev-only dependency; a missing install must not kill
+collection of the deterministic cases.  Import `given` / `settings` / `st`
+from here instead of from `hypothesis`: when the real package is present
+they are re-exported unchanged; when it is absent the decorators turn each
+property test into a skip (via pytest.importorskip, so the skip reason
+names the missing package) while everything else in the module still
+collects and runs.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(_fn):
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = _fn.__name__
+            skipper.__doc__ = _fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; the value is never used."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -39,9 +39,10 @@ def test_update_kernel(n, d, k, rng):
 def test_fused_kernel(n, d, k, rng):
     x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
     c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
-    lf, sf, cf, ef = ops.fused_lloyd_step(x, c)
-    lr, sr, cr, er = ref.fused_lloyd_ref(x, c)
+    lf, mf, sf, cf, ef = ops.fused_lloyd_step(x, c)
+    lr, mr, sr, cr, er = ref.fused_lloyd_ref(x, c)
     assert (np.asarray(lf) == np.asarray(lr)).all()
+    np.testing.assert_allclose(mf, mr, rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(sf, sr, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(cf, cr, rtol=0, atol=1e-6)
     np.testing.assert_allclose(ef, er, rtol=1e-4)
@@ -57,8 +58,8 @@ def test_property_kernels_match_oracle(n, d, k, seed):
     la, _ = ops.assignment(x, c)
     lr, _ = ref.assignment_ref(x, c)
     assert (np.asarray(la) == np.asarray(lr)).all()
-    lf, sf, cf, ef = ops.fused_lloyd_step(x, c)
-    _, sr, cr, er = ref.fused_lloyd_ref(x, c)
+    lf, _, sf, cf, ef = ops.fused_lloyd_step(x, c)
+    _, _, sr, cr, er = ref.fused_lloyd_ref(x, c)
     np.testing.assert_allclose(sf, sr, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(ef, er, rtol=2e-4)
 
