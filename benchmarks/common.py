@@ -7,8 +7,12 @@ import time
 import jax
 
 
-def timed(fn, *args, warmup: int = 1, reps: int = 3):
-    """Median wall time of jitted fn (compile excluded via warmup)."""
+def timed(fn, *args, warmup: int = 1, reps: int = 3, reduce=None):
+    """Wall time of jitted fn (compile excluded via warmup).
+
+    ``reduce`` folds the per-rep times: default median; pass ``min`` for
+    comparisons on a contended box, where the minimum tracks the true
+    cost while medians wander with load."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -16,9 +20,24 @@ def timed(fn, *args, warmup: int = 1, reps: int = 3):
         t0 = time.perf_counter()
         out = jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
+    if reduce is not None:
+        return out, reduce(ts)
     ts.sort()
     return out, ts[len(ts) // 2]
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def traced_run(x, c0, cfg, backend="dense", warmup=True, **kwargs):
+    """`aa_kmeans_traced` for benchmark code, warm by default: the
+    warm-up pass compiles the init/iteration programs before the timer
+    starts, so the trace's ``wall_time_s`` is a Table-3-comparable
+    execution time rather than (compile + execute).  Pass warmup=False
+    when only the per-iteration statistics matter (m trace, acceptance
+    pattern) — they are timing-independent and the extra solve is then
+    wasted work."""
+    from repro.core.kmeans import aa_kmeans_traced
+    return aa_kmeans_traced(x, c0, cfg, backend=backend, warmup=warmup,
+                            **kwargs)

@@ -61,6 +61,13 @@ def main() -> None:
     except Exception:
         traceback.print_exc()
 
+    print("# === Batched engine: multi-restart + grid sweep ===", flush=True)
+    try:
+        from benchmarks import batched_sweep
+        batched_sweep.main(backend=args.backend)
+    except Exception:
+        traceback.print_exc()
+
     print("# === Kernel roofline (fused vs split Lloyd pass) ===",
           flush=True)
     try:

@@ -25,6 +25,15 @@ ratio r = (E^{t-1} - E^t) / (E^{t-2} - E^{t-1}),
     r > eps2  ->  m = min(m + 1, mbar)    # step effective, grow window
 
 with paper defaults eps1 = 0.02, eps2 = 0.5, mbar = 30, m0 = 2.
+
+Batching contract (DESIGN.md §Batching): every function here is vmap-safe
+over a leading problem axis — AAState leaves are fixed-shape arrays, the
+window solve is already a *masked* dense (mbar x mbar) system (no
+data-dependent shapes), and `_spd_solve`'s unrolled elimination batches
+as fused elementwise ops (unlike LAPACK-backed `jnp.linalg.solve`, which
+it replaced).  The batched driver (kmeans.aa_kmeans_batched) relies on
+this to run R independent Anderson windows inside one `lax.while_loop`;
+do not introduce value-dependent Python control flow here.
 """
 
 from __future__ import annotations
@@ -102,6 +111,29 @@ def adjust_m(state: AAState, e_curr: jax.Array, e_prev: jax.Array,
     return state._replace(m=m.astype(jnp.int32))
 
 
+def _spd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve a (n, n) SPD system with pure-XLA Gauss–Jordan elimination.
+
+    The window gram is symmetric positive definite by construction (A Aᵀ
+    over the active columns + relative ridge, identity rows elsewhere), so
+    elimination without pivoting is stable here.  A hand-rolled fori_loop
+    beats `jnp.linalg.solve` for this shape because the LAPACK custom
+    call costs ~200us of dispatch per (mbar, mbar) solve on CPU — per
+    *solver iteration* — and lowers to a per-matrix host loop when the
+    batched driver vmaps it; this formulation is a handful of fused
+    elementwise ops that batch for free."""
+    n = a.shape[-1]
+    aug = jnp.concatenate([a, b[:, None]], axis=-1)       # (n, n+1)
+    # n (= mbar) is static and small, so unroll: one fused kernel instead
+    # of an XLA while loop whose per-step dispatch would dominate.
+    for i in range(n):
+        pivot_row = aug[i] / aug[i, i]                    # (n+1,)
+        factors = aug[:, i]                               # (n,)
+        aug = aug - factors[:, None] * pivot_row[None, :]
+        aug = aug.at[i].set(pivot_row)
+    return aug[:, n]
+
+
 def _column_ages(state: AAState, mbar: int) -> jax.Array:
     """age[i] = how many steps ago buffer column i was written (1 = newest).
     Invalid columns get age > mbar."""
@@ -138,7 +170,7 @@ def aa_push_and_solve(state: AAState, f: jax.Array, g: jax.Array,
     # Identity rows/cols for inactive entries keep the solve well-posed.
     gram = jnp.where(active[:, None] & active[None, :], gram, 0.0) + \
         eye * jnp.where(active, lam, 1.0)
-    theta = jnp.linalg.solve(gram, rhs)
+    theta = _spd_solve(gram, rhs)
     theta = jnp.where(active, theta, 0.0)
 
     dg_mask = jnp.where(active[:, None], dG, 0.0)

@@ -7,7 +7,9 @@
 Thin, sklearn-shaped wrapper over Algorithm 1: multiple restarts (best
 energy wins), any seeding scheme from init_schemes, optional plain-Lloyd
 mode, optional mesh for the distributed solver.  All heavy work stays in
-the jit'd solvers.
+the jit'd solvers — ``fit`` runs every restart in ONE batched device
+program (kmeans.aa_kmeans_batched) with on-device best-of-R selection,
+and a mesh-fitted model keeps using its mesh for predict/transform.
 """
 
 from __future__ import annotations
@@ -17,12 +19,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.anderson import AAConfig
-from repro.core.distributed import make_distributed_kmeans, shard_dataset
-from repro.core.init_schemes import make_init
-from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
-                               resolve_backend)
+from repro.core.distributed import (make_distributed_kmeans_batched,
+                                    shard_dataset)
+from repro.core.init_schemes import batched_init
+from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans_batched,
+                               resolve_backend, select_best)
 
 
 @dataclasses.dataclass
@@ -35,6 +40,11 @@ class AAKMeans:
     m0: int = 2
     mbar: int = 30
     dynamic_m: bool = True
+    # Paper's Algorithm-1 thresholds / stabilisation — exposed so Table-2
+    # style eps sweeps run through the public estimator.
+    eps1: float = 0.02
+    eps2: float = 0.5
+    ridge: float = 1e-12
     seed: int = 0
     mesh: Optional[jax.sharding.Mesh] = None      # distributed when set
     data_axes: tuple = ("data",)
@@ -54,46 +64,84 @@ class AAKMeans:
             k=self.n_clusters, max_iter=self.max_iter,
             accelerated=self.accelerated,
             aa=AAConfig(m0=self.m0, mbar=self.mbar,
-                        dynamic_m=self.dynamic_m))
+                        dynamic_m=self.dynamic_m,
+                        eps1=self.eps1, eps2=self.eps2, ridge=self.ridge))
 
     def fit(self, x) -> "AAKMeans":
         x = jnp.asarray(x)
+        n = x.shape[0]
         cfg = self._config()
-        init_fn = make_init(self.init)
+        n_init = max(self.n_init, 1)
+        keys = jax.random.split(jax.random.PRNGKey(self.seed), n_init)
+        c0s = jnp.asarray(batched_init(self.init, keys, x, self.n_clusters))
         if self.mesh is not None:
-            fit_fn = make_distributed_kmeans(self.mesh, cfg, self.data_axes,
-                                             backend=self.backend)
-            x_sharded, _ = shard_dataset(x, self.mesh, self.data_axes)
+            fit_fn = make_distributed_kmeans_batched(
+                self.mesh, cfg, self.data_axes, backend=self.backend,
+                pick_best=True)
+            x_in, _ = shard_dataset(x, self.mesh, self.data_axes)
         else:
-            fit_fn = jax.jit(
-                lambda a, b: aa_kmeans(a, b, cfg, backend=self.backend))
-            x_sharded = x
-
-        best: Optional[KMeansResult] = None
-        key = jax.random.PRNGKey(self.seed)
-        for _ in range(max(self.n_init, 1)):
-            key, sub = jax.random.split(key)
-            c0 = jnp.asarray(init_fn(sub, x, self.n_clusters))
-            res = fit_fn(x_sharded, c0)
-            if best is None or float(res.energy) < float(best.energy):
-                best = res
+            fit_fn = jax.jit(lambda a, b: select_best(
+                aa_kmeans_batched(a, b, cfg, backend=self.backend)))
+            x_in = x
+        # ONE device program: R restarts solved in a batch, winner picked
+        # on device — n_init no longer multiplies dispatch/transfer cost.
+        best: KMeansResult = fit_fn(x_in, c0s)
         self.centroids_ = best.centroids
-        self.labels_ = best.labels[:x.shape[0]]
+        self.labels_ = best.labels[:n]
         self.energy_ = float(best.energy)
         self.n_iter_ = int(best.n_iter)
         self.n_accepted_ = int(best.n_accepted)
         return self
 
-    def predict(self, x) -> jax.Array:
+    # -- inference --------------------------------------------------------
+
+    def _assert_fitted(self):
         assert self.centroids_ is not None, "call fit() first"
+
+    def _mesh_apply(self, x, kind, fn):
+        """Run ``fn(x_local, centroids) -> per-row output`` under the fitted
+        mesh: rows sharded over data_axes, centroids replicated, padding
+        rows (added to match the shard count) stripped from the result.
+        The jitted shard_map program is cached per (model, kind) so a
+        serving loop pays compilation once."""
+        axes = tuple(self.data_axes)
+        x_sh, _ = shard_dataset(x, self.mesh, self.data_axes)
+        cache = self.__dict__.setdefault("_mesh_runners", {})
+        # keyed by everything the runner closes over, so refitting with a
+        # different mesh/backend/axes cannot reuse a stale program
+        cache_key = (kind, self.mesh, axes, self.backend)
+        run = cache.get(cache_key)
+        if run is None:
+            run = cache[cache_key] = jax.jit(compat.shard_map(
+                fn, mesh=self.mesh, in_specs=(P(axes), P()),
+                out_specs=P(axes)))
+        out = run(x_sh, jnp.asarray(self.centroids_))
+        return out[:x.shape[0]]
+
+    def predict(self, x) -> jax.Array:
+        """Nearest-centroid labels.  A mesh-fitted model assigns under the
+        same mesh/backend composition as ``fit`` — rows sharded over the
+        data axes, centroids replicated — instead of silently falling back
+        to a single-device pass over the full X (which defeats the point
+        of a distributed fit and breaks once N exceeds one device)."""
+        self._assert_fitted()
+        x = jnp.asarray(x)
         bk = resolve_backend(self.backend)
-        return bk.assign(jnp.asarray(x), self.centroids_).labels
+        if self.mesh is not None:
+            return self._mesh_apply(
+                x, "predict", lambda xl, c: bk.assign(xl, c).labels)
+        return bk.assign(x, self.centroids_).labels
 
     def transform(self, x) -> jax.Array:
-        """Distances to each centroid (N, K)."""
+        """Distances to each centroid (N, K); mesh-fitted models compute
+        the row block on each shard's local rows (K is replicated)."""
         from repro.core.lloyd import pairwise_sqdist
-        assert self.centroids_ is not None, "call fit() first"
-        return jnp.sqrt(pairwise_sqdist(jnp.asarray(x), self.centroids_))
+        self._assert_fitted()
+        x = jnp.asarray(x)
+        if self.mesh is not None:
+            return self._mesh_apply(
+                x, "transform", lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c)))
+        return jnp.sqrt(pairwise_sqdist(x, self.centroids_))
 
     @property
     def inertia_(self) -> float:

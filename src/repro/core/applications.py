@@ -1,25 +1,29 @@
 """LM-stack applications of the paper's solver (DESIGN.md §Arch-applicability).
 
-1. `kv_codebook` / `compress_kv_cache` — per-layer K-Means codebooks over
-   cached K/V vectors: serving-time cache compression (store int codes +
-   (K, hd) codebooks instead of raw vectors).  The clustering problem is
-   exactly Eq. (1) over N = B*T*Hkv vectors in R^{hd}, solved with
-   Algorithm 1.
+1. `kv_codebook` / `kv_codebooks_batched` / `compress_kv_cache` — per-layer
+   K-Means codebooks over cached K/V vectors: serving-time cache compression
+   (store int codes + (K, hd) codebooks instead of raw vectors).  The
+   clustering problem is exactly Eq. (1) over N = B*T*Hkv vectors in R^{hd},
+   solved with Algorithm 1.  Every same-shape group of tensors (the K and V
+   caches, or many layers' caches) is solved as ONE batched device program
+   (kmeans.aa_kmeans_batched) instead of a Python loop of solves — the
+   serving path's concurrency lever.
 2. `embedding_codebook` — product-quantisation of embedding tables: split
-   the d dims into sub-blocks, AA-KMeans per sub-block.
-3. Both report the quantities the paper's tables track (iterations,
+   the d dims into sub-blocks, AA-KMeans over all sub-blocks in one batch.
+3. All report the quantities the paper's tables track (iterations,
    acceptance rate, MSE) so the LM-side usage doubles as an evaluation of
    the solver on realistic non-synthetic inputs.
 """
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import KMeansConfig, aa_kmeans
+from repro.core.kmeans import (KMeansConfig, aa_kmeans, aa_kmeans_batched)
 from repro.core.init_schemes import kmeanspp_init
 
 
@@ -33,6 +37,34 @@ def kv_codebook(vectors: jax.Array, k: int, *, key=None,
     return res.centroids, res.labels, res
 
 
+# Module-level so the jit cache persists across calls: a serving loop
+# compressing cache after cache pays trace+compile once per (shape, k,
+# max_iter, backend), not once per request.
+@partial(jax.jit, static_argnames=("k", "max_iter", "backend"))
+def _codebooks_solve(vectors, key, k, max_iter, backend):
+    v32 = vectors.astype(jnp.float32)
+    keys = jax.random.split(key, v32.shape[0])
+    c0s = jax.vmap(lambda kk, vv: kmeanspp_init(kk, vv, k))(keys, v32)
+    return aa_kmeans_batched(v32, c0s, KMeansConfig(k=k, max_iter=max_iter),
+                             backend=backend)
+
+
+def kv_codebooks_batched(vectors: jax.Array, k: int, *, key=None,
+                         max_iter: int = 60, backend=None):
+    """Cluster B same-shape vector sets (B, N, d) in ONE device program.
+
+    Seeding (vmapped K-Means++ over a keys axis) and the B solves all run
+    inside a single jit call; per-problem convergence is masked, so early
+    finishers do not stall the batch.  Returns (codebooks (B,k,d),
+    codes (B,N), res) with a leading problem axis on every leaf."""
+    if vectors.ndim != 3:
+        raise ValueError(
+            f"kv_codebooks_batched expects (B, N, d); got {vectors.shape}")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    res = _codebooks_solve(vectors, key, k, max_iter, backend)
+    return res.centroids, res.labels, res
+
+
 def compress_kv_cache(cache: dict, k: int, valid_len: int) -> Tuple[dict, float]:
     """Replace the K/V caches with their codebook reconstruction.
 
@@ -40,52 +72,69 @@ def compress_kv_cache(cache: dict, k: int, valid_len: int) -> Tuple[dict, float]
     reconstruction error over the valid prefix — the serving-quality
     proxy.  A production path would store (codes, codebook) and gather at
     attention time; here we materialise the reconstruction so the decode
-    step is unchanged."""
-    def one(x):
-        # x: (..., T, Hkv, hd) — cluster the valid prefix vectors per tensor
+    step is unchanged.  The K and V tensors (same shape by construction)
+    are clustered as one batched solve rather than two sequential ones."""
+    names = [n for n in ("k", "v") if n in cache]
+    new_cache = dict(cache)
+    if not names:
+        return new_cache, 0.0
+
+    def flatten(x):
+        # x: (..., T, Hkv, hd) — the valid prefix vectors of one tensor
+        hd = x.shape[-1]
+        return x[..., :valid_len, :, :].reshape(-1, hd)
+
+    if len({cache[n].shape for n in names}) == 1:
+        # the common (MHA/GQA) layout: K and V share a shape, so both
+        # clustering problems solve as one batched program
+        stacked = jnp.stack([flatten(cache[n]) for n in names])  # (B,N,hd)
+        cbs, codes, _ = kv_codebooks_batched(stacked, k)
+        solved = {n: (cbs[i], codes[i]) for i, n in enumerate(names)}
+    else:
+        # asymmetric caches (e.g. MLA-style differing head dims) cannot
+        # share a batch; cluster each tensor independently as before
+        solved = {}
+        for n in names:
+            cb, cd, _ = kv_codebook(flatten(cache[n]), k)
+            solved[n] = (cb, cd)
+
+    errs = []
+    for n in names:
+        x = cache[n]
+        cb, cd = solved[n]
         lead = x.shape[:-3]
-        t, hkv, hd = x.shape[-3:]
-        v = x[..., :valid_len, :, :].reshape(-1, hd)
-        cb, codes, _ = kv_codebook(v, k)
-        rec = cb[codes].reshape(*lead, valid_len, hkv, hd).astype(x.dtype)
+        hkv, hd = x.shape[-2], x.shape[-1]
+        rec = cb[cd].reshape(*lead, valid_len, hkv, hd).astype(x.dtype)
         err = (jnp.linalg.norm((rec - x[..., :valid_len, :, :])
                                .astype(jnp.float32))
                / jnp.maximum(jnp.linalg.norm(
                    x[..., :valid_len, :, :].astype(jnp.float32)), 1e-9))
-        out = x.at[..., :valid_len, :, :].set(rec)
-        return out, err
-
-    new_cache = dict(cache)
-    errs = []
-    for key_name in ("k", "v"):
-        if key_name in cache:
-            new_cache[key_name], e = one(cache[key_name])
-            errs.append(e)
-    err = float(jnp.mean(jnp.stack(errs))) if errs else 0.0
-    return new_cache, err
+        new_cache[n] = x.at[..., :valid_len, :, :].set(rec)
+        errs.append(err)
+    return new_cache, float(jnp.mean(jnp.stack(errs)))
 
 
 def embedding_codebook(table: jax.Array, k: int, n_subspaces: int = 4,
                        key=None, max_iter: int = 60):
     """Product quantisation of an embedding table (V, d).
 
+    All ``n_subspaces`` sub-block clusterings solve as one batched program
+    (the sub-blocks share (V, d/n_subspaces) and K — the (R, N, d)
+    problem-axis case of the batched engine).
+
     Returns (codebooks (n_sub, k, d/n_sub), codes (V, n_sub), rel_err)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     v, d = table.shape
     assert d % n_subspaces == 0
     sub = d // n_subspaces
-    t32 = table.astype(jnp.float32).reshape(v, n_subspaces, sub)
-    cbs, codes = [], []
-    for j in range(n_subspaces):
-        key, k1 = jax.random.split(key)
-        block = t32[:, j, :]
-        c0 = kmeanspp_init(k1, block, k)
-        res = aa_kmeans(block, c0, KMeansConfig(k=k, max_iter=max_iter))
-        cbs.append(res.centroids)
-        codes.append(res.labels)
-    cbs = jnp.stack(cbs)                      # (n_sub, k, sub)
-    codes = jnp.stack(codes, axis=1)          # (V, n_sub)
+    # (n_sub, V, sub): one clustering problem per subspace
+    blocks = table.astype(jnp.float32).reshape(v, n_subspaces, sub) \
+        .transpose(1, 0, 2)
+    cbs, codes_b, _ = kv_codebooks_batched(blocks, k, key=key,
+                                           max_iter=max_iter)
+    codes = codes_b.T                          # (V, n_sub)
     rec = jnp.stack([cbs[j][codes[:, j]] for j in range(n_subspaces)], 1)
+    t32 = blocks.transpose(1, 0, 2)
     err = float(jnp.linalg.norm(rec - t32)
                 / jnp.maximum(jnp.linalg.norm(t32), 1e-9))
     return cbs, codes, err

@@ -22,6 +22,15 @@ backend keeps its distance bounds there so bound-based skipping survives
 across iterations — including non-Lloyd centroid moves (AA steps, reverts),
 whose bound update only needs the centroid drift since the previous step.
 
+Carry vmap contract (DESIGN.md §Batching): the batched driver
+(kmeans.aa_kmeans_batched) maps ``step`` over a leading restart/problem
+axis, so a carry must be a pytree of fixed-shape arrays (or empty
+containers) whose shapes depend only on (N, K, d) — never on data values —
+and ``init_carry``/``step`` must be traceable under ``jax.vmap``.  The
+driver freezes a converged restart's carry with a leaf-wise select, so a
+carry must also tolerate being held constant while other restarts advance
+(true for anything that is pure state, e.g. the Hamerly bounds).
+
 Orthogonal axes, composable by construction:
 
     local compute — which backend (dense / blocked / pallas / fused /
@@ -118,6 +127,14 @@ class Backend:
     name: str
     # (x, c, k, carry) -> (StepResult, carry): ONE logical pass over X.
     step_fn: Callable = None
+    # Optional natively-batched step: (x, cs, k, carries) -> (StepResult
+    # with a leading R axis, carries), where cs is (R, K, d) and x is
+    # (N, d) shared or (R, N, d) per-problem.  The batched driver prefers
+    # this over jax.vmap(step_fn) when set — a hand-batched formulation
+    # can share the X stream across restarts and use matmul cluster stats
+    # where the vmapped scatter would serialise.  Must match step_fn's
+    # semantics per row (same labels/energy up to reduction order).
+    batched_step_fn: Optional[Callable] = None
     # (x, labels, k) -> (sums, counts): partial stats of a known assignment
     # (the update half of G; used by the derived update op and by
     # distribute's psum wrapping).
@@ -141,6 +158,15 @@ class Backend:
 
     def step(self, x, c, k, carry=()):
         return self.step_fn(x, c, k, carry)
+
+    def batched_step(self, x, cs, k, carries, x_batched: bool = False):
+        """R restarts' steps at once; falls back to vmapping ``step``.
+        ``x_batched`` marks x as (R, N, d) rather than shared (N, d)."""
+        if self.batched_step_fn is not None:
+            return self.batched_step_fn(x, cs, k, carries)
+        return jax.vmap(lambda xx, cc, cr: self.step_fn(xx, cc, k, cr),
+                        in_axes=(0 if x_batched else None, 0, 0))(
+                            x, cs, carries)
 
     def init_carry(self, x, c, k):
         return self.init_carry_fn(x, c, k)
@@ -239,6 +265,23 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
             counts=jax.lax.psum(res.counts, axes),
             energy=jax.lax.psum(res.energy, axes)), carry
 
+    # The local batched step (when present) must be re-wrapped so its
+    # (R, K, d+1)-stats psum too — one collective covers all R restarts.
+    # Leaving the inherited local batched_step_fn in place would silently
+    # skip the reduction; when the local backend has none, None makes the
+    # batched driver fall back to vmapping the psum-wrapped step above.
+    if backend.batched_step_fn is not None:
+        def batched_step_fn(x, cs, k, carries):
+            res, carries = backend.batched_step_fn(x, cs, k, carries)
+            return StepResult(
+                labels=res.labels,
+                min_sqdist=res.min_sqdist,
+                sums=jax.lax.psum(res.sums, axes),
+                counts=jax.lax.psum(res.counts, axes),
+                energy=jax.lax.psum(res.energy, axes)), carries
+    else:
+        batched_step_fn = None
+
     def stats_fn(x, labels, k):
         sums, counts = backend.stats_fn(x, labels, k)
         return jax.lax.psum(sums, axes), jax.lax.psum(counts, axes)
@@ -253,7 +296,8 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
     return dataclasses.replace(
         backend,
         name=f"{backend.name}@{'x'.join(axes)}",
-        step_fn=step_fn, stats_fn=stats_fn, energy_fn=energy_fn,
+        step_fn=step_fn, batched_step_fn=batched_step_fn,
+        stats_fn=stats_fn, energy_fn=energy_fn,
         all_equal_fn=all_equal_fn,
         reduce_scalar=lambda s: jax.lax.psum(s, axes),
         axes=axes)
@@ -320,5 +364,13 @@ def instrument(backend: Backend, on_step: Callable[[], None]) -> Backend:
         jax.debug.callback(lambda: on_step())
         return backend.step_fn(x, c, k, carry)
 
+    if backend.batched_step_fn is not None:
+        def batched_step_fn(x, cs, k, carries):
+            jax.debug.callback(lambda: on_step())
+            return backend.batched_step_fn(x, cs, k, carries)
+    else:
+        batched_step_fn = None
+
     return dataclasses.replace(backend, name=f"{backend.name}+count",
-                               step_fn=step_fn)
+                               step_fn=step_fn,
+                               batched_step_fn=batched_step_fn)

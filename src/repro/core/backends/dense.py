@@ -12,6 +12,7 @@ kernel's N-tiling, for datasets where N*K exceeds memory.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import lloyd
@@ -56,9 +57,53 @@ def _step(precision: Precision, block_n: int = 0):
     return step_fn
 
 
+def _batched_step(precision: Precision):
+    """Natively-batched dense step for the multi-restart driver.
+
+    Semantics match ``_step`` per restart row; the formulation differs in
+    two performance-critical ways: (1) the distance cross-terms for ALL
+    R centroid sets come from one einsum that reads the shared X stream
+    once, and (2) cluster stats use a one-hot matmul instead of R vmapped
+    segment-sums — the scatter path serialises badly when batched.  Sums
+    therefore accumulate in matmul reduction order (last-ulp differences
+    vs the sequential scatter; same class as psum reordering).
+
+    Memory contract: peak footprint is two (R, N, K) buffers (distances
+    and the one-hot) — R times the sequential path's single (N, K).  When
+    R*N*K approaches device memory, use the blocked backend: its vmapped
+    fallback bounds the distance intermediate at (R, block_n, K) per
+    step and never materialises a one-hot (DESIGN.md §Batching)."""
+    def batched_step_fn(x, cs, k, carries):
+        # x: (N, d) shared or (R, N, d); cs: (R, K, d)
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(cs)
+        c_sq = jnp.sum(cc * cc, axis=-1)                       # (R, K)
+        x_sq = jnp.sum(xc * xc, axis=-1)                       # (N,)|(R,N)
+        if x.ndim == 2:
+            cross = jnp.einsum("nd,rkd->rnk", xc, cc)
+            x_term = x_sq[None, :, None]
+        else:
+            cross = jnp.einsum("rnd,rkd->rnk", xc, cc)
+            x_term = x_sq[:, :, None]
+        d2 = jnp.maximum(x_term - 2.0 * cross + c_sq[:, None, :], 0.0)
+        labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)     # (R, N)
+        mind = jnp.min(d2, axis=-1).astype(precision.accum_dtype)
+        onehot = jax.nn.one_hot(labels, k, dtype=precision.accum_dtype)
+        xa = x.astype(precision.accum_dtype)
+        if x.ndim == 2:
+            sums = jnp.einsum("rnk,nd->rkd", onehot, xa)
+        else:
+            sums = jnp.einsum("rnk,rnd->rkd", onehot, xa)
+        counts = jnp.sum(onehot, axis=1)                       # (R, K)
+        return StepResult(labels, mind, sums, counts,
+                          jnp.sum(mind, axis=-1)), carries
+    return batched_step_fn
+
+
 def dense_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     return Backend(name="dense",
                    step_fn=_step(precision),
+                   batched_step_fn=_batched_step(precision),
                    stats_fn=_stats(precision),
                    assign_fn=lloyd.assign,
                    precision=precision)

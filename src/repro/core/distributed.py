@@ -37,7 +37,8 @@ from repro import compat
 from repro.core import lloyd
 from repro.core.backends import Backend, distribute
 from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
-                               resolve_backend)
+                               aa_kmeans_batched, resolve_backend,
+                               select_best)
 from repro.core.lloyd import LloydOps
 
 
@@ -84,15 +85,7 @@ def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
     used as-is provided its axes match ``data_axes``.
     """
     axes = tuple(data_axes)
-    local = resolve_backend(backend, cfg=cfg, block_n=block_n)
-    if local.axes:
-        if local.axes != axes:
-            raise ValueError(
-                f"backend {local.name!r} is distributed over {local.axes} "
-                f"but the solver reduces over {axes}")
-        ops = local
-    else:
-        ops = distribute(local, axes)
+    ops = _resolve_distributed(backend, cfg, block_n, axes)
     x_spec = P(axes)           # shard rows over all data axes
     rep = P()
 
@@ -112,6 +105,61 @@ def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
         x = jax.lax.with_sharding_constraint(x, x_sharding)
         c0 = jax.lax.with_sharding_constraint(c0, rep_sharding)
         return _run(x, c0)
+
+    return fit
+
+
+def _resolve_distributed(backend, cfg, block_n, axes):
+    local = resolve_backend(backend, cfg=cfg, block_n=block_n)
+    if local.axes:
+        if local.axes != axes:
+            raise ValueError(
+                f"backend {local.name!r} is distributed over {local.axes} "
+                f"but the solver reduces over {axes}")
+        return local
+    return distribute(local, axes)
+
+
+def make_distributed_kmeans_batched(mesh: jax.sharding.Mesh,
+                                    cfg: KMeansConfig,
+                                    data_axes: Sequence[str] = ("data",),
+                                    block_n: int = 0,
+                                    backend: Union[str, Backend,
+                                                   None] = None,
+                                    pick_best: bool = False):
+    """Batched multi-restart solver on a mesh: one program, R restarts.
+
+    Returns ``fit(x, c0s) -> KMeansResult`` where x is (N, d) sharded over
+    ``data_axes``, c0s is (R, K, d) replicated, and the result carries a
+    leading R axis (labels: (R, N), rows sharded).  Inside shard_map the
+    *batched* driver vmaps the distributed backend, so each loop body does
+    one psum of (R, K, d+1)-sized stats — R restarts cost one collective,
+    not R.  ``pick_best=True`` adds on-device best-of-R selection, making
+    the whole multi-restart fit a single device program.
+    """
+    axes = tuple(data_axes)
+    ops = _resolve_distributed(backend, cfg, block_n, axes)
+    x_spec = P(axes)
+    rep = P()
+    lab_spec = P(None, axes)      # (R, N): restart axis replicated
+
+    @functools.partial(
+        compat.shard_map, mesh=mesh,
+        in_specs=(x_spec, rep),
+        out_specs=KMeansResult(centroids=rep, labels=lab_spec, energy=rep,
+                               n_iter=rep, n_accepted=rep, converged=rep))
+    def _run(x_local, c0s):
+        return aa_kmeans_batched(x_local, c0s, cfg, backend=ops)
+
+    x_sharding = NamedSharding(mesh, x_spec)
+    rep_sharding = NamedSharding(mesh, rep)
+
+    @jax.jit
+    def fit(x, c0s):
+        x = jax.lax.with_sharding_constraint(x, x_sharding)
+        c0s = jax.lax.with_sharding_constraint(c0s, rep_sharding)
+        res = _run(x, c0s)
+        return select_best(res) if pick_best else res
 
     return fit
 

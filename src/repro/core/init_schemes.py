@@ -22,8 +22,25 @@ import jax.numpy as jnp
 from repro.core.lloyd import assign, pairwise_sqdist
 
 
+def _validate_seeding(x: jax.Array, k: int, scheme: str) -> None:
+    """Reject degenerate requests with a clear error instead of the opaque
+    gather/concatenate failures the schemes otherwise die with.  Shape-only,
+    so it is safe at trace time (inside jit and under vmap)."""
+    if x.ndim < 2:
+        raise ValueError(
+            f"{scheme}: x must be (N, d); got shape {tuple(x.shape)}")
+    n = x.shape[0]
+    if k < 1:
+        raise ValueError(f"{scheme}: need at least one cluster; got k={k}")
+    if k > n:
+        raise ValueError(
+            f"{scheme}: cannot seed k={k} centroids from only n={n} "
+            f"samples; need k <= n")
+
+
 def random_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     """Uniformly sample K distinct rows of X."""
+    _validate_seeding(x, k, "random_init")
     idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
     return x[idx]
 
@@ -31,6 +48,7 @@ def random_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
 @partial(jax.jit, static_argnames=("k",))
 def kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
     """K-Means++: D^2-weighted sequential sampling."""
+    _validate_seeding(x, k, "kmeanspp_init")
     n = x.shape[0]
     key, sub = jax.random.split(key)
     first = jax.random.randint(sub, (), 0, n)
@@ -57,6 +75,7 @@ def afkmc2_init(key: jax.Array, x: jax.Array, k: int,
                 chain_length: int = 100) -> jax.Array:
     """Assumption-free K-MC^2 (Bachem et al. 2016): MCMC approximation of
     K-Means++ using a D^2+uniform proposal distribution."""
+    _validate_seeding(x, k, "afkmc2_init")
     n = x.shape[0]
     key, sub = jax.random.split(key)
     first = jax.random.randint(sub, (), 0, n)
@@ -105,6 +124,7 @@ def bf_init(key: jax.Array, x: jax.Array, k: int, n_subsets: int = 10,
     """Bradley & Fayyad 1998 refinement: run K-Means on J random subsamples,
     then cluster the union of the J solutions and return the best seed set."""
     from repro.core.kmeans import KMeansConfig, aa_kmeans
+    _validate_seeding(x, k, "bf_init")
     n = x.shape[0]
     subset = max(k * 2, int(n * subset_frac))
     subset = min(subset, n)
@@ -143,6 +163,11 @@ def clarans_init(key: jax.Array, x: jax.Array, k: int,
     swaps on a sample for scalability).  Python loop over jitted swap
     evaluations — initialisation cost, not part of the timed solver.
     """
+    _validate_seeding(x, k, "clarans_init")
+    if num_local < 1:
+        raise ValueError(
+            f"clarans_init: num_local must be >= 1 (got {num_local}); "
+            f"zero local searches would yield no medoid set at all")
     n = x.shape[0]
     key, sub = jax.random.split(key)
     if n > sample_n:
@@ -189,9 +214,37 @@ INIT_SCHEMES = {
     "clarans": clarans_init,
 }
 
+# Schemes whose whole computation is jit-able, hence vmap-safe over a keys
+# axis; bf's subset solves and clarans's swap-acceptance loop run host-side
+# Python, so batched_init falls back to stacking per-key results for them.
+VMAP_SAFE_INITS = frozenset({"random", "kmeans++", "afk-mc2"})
+
 
 def make_init(name: str):
     if name not in INIT_SCHEMES:
         raise ValueError(f"unknown init scheme {name!r}; "
                          f"choose from {sorted(INIT_SCHEMES)}")
     return INIT_SCHEMES[name]
+
+
+def batched_init(name: str, keys: jax.Array, x: jax.Array,
+                 k: int) -> jax.Array:
+    """Seed R restarts at once: (R, 2) keys -> (R, K, d) centroid stacks.
+
+    ``x`` is (N, d) shared across restarts, or (R, N, d) one dataset per
+    problem.  Vmap-safe schemes produce the whole stack in one traced
+    computation (feeding the batched solver without a host round-trip);
+    the host-loop schemes (bf, clarans) are looped and stacked, which is
+    semantically identical — seeding cost only, never solver cost."""
+    fn = make_init(name)
+    x_axis = 0 if x.ndim == 3 else None
+    if x_axis == 0 and x.shape[0] != keys.shape[0]:
+        raise ValueError(
+            f"batched x has {x.shape[0]} problems but got "
+            f"{keys.shape[0]} keys")
+    if name in VMAP_SAFE_INITS:
+        return jax.vmap(lambda kk, xx: fn(kk, xx, k),
+                        in_axes=(0, x_axis))(keys, x)
+    seeds = [fn(keys[i], x if x_axis is None else x[i], k)
+             for i in range(keys.shape[0])]
+    return jnp.stack([jnp.asarray(s) for s in seeds])

@@ -30,3 +30,48 @@ def test_estimator_plain_lloyd_mode():
     maa = AAKMeans(n_clusters=4, accelerated=True, seed=4).fit(x)
     mll = AAKMeans(n_clusters=4, accelerated=False, seed=4).fit(x)
     assert abs(maa.energy_ - mll.energy_) / mll.energy_ < 0.02
+
+
+def test_estimator_threshold_params_reach_aa_config():
+    """eps1/eps2/ridge must thread through to AAConfig — they were
+    silently dropped, making Table-2-style threshold sweeps through the
+    public API no-ops."""
+    m = AAKMeans(n_clusters=3, eps1=0.07, eps2=0.9, ridge=1e-8,
+                 m0=4, mbar=12, dynamic_m=False)
+    aa = m._config().aa
+    assert aa.eps1 == 0.07 and aa.eps2 == 0.9 and aa.ridge == 1e-8
+    assert aa.m0 == 4 and aa.mbar == 12 and aa.dynamic_m is False
+    # and they must change solver behaviour end-to-end: an eps2 of -inf
+    # grows m on every defined ratio, an eps1 above any ratio shrinks it;
+    # both must still converge to the same quality
+    x = make_blobs(600, 4, 4, seed=1, spread=4.0)
+    e_grow = AAKMeans(n_clusters=4, eps2=-1e9, seed=0).fit(x).energy_
+    e_shrink = AAKMeans(n_clusters=4, eps1=1e9, seed=0).fit(x).energy_
+    assert abs(e_grow - e_shrink) / e_shrink < 0.02
+
+
+def test_estimator_predict_uses_fitted_mesh():
+    """Regression: predict/transform on a mesh-fitted model must route
+    through the mesh (sharded rows, replicated centroids), not silently
+    run a bare single-device assign — and must agree with the local
+    result.  A 1-device mesh exercises the exact code path in-process;
+    the multi-device behaviour rides the same shard_map contract as
+    fit (tests/test_distributed.py)."""
+    import jax
+    from repro import compat
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = make_blobs(1000, 5, 4, seed=6, spread=3.0)
+    mm = AAKMeans(n_clusters=4, n_init=2, seed=1, mesh=mesh).fit(x)
+    ml = AAKMeans(n_clusters=4, n_init=2, seed=1).fit(x)
+    np.testing.assert_allclose(float(mm.energy_), float(ml.energy_),
+                               rtol=1e-5)
+    # odd-length query exercises the padding-strip path too
+    q = x[:333]
+    np.testing.assert_array_equal(np.asarray(mm.predict(q)),
+                                  np.asarray(ml.predict(q)))
+    np.testing.assert_allclose(np.asarray(mm.transform(q)),
+                               np.asarray(ml.transform(q)), rtol=1e-5)
+    assert mm.predict(q).shape == (333,)
+    assert mm.transform(q).shape == (333, 4)

@@ -113,6 +113,43 @@ def test_bf_and_clarans_init():
     assert c2.shape == (5, 4) and bool(jnp.isfinite(c2).all())
 
 
+@pytest.mark.parametrize("init_fn", [random_init, kmeanspp_init,
+                                     afkmc2_init, bf_init, clarans_init])
+def test_init_schemes_reject_k_greater_than_n(init_fn):
+    """Degenerate request k > n must fail with a clear ValueError, not an
+    opaque gather/choice error (or, for clarans, a silent None)."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 3)),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="k <= n"):
+        init_fn(jax.random.PRNGKey(0), x, 9)
+    with pytest.raises(ValueError, match="at least one cluster"):
+        init_fn(jax.random.PRNGKey(0), x, 0)
+
+
+def test_clarans_rejects_zero_num_local():
+    """clarans_init(num_local=0) used to fall through its restart loop
+    and return None."""
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((64, 3)),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="num_local"):
+        clarans_init(jax.random.PRNGKey(0), x, 4, num_local=0)
+
+
+def test_traced_warmup_excludes_compile_time():
+    """warmup=True must compile before the timer starts: the warm trace's
+    wall time may not exceed the cold trace's (which includes jit) and
+    the statistics must be unchanged."""
+    x, c0 = _data(seed=9)
+    cfg = KMeansConfig(k=7, max_iter=300)
+    cold = aa_kmeans_traced(x, c0, cfg)
+    warm = aa_kmeans_traced(x, c0, cfg, warmup=True)
+    assert int(warm.result.n_iter) == int(cold.result.n_iter)
+    assert warm.energies == pytest.approx(cold.energies, rel=1e-6)
+    # compile time is orders of magnitude above a warm solve here; 2x
+    # slack keeps the assertion robust on a noisy CI box
+    assert warm.wall_time_s <= cold.wall_time_s * 2.0
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(50, 400), d=st.integers(1, 12), k=st.integers(2, 8),
        seed=st.integers(0, 10_000))
