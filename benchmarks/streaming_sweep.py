@@ -1,0 +1,222 @@
+"""Streaming sweep: mini-batch AA vs full-batch AA vs mini-batch Lloyd.
+
+    PYTHONPATH=src python -m benchmarks.streaming_sweep            # quality
+    PYTHONPATH=src python -m benchmarks.streaming_sweep --big      # + OOM demo
+
+Two measurements:
+
+1. quality — synthetic Gaussians that fit on device.  Full-batch AA
+   (same seed centroids) establishes the reference final energy and its
+   samples-read budget: ``(2t − n_acc)·N`` by the pass-count model the
+   instrumented backend test pins (one pass per accepted iteration, two
+   per revert).  Each mini-batch arm (AA and plain Lloyd, identical
+   chunking/guard protocol) then runs epoch by epoch; after every epoch
+   the current guard-picked centroids are priced on the FULL dataset (a
+   measurement pass, not counted as samples read), and we record the
+   samples read — chunk rows plus the validation rows the guard touches —
+   when the arm first comes within ``--target`` (default 2%) of the
+   full-batch final energy.  Acceptance: mini-batch AA reaches 2% with
+   <= 50% of full-batch AA's samples.
+
+2. --big — an N where the full-batch solver cannot allocate X on a
+   device with ``--device-mem-mb`` of memory (the X buffer alone plus
+   the (N, K) distance intermediate overflow it).  X is generated in
+   host memory and streamed chunk by chunk (`host_chunk_stream` -> one
+   jit'd chunk step per chunk), so the peak device footprint stays at
+   O(chunk + val); the full-batch arm is reported infeasible rather
+   than run.
+
+The module is import-safe at small sizes; tests/test_minibatch.py runs
+``main(smoke=True)`` under the slow marker.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.backends import backend_names
+from repro.core.init_schemes import kmeanspp_init
+from repro.core.kmeans import KMeansConfig, aa_kmeans, resolve_backend
+from repro.core.minibatch import (MiniBatchConfig, guard_pick,
+                                  minibatch_init, minibatch_iteration,
+                                  run_epoch)
+from repro.data.streaming import (chunk_dataset, host_chunk_stream,
+                                  split_validation)
+from repro.data.synthetic import make_blobs
+
+
+def _full_energy_fn(x, k, backend):
+    bk = resolve_backend(backend)
+    # init_carry, not (): carry-bearing backends (hamerly) unpack it
+    return jax.jit(
+        lambda c: bk.step(x, c, k, bk.init_carry(x, c, k))[0].energy)
+
+
+def _samples_to_target(x_train, x_price, x_val, c0, cfg, target_energy,
+                       rel_target, backend, max_epochs, seed, label,
+                       verbose):
+    """Run one mini-batch arm epoch by epoch until its guard-picked
+    centroids price within target on ``x_price`` — the SAME full dataset
+    the target energy was computed on (pricing on the train split alone
+    would deflate the energy sum by the held-out fraction and flatter
+    the arm).  Returns (samples_read, full_energy, epochs_used) —
+    epochs_used = max_epochs+1 marks a miss."""
+    bk = resolve_backend(backend)
+    dc = chunk_dataset(x_train, cfg.chunk_size)
+    n_chunks, b = dc.weights.shape
+    v = x_val.shape[0]
+    epoch_fn = jax.jit(run_epoch, static_argnames=("cfg", "backend"))
+    pick_fn = jax.jit(guard_pick, static_argnames=("cfg", "backend"))
+    e_full_fn = _full_energy_fn(x_price, cfg.k, backend)
+
+    state = minibatch_init(c0, cfg, bk)
+    key = jax.random.PRNGKey(seed)
+    samples = 0
+    e_now = float("inf")
+    for epoch in range(1, max_epochs + 1):
+        key, sub = jax.random.split(key)
+        state, _ = epoch_fn(dc.chunks, dc.weights, x_val, state,
+                            cfg=cfg, backend=bk, key=sub)
+        # every chunk step reads its B chunk rows plus the V validation
+        # rows the guard prices both candidates on (one shared-X pass)
+        samples += n_chunks * (b + v)
+        c_now, _, _, _ = pick_fn(x_val, state, cfg=cfg, backend=bk)
+        e_now = float(e_full_fn(c_now))
+        if verbose:
+            print(f"  {label} epoch {epoch}: full-X E {e_now:12.1f} "
+                  f"({e_now / target_energy - 1:+.2%} vs target base), "
+                  f"samples {samples}", flush=True)
+        if e_now <= target_energy * (1.0 + rel_target):
+            return samples, e_now, epoch
+    return samples, e_now, max_epochs + 1
+
+
+def quality_comparison(n=100_000, d=16, k=20, chunk=8192, val=2048,
+                       decay=0.9, seed=0, backend="dense", max_epochs=12,
+                       rel_target=0.02, verbose=True):
+    """Samples-read-to-quality: full-batch AA vs mini-batch AA vs
+    mini-batch Lloyd, all from the same seed centroids and all priced on
+    the same full dataset.  (Full-batch trains on all N rows; the
+    mini-batch arms train on N - val of them, holding ``val`` rows out
+    for the guard — the small training handicap goes against the
+    mini-batch arms, so the criterion is conservative.)"""
+    x = jnp.asarray(make_blobs(n, d, k, seed=seed, spread=3.0))
+    x_train, x_val = split_validation(x, val, jax.random.PRNGKey(seed))
+    c0 = kmeanspp_init(jax.random.PRNGKey(seed + 1), x[:4 * chunk], k)
+
+    full = jax.jit(lambda a, b: aa_kmeans(
+        a, b, KMeansConfig(k=k, max_iter=500), backend=backend))(x, c0)
+    t, n_acc = int(full.n_iter), int(full.n_accepted)
+    full_samples = (2 * t - n_acc) * n          # pass-count model
+    e_full = float(full.energy)
+    if verbose:
+        print(f"full-batch AA: E {e_full:12.1f}  iters {t} "
+              f"(acc {n_acc})  samples {full_samples}", flush=True)
+
+    out = {"full": {"energy": e_full, "samples": full_samples,
+                    "n_iter": t}}
+    for label, accelerated in (("minibatch-aa", True),
+                               ("minibatch-lloyd", False)):
+        cfg = MiniBatchConfig(k=k, chunk_size=chunk, decay=decay,
+                              accelerated=accelerated)
+        s, e, ep = _samples_to_target(x_train, x, x_val, c0, cfg, e_full,
+                                      rel_target, backend, max_epochs,
+                                      seed + 2, label, verbose)
+        out[label] = {"energy": e, "samples": s, "epochs": ep,
+                      "ratio": s / full_samples,
+                      "reached": ep <= max_epochs}
+        if verbose:
+            flag = "OK" if ep <= max_epochs else "MISS"
+            print(f"{label}: within {rel_target:.0%} after {s} samples "
+                  f"({s / full_samples:.2f}x full-batch) [{flag}]",
+                  flush=True)
+    return out
+
+
+def big_streaming_demo(n=4_000_000, d=16, k=20, chunk=65_536, val=8192,
+                       device_mem_mb=192, epochs=2, seed=0,
+                       backend="dense", verbose=True):
+    """Stream an X that cannot sit on a --device-mem-mb device.
+
+    Full-batch needs the (N, d) buffer plus the (N, K) distance
+    intermediate resident at once; streaming needs one chunk plus the
+    validation chunk.  X itself is generated into host memory and only
+    ever touched one chunk at a time.
+    """
+    full_bytes = n * d * 4 + n * k * 4
+    budget = device_mem_mb * 2**20
+    stream_bytes = (chunk + val) * d * 4 + chunk * k * 4
+    assert full_bytes > budget, (
+        f"--big demo expects full-batch ({full_bytes >> 20} MB) to "
+        f"overflow the {device_mem_mb} MB budget; raise N")
+    assert stream_bytes < budget
+    if verbose:
+        print(f"--big: N={n} d={d} K={k} | full-batch needs "
+              f"{full_bytes >> 20} MB > {device_mem_mb} MB budget -> "
+              f"infeasible; streaming peaks at {stream_bytes >> 20} MB",
+              flush=True)
+
+    x = make_blobs(n, d, k, seed=seed, spread=3.0)      # host memory only
+    bk = resolve_backend(backend)
+    cfg = MiniBatchConfig(k=k, chunk_size=chunk)
+    x_val = jnp.asarray(x[:val])
+    c0 = kmeanspp_init(jax.random.PRNGKey(seed), x_val, k)
+    step_fn = jax.jit(minibatch_iteration,
+                      static_argnames=("cfg", "backend"))
+    state = minibatch_init(c0, cfg, bk)
+    steps = 0
+    for chunk_np in host_chunk_stream(x[val:], chunk, epochs=epochs,
+                                      seed=seed, drop_remainder=True):
+        xc = jnp.asarray(chunk_np)
+        w = jnp.ones((xc.shape[0],), jnp.float32)
+        state, trace = step_fn(xc, w, x_val, state, cfg=cfg, backend=bk)
+        steps += 1
+        if verbose and steps % 16 == 0:
+            print(f"  step {steps}: val E {float(trace.e_val):12.1f}",
+                  flush=True)
+    c_fin, e_fin, _, _ = guard_pick(x_val, state, cfg, bk)
+    if verbose:
+        print(f"--big: {steps} chunk steps, final val E {float(e_fin):.1f} "
+              f"(per-val-sample {float(e_fin) / val:.3f})", flush=True)
+    return {"steps": steps, "val_energy": float(e_fin),
+            "full_bytes": full_bytes, "stream_bytes": stream_bytes}
+
+
+def main(smoke=False, big=False, backend="dense", rel_target=0.02,
+         verbose=True, **kwargs):
+    if smoke:
+        kwargs = dict(n=20_000, d=8, k=8, chunk=2048, val=1024,
+                      max_epochs=10, **kwargs)
+    q = quality_comparison(backend=backend, rel_target=rel_target,
+                           verbose=verbose, **kwargs)
+    print(csv_row("streaming_sweep.full_samples", q["full"]["samples"]))
+    print(csv_row("streaming_sweep.minibatch_aa_samples",
+                  q["minibatch-aa"]["samples"],
+                  f"ratio={q['minibatch-aa']['ratio']:.2f}x"))
+    print(csv_row("streaming_sweep.minibatch_lloyd_samples",
+                  q["minibatch-lloyd"]["samples"],
+                  f"ratio={q['minibatch-lloyd']['ratio']:.2f}x"))
+    out = {"quality": q}
+    if big:
+        out["big"] = big_streaming_demo(backend=backend, verbose=verbose)
+        print(csv_row("streaming_sweep.big_steps", out["big"]["steps"],
+                      f"val_energy={out['big']['val_energy']:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="dense",
+                    choices=sorted(backend_names()))
+    ap.add_argument("--target", type=float, default=0.02,
+                    help="relative energy target vs full-batch final")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--big", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke, big=args.big, backend=args.backend,
+         rel_target=args.target)

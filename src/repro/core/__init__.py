@@ -2,27 +2,33 @@
 
 Public surface:
     AAKMeans              — sklearn-shaped estimator (batched multi-restart)
+    MiniBatchAAKMeans     — streaming estimator (partial_fit / chunked fit)
     aa_kmeans             — jit-able Algorithm 1 (lax.while_loop)
     aa_kmeans_batched     — R restarts/problems in one device program
+    aa_kmeans_minibatch   — streaming chunked driver (DESIGN.md §Streaming)
     select_best           — on-device best-of-R selection
     aa_kmeans_traced      — instrumented driver (per-iteration stats)
     lloyd_kmeans          — classical Lloyd baseline
     hamerly_kmeans        — Hamerly-bound Lloyd baseline
-    KMeansConfig/AAConfig — solver configuration
-    make_distributed_kmeans / make_distributed_kmeans_batched
+    KMeansConfig/AAConfig/MiniBatchConfig — solver configuration
+    make_distributed_kmeans / make_distributed_kmeans_batched /
+    make_distributed_kmeans_minibatch
                           — shard_map multi-pod solvers
     get_backend/distribute/Precision — composable step-primitive engine
                             (DESIGN.md §Backends)
 """
 
 from repro.core.anderson import AAConfig                       # noqa: F401
-from repro.core.api import AAKMeans                            # noqa: F401
+from repro.core.api import AAKMeans, MiniBatchAAKMeans         # noqa: F401
 from repro.core.backends import (Backend, Precision,           # noqa: F401
                                  StepResult, distribute, get_backend)
 from repro.core.distributed import (make_distributed_kmeans,   # noqa: F401
-                                    make_distributed_kmeans_batched)
+                                    make_distributed_kmeans_batched,
+                                    make_distributed_kmeans_minibatch)
 from repro.core.hamerly import hamerly_kmeans                  # noqa: F401
 from repro.core.kmeans import (KMeansConfig, aa_kmeans,        # noqa: F401
-                               aa_kmeans_batched, aa_kmeans_traced,
-                               select_best)
+                               aa_kmeans_batched, aa_kmeans_minibatch,
+                               aa_kmeans_traced, select_best)
 from repro.core.lloyd import lloyd_kmeans                      # noqa: F401
+from repro.core.minibatch import (MiniBatchConfig,             # noqa: F401
+                                  MiniBatchResult)

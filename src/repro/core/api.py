@@ -1,15 +1,24 @@
 """Top-level estimator API for the paper's solver.
 
-    from repro.core.api import AAKMeans
+    from repro.core.api import AAKMeans, MiniBatchAAKMeans
     model = AAKMeans(n_clusters=10, init="kmeans++", n_init=3).fit(x)
     labels = model.predict(x_new)
 
-Thin, sklearn-shaped wrapper over Algorithm 1: multiple restarts (best
-energy wins), any seeding scheme from init_schemes, optional plain-Lloyd
-mode, optional mesh for the distributed solver.  All heavy work stays in
-the jit'd solvers — ``fit`` runs every restart in ONE batched device
-program (kmeans.aa_kmeans_batched) with on-device best-of-R selection,
-and a mesh-fitted model keeps using its mesh for predict/transform.
+    stream = MiniBatchAAKMeans(n_clusters=10, chunk_size=8192)
+    stream.fit(x)                       # X on device, chunked epochs
+    stream2 = MiniBatchAAKMeans(n_clusters=10, chunk_size=8192)
+    stream2.partial_fit(x_big[:8192])   # seeds centroids + carves val rows
+    for chunk in host_chunk_stream(x_big[8192:], 8192, epochs=3):
+        stream2.partial_fit(chunk)      # X never fully on device
+    stream2.finalize()
+    # (streaming the FULL x_big for several epochs would re-feed the
+    #  carved validation rows as training data from epoch 2 on — feed the
+    #  first chunk once and epoch only over the remainder, as above)
+
+Thin, sklearn-shaped wrappers: `AAKMeans` over the batched multi-restart
+full-batch solver, `MiniBatchAAKMeans` over the streaming chunked solver
+(DESIGN.md §Streaming).  All heavy work stays in the jit'd solvers, and a
+mesh-fitted model keeps using its mesh for predict/transform.
 """
 
 from __future__ import annotations
@@ -19,15 +28,43 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.anderson import AAConfig
 from repro.core.distributed import (make_distributed_kmeans_batched,
+                                    make_distributed_kmeans_minibatch,
                                     shard_dataset)
-from repro.core.init_schemes import batched_init
-from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans_batched,
+from repro.core.init_schemes import batched_init, make_init
+from repro.core.kmeans import (KMeansConfig, KMeansResult,
+                               aa_kmeans_batched, aa_kmeans_minibatch,
                                resolve_backend, select_best)
+from repro.core.minibatch import (MiniBatchConfig, guard_pick,
+                                  minibatch_init, minibatch_iteration)
+from repro.data.streaming import (chunk_dataset, shard_count,
+                                  split_validation)
+
+
+def _mesh_rows_apply(model, x, kind, fn):
+    """Run ``fn(x_local, centroids) -> per-row output`` under a fitted
+    model's mesh: rows sharded over its data axes, centroids replicated,
+    padding rows (added to match the shard count) stripped from the
+    result.  The jitted shard_map program is cached on the model per
+    (kind, mesh, axes, backend), so a serving loop pays compilation once
+    and refitting with a different composition cannot reuse a stale
+    program."""
+    axes = tuple(model.data_axes)
+    x_sh, _ = shard_dataset(x, model.mesh, model.data_axes)
+    cache = model.__dict__.setdefault("_mesh_runners", {})
+    cache_key = (kind, model.mesh, axes, model.backend)
+    run = cache.get(cache_key)
+    if run is None:
+        run = cache[cache_key] = jax.jit(compat.shard_map(
+            fn, mesh=model.mesh, in_specs=(P(axes), P()),
+            out_specs=P(axes)))
+    out = run(x_sh, jnp.asarray(model.centroids_))
+    return out[:x.shape[0]]
 
 
 @dataclasses.dataclass
@@ -99,24 +136,7 @@ class AAKMeans:
         assert self.centroids_ is not None, "call fit() first"
 
     def _mesh_apply(self, x, kind, fn):
-        """Run ``fn(x_local, centroids) -> per-row output`` under the fitted
-        mesh: rows sharded over data_axes, centroids replicated, padding
-        rows (added to match the shard count) stripped from the result.
-        The jitted shard_map program is cached per (model, kind) so a
-        serving loop pays compilation once."""
-        axes = tuple(self.data_axes)
-        x_sh, _ = shard_dataset(x, self.mesh, self.data_axes)
-        cache = self.__dict__.setdefault("_mesh_runners", {})
-        # keyed by everything the runner closes over, so refitting with a
-        # different mesh/backend/axes cannot reuse a stale program
-        cache_key = (kind, self.mesh, axes, self.backend)
-        run = cache.get(cache_key)
-        if run is None:
-            run = cache[cache_key] = jax.jit(compat.shard_map(
-                fn, mesh=self.mesh, in_specs=(P(axes), P()),
-                out_specs=P(axes)))
-        out = run(x_sh, jnp.asarray(self.centroids_))
-        return out[:x.shape[0]]
+        return _mesh_rows_apply(self, x, kind, fn)
 
     def predict(self, x) -> jax.Array:
         """Nearest-centroid labels.  A mesh-fitted model assigns under the
@@ -142,6 +162,241 @@ class AAKMeans:
             return self._mesh_apply(
                 x, "transform", lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c)))
         return jnp.sqrt(pairwise_sqdist(x, self.centroids_))
+
+    @property
+    def inertia_(self) -> float:
+        return self.energy_
+
+
+@dataclasses.dataclass
+class MiniBatchAAKMeans:
+    """Streaming mini-batch AA K-Means estimator (DESIGN.md §Streaming).
+
+    Two consumption modes over the same chunk-step state machine:
+
+      * ``fit(x, chunk_size=...)`` — X fits on device (or on the mesh):
+        a random ``val_size`` validation chunk is held out for the energy
+        guard, the rest is chunked, and one jit'd program runs every
+        epoch (`kmeans.aa_kmeans_minibatch`; the distributed driver when
+        ``mesh`` is set).
+      * ``partial_fit(chunk)`` — X never fits on device: feed host chunks
+        one at a time (`repro.data.streaming.host_chunk_stream`); the
+        first call carves its leading rows into the validation chunk and
+        seeds the centroids, each later call is one jit'd chunk step.
+        Keep chunk lengths uniform to avoid re-jitting, and when making
+        multiple epochs, re-stream only the rows AFTER the first chunk
+        (see the module docstring) so the carved validation rows stay
+        held out — re-feeding them would bias the guard energies
+        optimistic.
+
+    After ``fit``, ``centroids_`` is the final validation-guard-picked
+    iterate and ``energy_`` its total *validation-chunk* energy (full-X
+    energy is deliberately never computed — that is the point of the
+    streaming solver).  During a ``partial_fit`` sequence, ``centroids_``
+    tracks the running-stats fallback iterate (always safe) while
+    ``energy_`` is the guard's most recent pricing — of the iterate that
+    *entered* the last chunk step, i.e. one step behind ``centroids_``
+    (the guard is the only val pass per step; pricing the exit iterate
+    would cost a second).  ``finalize()`` reprices the current iterates
+    and applies the guard pick, making the pair consistent.
+    """
+    n_clusters: int
+    chunk_size: int = 4096
+    epochs: int = 5
+    decay: float = 0.9
+    val_size: int = 1024
+    init: str = "kmeans++"
+    accelerated: bool = True
+    m0: int = 2
+    mbar: int = 30
+    dynamic_m: bool = True
+    eps1: float = 0.02
+    eps2: float = 0.5
+    ridge: float = 1e-12
+    seed: int = 0
+    compute_labels: bool = True      # fit() labels the input like sklearn
+    mesh: Optional[jax.sharding.Mesh] = None
+    data_axes: tuple = ("data",)
+    backend: object = "dense"
+
+    # fitted state
+    centroids_: Optional[jax.Array] = None
+    labels_: Optional[jax.Array] = None
+    energy_: Optional[float] = None
+    n_steps_: Optional[int] = None
+    n_accepted_: Optional[int] = None
+
+    # streaming state (partial_fit)
+    _state: object = dataclasses.field(default=None, repr=False)
+    _x_val: object = dataclasses.field(default=None, repr=False)
+    _step_fn: object = dataclasses.field(default=None, repr=False)
+
+    def _config(self, chunk_size: Optional[int] = None) -> MiniBatchConfig:
+        return MiniBatchConfig(
+            k=self.n_clusters,
+            chunk_size=chunk_size or self.chunk_size,
+            epochs=self.epochs, decay=self.decay,
+            accelerated=self.accelerated,
+            aa=AAConfig(m0=self.m0, mbar=self.mbar,
+                        dynamic_m=self.dynamic_m,
+                        eps1=self.eps1, eps2=self.eps2, ridge=self.ridge))
+
+    def _val_rows(self, n: int) -> int:
+        v = min(self.val_size, max(n // 4, self.n_clusters))
+        if self.mesh is not None:
+            v -= v % shard_count(self.mesh, self.data_axes)
+        if v < 1:
+            raise ValueError(
+                f"cannot carve a validation chunk from N={n} rows "
+                f"(val_size={self.val_size})")
+        return v
+
+    def fit(self, x, chunk_size: Optional[int] = None) -> "MiniBatchAAKMeans":
+        x = jnp.asarray(x)
+        cfg = self._config(chunk_size)
+        if x.shape[0] < 2 * self.n_clusters:
+            raise ValueError(f"need at least {2 * self.n_clusters} rows to "
+                             f"fit k={self.n_clusters}; got {x.shape[0]}")
+        # a fit supersedes any partial_fit stream in progress — otherwise a
+        # later partial_fit/finalize would advance the abandoned stream and
+        # silently overwrite this fit's results
+        self._state = self._x_val = None
+        k_val, k_init, k_run = jax.random.split(
+            jax.random.PRNGKey(self.seed), 3)
+        x_train, x_val = split_validation(x, self._val_rows(x.shape[0]),
+                                          k_val)
+        # split_validation permutes rows, so the head is a uniform sample.
+        n_seed = min(x_train.shape[0], max(cfg.chunk_size, 4096))
+        c0 = make_init(self.init)(k_init, x_train[:n_seed], self.n_clusters)
+        dc = chunk_dataset(x_train, cfg.chunk_size, mesh=self.mesh,
+                           data_axes=self.data_axes)
+        if self.mesh is not None:
+            fit_fn = make_distributed_kmeans_minibatch(
+                self.mesh, cfg, self.data_axes, backend=self.backend)
+            x_val, _ = shard_dataset(x_val, self.mesh, self.data_axes)
+            res = fit_fn(dc.chunks, dc.weights, x_val, c0, k_run)
+        else:
+            run = jax.jit(lambda ch, w, xv, c, key: aa_kmeans_minibatch(
+                ch, w, xv, c, cfg, backend=self.backend, key=key))
+            res = run(dc.chunks, dc.weights, x_val, c0, k_run)
+        self.centroids_ = res.centroids
+        self.energy_ = float(res.energy)
+        self.n_steps_ = int(res.n_steps)
+        self.n_accepted_ = int(res.n_accepted)
+        self.labels_ = self.predict(x) if self.compute_labels else None
+        return self
+
+    # -- streaming ---------------------------------------------------------
+
+    def partial_fit(self, chunk) -> "MiniBatchAAKMeans":
+        """One chunk step; device memory never holds more than this chunk
+        plus the validation chunk.  Updates ``centroids_`` to the fresh
+        running-stats iterate and ``energy_`` to the guard's pricing of
+        the previous one (see the class docstring; ``finalize()`` makes
+        them consistent)."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "partial_fit streams from one host; for mesh execution "
+                "use fit() / make_distributed_kmeans_minibatch")
+        x = jnp.asarray(chunk)
+        cfg = self._config()
+        bk = resolve_backend(self.backend)
+        if self._state is None:
+            if x.shape[0] < 2 * self.n_clusters:
+                raise ValueError(
+                    f"the first partial_fit chunk seeds the solver and "
+                    f"must have >= {2 * self.n_clusters} rows; got "
+                    f"{x.shape[0]}")
+            # uniform carve (like fit's split_validation), not the raw
+            # head: datasets are often stored sorted, and a val chunk
+            # covering only the leading cluster would bias every guard
+            # decision
+            k_val, k_init = jax.random.split(jax.random.PRNGKey(self.seed))
+            x, self._x_val = split_validation(
+                x, self._val_rows(x.shape[0]), k_val)
+            c0 = make_init(self.init)(k_init, x, self.n_clusters)
+            self._state = minibatch_init(c0, cfg, bk)
+        if self._step_fn is None:
+            self._step_fn = jax.jit(minibatch_iteration,
+                                    static_argnames=("cfg", "backend"))
+        w = jnp.ones((x.shape[0],), jnp.float32)
+        self._state, trace = self._step_fn(x, w, self._x_val, self._state,
+                                           cfg=cfg, backend=bk)
+        # device scalars, deliberately not float()/int()-converted: a host
+        # sync per chunk would serialise the streaming loop (the next
+        # chunk's H2D transfer could no longer overlap this step's
+        # compute).  fit()/finalize() store Python floats.
+        self.centroids_ = self._state.c_au
+        self.energy_ = trace.e_val
+        self.n_steps_ = self._state.t
+        self.n_accepted_ = self._state.n_acc
+        return self
+
+    def finalize(self) -> "MiniBatchAAKMeans":
+        """Validation-guard pick between the accelerated candidate and the
+        running-stats fallback after a partial_fit sequence (fit() applies
+        it automatically)."""
+        if self._state is None:
+            raise ValueError("no streaming state; call partial_fit first")
+        cfg = self._config()
+        bk = resolve_backend(self.backend)
+        c_fin, e_fin, _, _ = guard_pick(self._x_val, self._state, cfg, bk)
+        self.centroids_ = c_fin
+        self.energy_ = float(e_fin)
+        return self
+
+    # -- inference ---------------------------------------------------------
+
+    def _assert_fitted(self):
+        assert self.centroids_ is not None, \
+            "call fit() or partial_fit() first"
+
+    def _chunked_apply(self, x, kind, fn, out_dtype, out_cols=None,
+                       chunk_size=None):
+        """Apply ``fn(x_chunk, centroids) -> per-row output`` chunk by
+        chunk so the device footprint stays bounded for host-sized X;
+        the result stays a HOST (numpy) array for the same reason — an
+        (N, K) transform of a host-sized X would not fit back on device.
+        The jitted fn is cached per (kind, backend) — a serving loop pays
+        tracing once, like the mesh runners."""
+        cache = self.__dict__.setdefault("_local_runners", {})
+        run = cache.get((kind, self.backend))
+        if run is None:
+            run = cache[(kind, self.backend)] = jax.jit(fn)
+        step = chunk_size or self.chunk_size
+        n = x.shape[0]
+        c = jnp.asarray(self.centroids_)
+        shape = (n,) if out_cols is None else (n, out_cols)
+        out = np.empty(shape, out_dtype)
+        for i in range(0, n, step):
+            out[i:i + step] = np.asarray(run(jnp.asarray(x[i:i + step]), c))
+        return out
+
+    def predict(self, x, chunk_size: Optional[int] = None):
+        """Nearest-centroid labels, computed chunk by chunk into a host
+        array (bounded device footprint); mesh-fitted models assign under
+        the fitted mesh instead."""
+        self._assert_fitted()
+        bk = resolve_backend(self.backend)
+        label_fn = lambda xl, c: bk.assign(xl, c).labels  # noqa: E731
+        if self.mesh is not None:
+            return _mesh_rows_apply(self, jnp.asarray(x), "predict",
+                                    label_fn)
+        return self._chunked_apply(x, "predict", label_fn, np.int32,
+                                   chunk_size=chunk_size)
+
+    def transform(self, x, chunk_size: Optional[int] = None):
+        """Distances to each centroid (N, K), chunked like predict into
+        a host array."""
+        from repro.core.lloyd import pairwise_sqdist
+        self._assert_fitted()
+        dist_fn = lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c))  # noqa: E731
+        if self.mesh is not None:
+            return _mesh_rows_apply(self, jnp.asarray(x), "transform",
+                                    dist_fn)
+        return self._chunked_apply(x, "transform", dist_fn, np.float32,
+                                   out_cols=self.n_clusters,
+                                   chunk_size=chunk_size)
 
     @property
     def inertia_(self) -> float:

@@ -7,6 +7,12 @@
                           precision=Precision(jnp.bfloat16))  # precision
     ops = distribute(backend, ("pod", "data"))           # any mesh
 
+Step slots per backend: ``step`` (one pass over X), ``batched_step``
+(R restarts at once), ``minibatch_step`` (weighted chunk pass for the
+streaming solver; DESIGN.md §Streaming).  tests/test_conformance.py pins
+every registered backend x slot x precision against the kernels/ref.py
+oracle.
+
 Registered backends:
 
     dense    — jnp reference semantics (the oracle; legacy DENSE_OPS math)

@@ -135,6 +135,13 @@ class Backend:
     # where the vmapped scatter would serialise.  Must match step_fn's
     # semantics per row (same labels/energy up to reduction order).
     batched_step_fn: Optional[Callable] = None
+    # Optional weighted step for streaming chunks (DESIGN.md §Streaming):
+    # (x, c, k, w, carry) -> (StepResult, carry), where w (N,) >= 0 scales
+    # each row's contribution to sums/counts/energy (w = 0 marks a padding
+    # row).  labels and min_sqdist stay per-row and unweighted.  When None,
+    # ``minibatch_step`` falls back to step_fn for the assignment plus one
+    # weighted segment-sum over the chunk to reweight the stats.
+    minibatch_step_fn: Optional[Callable] = None
     # (x, labels, k) -> (sums, counts): partial stats of a known assignment
     # (the update half of G; used by the derived update op and by
     # distribute's psum wrapping).
@@ -167,6 +174,26 @@ class Backend:
         return jax.vmap(lambda xx, cc, cr: self.step_fn(xx, cc, k, cr),
                         in_axes=(0 if x_batched else None, 0, 0))(
                             x, cs, carries)
+
+    def minibatch_step(self, x, c, k, w, carry=()):
+        """Weighted single pass over a chunk (DESIGN.md §Streaming).
+
+        Row weights ``w`` scale each row's contribution to the cluster
+        stats and the energy — the remainder-padded rows of a streaming
+        chunk carry w = 0 and vanish from every reduction.  Chunk contents
+        change between calls, so a data-dependent carry (e.g. Hamerly
+        bounds, which are per-row state of *this* chunk's rows) must be
+        re-initialised per chunk by the caller; the returned carry is only
+        meaningful while the same chunk is re-stepped."""
+        if self.minibatch_step_fn is not None:
+            return self.minibatch_step_fn(x, c, k, w, carry)
+        res, carry = self.step_fn(x, c, k, carry)
+        wa = w.astype(res.sums.dtype)
+        sums, counts = lloyd.weighted_cluster_sums(
+            x.astype(res.sums.dtype), res.labels, wa, k)
+        energy = jnp.sum(res.min_sqdist.astype(res.energy.dtype) * wa)
+        return StepResult(res.labels, res.min_sqdist, sums, counts,
+                          energy), carry
 
     def init_carry(self, x, c, k):
         return self.init_carry_fn(x, c, k)
@@ -282,6 +309,21 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
     else:
         batched_step_fn = None
 
+    # The streaming chunk step reduces exactly like the full step: one
+    # (K,(d+1))-stat psum plus the scalar chunk energy per chunk — the
+    # only communication of the streaming solver (DESIGN.md §Streaming).
+    # Wrapping the *method* (not the field) keeps the generic weighted
+    # fallback local-then-reduced even for backends without a native
+    # minibatch_step_fn.
+    def minibatch_step_fn(x, c, k, w, carry):
+        res, carry = backend.minibatch_step(x, c, k, w, carry)
+        return StepResult(
+            labels=res.labels,
+            min_sqdist=res.min_sqdist,
+            sums=jax.lax.psum(res.sums, axes),
+            counts=jax.lax.psum(res.counts, axes),
+            energy=jax.lax.psum(res.energy, axes)), carry
+
     def stats_fn(x, labels, k):
         sums, counts = backend.stats_fn(x, labels, k)
         return jax.lax.psum(sums, axes), jax.lax.psum(counts, axes)
@@ -297,6 +339,7 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
         backend,
         name=f"{backend.name}@{'x'.join(axes)}",
         step_fn=step_fn, batched_step_fn=batched_step_fn,
+        minibatch_step_fn=minibatch_step_fn,
         stats_fn=stats_fn, energy_fn=energy_fn,
         all_equal_fn=all_equal_fn,
         reduce_scalar=lambda s: jax.lax.psum(s, axes),
@@ -371,6 +414,17 @@ def instrument(backend: Backend, on_step: Callable[[], None]) -> Backend:
     else:
         batched_step_fn = None
 
+    # A native minibatch step is a pass over the chunk; without one the
+    # fallback routes through the counted step_fn above, so chunk passes
+    # are counted either way.
+    if backend.minibatch_step_fn is not None:
+        def minibatch_step_fn(x, c, k, w, carry):
+            jax.debug.callback(lambda: on_step())
+            return backend.minibatch_step_fn(x, c, k, w, carry)
+    else:
+        minibatch_step_fn = None
+
     return dataclasses.replace(backend, name=f"{backend.name}+count",
                                step_fn=step_fn,
-                               batched_step_fn=batched_step_fn)
+                               batched_step_fn=batched_step_fn,
+                               minibatch_step_fn=minibatch_step_fn)

@@ -57,6 +57,24 @@ def _step(precision: Precision, block_n: int = 0):
     return step_fn
 
 
+def _minibatch_step(precision: Precision, block_n: int = 0):
+    """Natively-weighted step for streaming chunks: one pass computes the
+    assignment and folds the row weights straight into sums/counts/energy
+    — the generic fallback pays a second segment-sum for the reweighting."""
+    def minibatch_step_fn(x, c, k, w, carry):
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(c)
+        res = _blocked_assign(xc, cc, block_n)
+        acc = precision.accum_dtype
+        wa = w.astype(acc)
+        mind = res.min_sqdist.astype(acc)
+        sums, counts = lloyd.weighted_cluster_sums(x.astype(acc), res.labels,
+                                                   wa, k)
+        return StepResult(res.labels, mind, sums, counts,
+                          jnp.sum(mind * wa)), carry
+    return minibatch_step_fn
+
+
 def _batched_step(precision: Precision):
     """Natively-batched dense step for the multi-restart driver.
 
@@ -104,6 +122,7 @@ def dense_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     return Backend(name="dense",
                    step_fn=_step(precision),
                    batched_step_fn=_batched_step(precision),
+                   minibatch_step_fn=_minibatch_step(precision),
                    stats_fn=_stats(precision),
                    assign_fn=lloyd.assign,
                    precision=precision)
@@ -116,6 +135,8 @@ def blocked_backend(block_n: int = 4096,
 
     return Backend(name=f"blocked{block_n}",
                    step_fn=_step(precision, block_n=block_n),
+                   minibatch_step_fn=_minibatch_step(precision,
+                                                     block_n=block_n),
                    stats_fn=_stats(precision),
                    assign_fn=assign_fn,
                    precision=precision)

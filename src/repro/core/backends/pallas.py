@@ -5,8 +5,9 @@
 two X passes per step — the path for K*d too large to hold C fully in VMEM.
 
 `fused` consumes `fused_lloyd_pallas`: distances, argmin, cluster stats and
-energy in ONE physical pass over X (the kernel holds C in VMEM, valid for
-K*d <= FUSED_MAX_KD elements).  Under the step-driven solver an accepted
+energy in ONE physical pass over X (the kernel holds C in VMEM, valid while
+the K*d centroid block fits the FUSED_VMEM_BYTES budget at the compute
+dtype's byte width).  Under the step-driven solver an accepted
 Algorithm-1 iteration therefore costs exactly one X read — the paper's
 Sec-2.1 cost model realised on hardware.  `fused_backend` falls back to the
 two-kernel step when K*d exceeds the VMEM budget.
@@ -27,9 +28,14 @@ from repro.kernels.assignment import assignment_pallas
 from repro.kernels.fused_lloyd import fused_lloyd_pallas
 from repro.kernels.update import update_pallas
 
-# VMEM budget for holding the full centroid block in the fused kernel
-# (elements of C, f32): 2M elements = 8 MB, about half of one core's VMEM.
-FUSED_MAX_KD = 2 * 1024 * 1024
+# VMEM budget for holding the full centroid block in the fused kernel:
+# 8 MB, about half of one core's VMEM.  The gate is in BYTES of the
+# *compute* dtype — at bf16 the same budget holds 2x the K*d elements
+# (an element-count gate assuming f32 made bf16 fall back to the
+# two-kernel path 2x too early).  FUSED_MAX_KD keeps the legacy
+# f32-element view of the same budget for existing callers.
+FUSED_VMEM_BYTES = 8 * 1024 * 1024
+FUSED_MAX_KD = FUSED_VMEM_BYTES // 4
 
 
 def _interpret() -> bool:
@@ -70,7 +76,10 @@ def fused_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     split = _split_step(precision)
 
     def step_fn(x, c, k, carry):
-        if k * x.shape[1] > FUSED_MAX_KD:   # static shapes: Python branch
+        cdtype = jnp.dtype(precision.compute) if precision.compute is not None \
+            else x.dtype
+        # static shapes: Python branch
+        if k * x.shape[1] * cdtype.itemsize > FUSED_VMEM_BYTES:
             return split(x, c, k, carry)
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(c)

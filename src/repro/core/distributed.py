@@ -37,9 +37,10 @@ from repro import compat
 from repro.core import lloyd
 from repro.core.backends import Backend, distribute
 from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
-                               aa_kmeans_batched, resolve_backend,
-                               select_best)
+                               aa_kmeans_batched, aa_kmeans_minibatch,
+                               resolve_backend, select_best)
 from repro.core.lloyd import LloydOps
+from repro.core.minibatch import MiniBatchConfig, MiniBatchResult
 
 
 def distributed_lloyd_ops(data_axes: Sequence[str],
@@ -160,6 +161,58 @@ def make_distributed_kmeans_batched(mesh: jax.sharding.Mesh,
         c0s = jax.lax.with_sharding_constraint(c0s, rep_sharding)
         res = _run(x, c0s)
         return select_best(res) if pick_best else res
+
+    return fit
+
+
+def make_distributed_kmeans_minibatch(mesh: jax.sharding.Mesh,
+                                      cfg: MiniBatchConfig,
+                                      data_axes: Sequence[str] = ("data",),
+                                      backend: Union[str, Backend,
+                                                     None] = None):
+    """Streaming mini-batch solver on a mesh: every host streams its shard.
+
+    Returns ``fit(chunks, weights, x_val, c0, key=None) ->
+    MiniBatchResult`` where ``chunks`` (n_chunks, B, d) and ``weights``
+    (n_chunks, B) have their *row* dimension sharded over ``data_axes``
+    (`repro.data.streaming.chunk_dataset(mesh=...)` lays them out) and
+    ``x_val`` (V, d) is sharded likewise; centroids stay replicated.
+    Inside shard_map each chunk step costs ONE (K,(d+1))-stat psum plus
+    the guard's scalar energies — per-chunk communication is independent
+    of both the chunk size and N (DESIGN.md §Streaming).  V and B must be
+    divisible by the shard count of ``data_axes``.
+    """
+    axes = tuple(data_axes)
+    ops = _resolve_distributed(backend, None, 0, axes)
+    chunk_spec = P(None, axes)     # (n_chunks, B): chunk rows sharded
+    val_spec = P(axes)
+    rep = P()
+
+    @functools.partial(
+        compat.shard_map, mesh=mesh,
+        in_specs=(chunk_spec, chunk_spec, val_spec, rep, rep),
+        out_specs=MiniBatchResult(centroids=rep, energy=rep, n_steps=rep,
+                                  n_accepted=rep))
+    def _run(chunks, weights, x_val, c0, key):
+        return aa_kmeans_minibatch(chunks, weights, x_val, c0, cfg,
+                                   backend=ops, key=key)
+
+    chunk_sharding = NamedSharding(mesh, chunk_spec)
+    val_sharding = NamedSharding(mesh, val_spec)
+    rep_sharding = NamedSharding(mesh, rep)
+
+    @jax.jit
+    def _fit(chunks, weights, x_val, c0, key):
+        chunks = jax.lax.with_sharding_constraint(chunks, chunk_sharding)
+        weights = jax.lax.with_sharding_constraint(weights, chunk_sharding)
+        x_val = jax.lax.with_sharding_constraint(x_val, val_sharding)
+        c0 = jax.lax.with_sharding_constraint(c0, rep_sharding)
+        return _run(chunks, weights, x_val, c0, key)
+
+    def fit(chunks, weights, x_val, c0, key=None):
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return _fit(chunks, weights, x_val, c0, key)
 
     return fit
 

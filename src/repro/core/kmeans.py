@@ -9,6 +9,10 @@ Two drivers over the same primitives:
                            statistics the paper reports (accepted / total
                            iterations, energy trace, m trace, wall time);
                            used by the Table 2 / Table 3 benchmarks.
+  * ``aa_kmeans_minibatch`` — streaming epoch driver over chunked data
+                           (state machine in repro.core.minibatch;
+                           DESIGN.md §Streaming).
+  * ``aa_kmeans_batched`` — R restarts / problems in one device program.
 
 Both consume a `Backend` (repro.core.backends) whose core op is the
 single-pass ``step(x, c) -> StepResult``, so one *accepted* Algorithm-1
@@ -46,6 +50,8 @@ from repro.core import anderson
 from repro.core.anderson import AAConfig, AAState
 from repro.core.backends import Backend, from_lloyd_ops, get_backend
 from repro.core.lloyd import DENSE_OPS, LloydOps
+from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult,
+                                  guard_pick, minibatch_init, run_epoch)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -429,6 +435,60 @@ def select_best(results: KMeansResult) -> KMeansResult:
     index — the same winner the sequential strict-< loop keeps."""
     best = jnp.argmin(results.energy)
     return jax.tree_util.tree_map(lambda a: a[best], results)
+
+
+# ---------------------------------------------------------------------------
+# Streaming mini-batch driver (chunked X; DESIGN.md §Streaming)
+# ---------------------------------------------------------------------------
+
+def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
+                        x_val: jax.Array, c0: jax.Array,
+                        cfg: MiniBatchConfig,
+                        backend: BackendLike = None,
+                        key: Optional[jax.Array] = None,
+                        return_trace: bool = False):
+    """Streaming Algorithm 1 over chunked data — fully jit-able.
+
+    ``chunks`` is (n_chunks, B, d) with row-weight mask ``weights``
+    (n_chunks, B) (`repro.data.streaming.chunk_dataset` builds both),
+    ``x_val`` (V, d) is the held-out validation chunk the energy guard
+    runs on, and ``c0`` (K, d) the seed centroids.  Runs ``cfg.epochs``
+    epochs; the chunk order is reshuffled per epoch from ``key``.
+
+    Each chunk step shares Algorithm 1's accept/revert skeleton with the
+    full-batch driver — guard, dynamic-m, one weighted backend pass,
+    Anderson push/solve (`minibatch.minibatch_iteration`) — and the whole
+    run is a `lax.scan` over epochs of a `lax.scan` over chunks, so the
+    program dispatches once regardless of epochs x chunks.  Runs
+    unchanged under shard_map with a `distribute()`-wrapped backend: one
+    stat-psum per chunk (`make_distributed_kmeans_minibatch`).
+
+    Returns a `MiniBatchResult` whose centroids are the final
+    guard-picked iterate; with ``return_trace=True`` also returns a
+    `MiniBatchTrace` with leaves of shape (epochs, n_chunks).
+    """
+    if chunks.ndim != 3:
+        raise ValueError(f"chunks must be (n_chunks, B, d); got "
+                         f"{chunks.shape}")
+    if weights.shape != chunks.shape[:2]:
+        raise ValueError(f"weights {weights.shape} must match chunks' "
+                         f"leading dims {chunks.shape[:2]}")
+    bk = resolve_backend(backend)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    state = minibatch_init(c0, cfg, bk)
+
+    def epoch_step(carry, _):
+        st, k2 = carry
+        k2, sub = jax.random.split(k2)
+        st, trace = run_epoch(chunks, weights, x_val, st, cfg, bk, sub)
+        return (st, k2), trace
+
+    (state, _), trace = jax.lax.scan(epoch_step, (state, key), None,
+                                     length=cfg.epochs)
+    c_fin, e_fin, _, _ = guard_pick(x_val, state, cfg, bk)
+    result = MiniBatchResult(c_fin, e_fin, state.t, state.n_acc)
+    return (result, trace) if return_trace else result
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,18 @@ def cluster_sums(x: jax.Array, labels: jax.Array, k: int):
     return sums, counts
 
 
+def weighted_cluster_sums(x: jax.Array, labels: jax.Array, w: jax.Array,
+                          k: int):
+    """Weighted per-cluster sums (K,d) and weight totals (K,).
+
+    The masked/mini-batch generalisation of `cluster_sums`: each row
+    contributes `w` times (w = 0 drops a padding row entirely; w = 1 for
+    every row recovers `cluster_sums` exactly)."""
+    sums = jax.ops.segment_sum(x * w[:, None], labels, num_segments=k)
+    counts = jax.ops.segment_sum(w, labels, num_segments=k)
+    return sums, counts
+
+
 def update_from_sums(sums: jax.Array, counts: jax.Array,
                      c_prev: jax.Array) -> jax.Array:
     """Update step (Eq. 4) given partial sums.  Empty clusters keep their

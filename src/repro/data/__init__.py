@@ -1,1 +1,4 @@
+from repro.data.streaming import (DeviceChunks, chunk_dataset,  # noqa: F401
+                                  host_chunk_stream, shard_count,
+                                  split_validation)
 from repro.data.synthetic import DATASETS, make_dataset  # noqa: F401

@@ -1,0 +1,120 @@
+"""Chunk pipeline for the streaming mini-batch solver (DESIGN.md §Streaming).
+
+Two regimes, one chunk contract:
+
+  * **Device-resident** (`chunk_dataset`): X fits on device (or on the
+    mesh); it is reshaped once into fixed-size chunks with a row-weight
+    mask for the padded tail, and the epoch driver gathers chunks in a
+    per-epoch shuffled order — no copy of X per epoch.
+  * **Host-streamed** (`host_chunk_stream`): X lives in host memory only;
+    a generator yields one shuffled numpy chunk at a time, so the peak
+    device footprint is O(chunk + validation chunk) — the estimator's
+    `partial_fit` loop consumes this directly.
+
+The chunk contract shared by both: every chunk has exactly ``chunk_size``
+rows; rows past the true N carry weight 0 (they replicate the final sample
+but vanish from every weighted reduction); under a mesh, chunk rows are
+sharded over the data axes so each host/shard streams only its slice.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class DeviceChunks(NamedTuple):
+    """Device-resident chunked dataset.
+
+    chunks  : (n_chunks, chunk_size, d) — padded rows replicate the last
+              real sample (any finite value works; the mask removes them).
+    weights : (n_chunks, chunk_size) — 1.0 for real rows, 0.0 for padding.
+    n       : the true (unpadded) row count.
+    """
+    chunks: jax.Array
+    weights: jax.Array
+    n: int
+
+
+def shard_count(mesh: jax.sharding.Mesh, data_axes: Sequence[str]) -> int:
+    """Total shards of the given mesh data axes — the divisor every
+    row-sharded chunk dimension must respect."""
+    count = 1
+    for a in data_axes:
+        count *= mesh.shape[a]
+    return count
+
+
+def chunk_dataset(x, chunk_size: int,
+                  mesh: Optional[jax.sharding.Mesh] = None,
+                  data_axes: Sequence[str] = ("data",)) -> DeviceChunks:
+    """Reshape X (N, d) into masked fixed-size chunks, optionally sharded.
+
+    The tail chunk is padded to ``chunk_size`` with copies of the last row
+    at weight 0.  With ``mesh`` set, chunk rows are sharded over
+    ``data_axes`` (spec `P(None, axes)`), so each shard owns
+    ``chunk_size / n_shards`` rows of every chunk and the solver's
+    per-chunk psum reduces over exactly those axes; ``chunk_size`` must be
+    divisible by the total shard count.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1; got {chunk_size}")
+    x = jnp.asarray(x)
+    n, d = x.shape
+    if mesh is not None:
+        shards = shard_count(mesh, data_axes)
+        if chunk_size % shards:
+            raise ValueError(
+                f"chunk_size={chunk_size} must be divisible by the "
+                f"{shards} shards of mesh axes {tuple(data_axes)}")
+    pad = (-n) % chunk_size
+    if pad:
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)])
+    w = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                         jnp.zeros((pad,), jnp.float32)])
+    chunks = x.reshape(-1, chunk_size, d)
+    weights = w.reshape(-1, chunk_size)
+    if mesh is not None:
+        spec = NamedSharding(mesh, P(None, tuple(data_axes)))
+        chunks = jax.device_put(chunks, spec)
+        weights = jax.device_put(weights, spec)
+    return DeviceChunks(chunks, weights, n)
+
+
+def split_validation(x, val_size: int, key) -> Tuple[jax.Array, jax.Array]:
+    """Hold out ``val_size`` uniformly-sampled rows as the guard's
+    validation chunk.  Returns (x_train, x_val); the split permutes rows,
+    so downstream chunking sees an already-shuffled train set."""
+    x = jnp.asarray(x)
+    n = x.shape[0]
+    if not 0 < val_size < n:
+        raise ValueError(f"val_size must be in (0, N={n}); got {val_size}")
+    perm = jax.random.permutation(key, n)
+    return x[perm[val_size:]], x[perm[:val_size]]
+
+
+def host_chunk_stream(x, chunk_size: int, epochs: int = 1, seed: int = 0,
+                      drop_remainder: bool = False):
+    """Generator over host-memory chunks, reshuffled per epoch.
+
+    ``x`` stays a host (numpy) array; each yield materialises only one
+    (chunk_size, d) gather, so X never needs to fit on device — the
+    out-of-device-memory path the streaming solver exists for.  The tail
+    chunk of each epoch is shorter than ``chunk_size`` unless
+    ``drop_remainder``; pair with `partial_fit`, which accepts any chunk
+    length (uniform lengths avoid re-jitting the step).
+    """
+    x = np.asarray(x)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n, chunk_size):
+            idx = order[i:i + chunk_size]
+            if drop_remainder and idx.shape[0] < chunk_size:
+                break
+            yield x[idx]

@@ -36,3 +36,17 @@ def fused_lloyd_ref(x: jax.Array, c: jax.Array):
     labels, mind = assignment_ref(x, c)
     sums, counts = update_ref(x, labels, c.shape[0])
     return labels, mind, sums, counts, jnp.sum(mind)
+
+
+def minibatch_ref(x: jax.Array, c: jax.Array, w: jax.Array):
+    """Weighted chunk pass (the `Backend.minibatch_step` oracle): row
+    weights w (N,) scale each row's contribution to sums/counts/energy;
+    labels and min_sqdist stay per-row and unweighted.
+    -> (labels, min_sqdist, sums, counts, energy)."""
+    labels, mind = assignment_ref(x, c)
+    w = w.astype(jnp.float32)
+    k = c.shape[0]
+    sums = jax.ops.segment_sum(x.astype(jnp.float32) * w[:, None], labels,
+                               num_segments=k)
+    counts = jax.ops.segment_sum(w, labels, num_segments=k)
+    return labels, mind, sums, counts, jnp.sum(mind * w)

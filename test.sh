@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 verification — the single entry point local runs and CI share, so
-# the two stop diverging on environment setup.
+# Tiered verification — one entry point, one environment setup, two tiers.
+# CI's gate runs the FULL suite (PYTHONPATH=src python -m pytest -x -q);
+# locally run the fast tier while iterating and the slow tier before
+# shipping — together they are exactly CI's coverage.
 #
-#   ./test.sh              # full tier-1 suite
-#   ./test.sh -m 'not slow'  # skip the multi-device / launcher tests
+#   ./test.sh              # fast tier: slow marker excluded
+#   ./test.sh --slow       # slow tier: multi-device subprocesses,
+#                          #   launchers, streaming smoke
+#   ./test.sh -m 'conformance'   # any extra pytest args pass through
 #
 # Notes:
 #   * PYTHONPATH=src — the package is not installed in the container.
@@ -19,4 +23,8 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 # metadata unless the platform is pinned; override for real-TPU runs.
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-exec python -m pytest -x -q "$@"
+if [[ "${1:-}" == "--slow" ]]; then
+    shift
+    exec python -m pytest -x -q -m slow "$@"
+fi
+exec python -m pytest -x -q -m 'not slow' "$@"

@@ -1,0 +1,190 @@
+"""Cross-backend conformance matrix (ISSUE 3 acceptance).
+
+Every backend in the registry x every step slot x every precision policy
+is checked against the pure-jnp oracles in `repro/kernels/ref.py` on one
+shared fixture, field by StepResult field — so a new backend (or a new
+step slot on an existing backend) cannot ship without parity.  The
+backend list is *iterated from the registry*, never hand-written: adding
+`register_backend("new", ...)` automatically adds its whole row.
+
+Fixture note: the data is well-separated blobs so that bf16 distance
+rounding cannot flip an argmin — labels must be exact in every cell of
+the matrix; float tolerances apply only to distances/stats/energy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core.init_schemes import kmeanspp_init
+from repro.kernels import ref
+from repro.data.synthetic import make_blobs
+
+K = 5
+R = 3          # restart axis for the batched slot
+# options forcing the interesting code path at this fixture size
+BACKEND_OPTS = {"blocked": dict(block_n=128)}
+PRECISIONS = {
+    "f32": B.Precision(),
+    "bf16": B.Precision(compute=jnp.bfloat16),
+}
+# f32 tolerances are reduction-order slack; bf16 tolerances cover the
+# compute-dtype rounding of the distance math.  The atol is *scaled by the
+# field's magnitude*: the |x|^2 - 2xc + |c|^2 expansion cancels, so a bf16
+# distance's absolute error is proportional to the |x|^2-scale of the row,
+# not to the (possibly tiny) distance itself — a plain rtol would demand
+# more precision of near-zero distances than bf16 carries.
+TOLS = {"f32": dict(rtol=1e-4, atol_scale=1e-5),
+        "bf16": dict(rtol=3e-2, atol_scale=3e-2)}
+
+pytestmark = pytest.mark.conformance
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    x = jnp.asarray(make_blobs(384, 8, K, seed=0, spread=6.0))
+    c = kmeanspp_init(jax.random.PRNGKey(0), x, K)
+    cs = jnp.stack([jnp.asarray(kmeanspp_init(jax.random.PRNGKey(r), x, K))
+                    for r in range(R)])
+    n_real = 300                      # trailing rows are masked padding
+    w = jnp.concatenate([jnp.ones((n_real,), jnp.float32),
+                         jnp.zeros((x.shape[0] - n_real,), jnp.float32)])
+    return x, c, cs, w
+
+
+def _make(name, prec_key):
+    return B.get_backend(name, precision=PRECISIONS[prec_key],
+                         **BACKEND_OPTS.get(name, {}))
+
+
+def _allclose(got, want, tol, msg):
+    want64 = np.asarray(want, np.float64)
+    scale = max(float(np.max(np.abs(want64))), 1.0)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want64,
+                               rtol=tol["rtol"],
+                               atol=tol["atol_scale"] * scale,
+                               err_msg=msg)
+
+
+def _check(x, c, res, tol, cell, w=None):
+    """Two-part conformance contract per StepResult:
+
+    1. The assignment is the oracle argmin — exactly, except that a cell
+       may flip a row whose top-2 oracle distances are within the cell's
+       tolerance of each other (bf16 rounding legitimately breaks exact
+       ties; the f32 atol_scale is tight enough to forbid flips there).
+    2. min_sqdist / sums / counts / energy are the exact weighted
+       reductions OF THE ASSIGNMENT MADE (oracle recomputation from the
+       returned labels), to the cell's tolerance — a backend cannot hide
+       a broken stats pipeline behind a tie flip.
+    """
+    x64 = np.asarray(x, np.float64)
+    c64 = np.asarray(c, np.float64)
+    d2 = np.maximum(((x64[:, None, :] - c64[None, :, :]) ** 2).sum(-1), 0.0)
+    scale = max(float(d2.max()), 1.0)
+    labels = np.asarray(res.labels)
+    ref_labels = np.asarray(ref.assignment_ref(x, c)[0])
+    mism = np.nonzero(labels != ref_labels)[0]
+    if mism.size:
+        gap = d2[mism, labels[mism]] - d2[mism].min(-1)
+        assert (gap <= tol["atol_scale"] * scale).all(), (
+            f"{cell}: {mism.size} label rows diverge beyond a "
+            f"compute-dtype tie (worst gap {gap.max():.4g})")
+    n = labels.shape[0]
+    want_mind = d2[np.arange(n), labels]
+    ww = np.ones(n) if w is None else np.asarray(w, np.float64)
+    want_sums = np.zeros((c64.shape[0], x64.shape[1]))
+    np.add.at(want_sums, labels, x64 * ww[:, None])
+    want_counts = np.bincount(labels, weights=ww,
+                              minlength=c64.shape[0])
+    _allclose(res.min_sqdist, want_mind, tol, f"{cell}: min_sqdist")
+    _allclose(res.sums, want_sums, tol, f"{cell}: sums")
+    np.testing.assert_allclose(np.asarray(res.counts), want_counts,
+                               rtol=0, atol=1e-5,
+                               err_msg=f"{cell}: counts")
+    _allclose(res.energy, (want_mind * ww).sum(), tol, f"{cell}: energy")
+
+
+@pytest.mark.parametrize("prec", sorted(PRECISIONS))
+@pytest.mark.parametrize("mode", ["single", "batched", "minibatch"])
+@pytest.mark.parametrize("name", B.backend_names())
+def test_step_slot_conformance(name, mode, prec, fixture):
+    x, c, cs, w = fixture
+    backend = _make(name, prec)
+    tol = TOLS[prec]
+    cell = f"{name}/{mode}/{prec}"
+    if mode == "single":
+        res, _ = backend.step(x, c, K, backend.init_carry(x, c, K))
+        _check(x, c, res, tol, cell)
+    elif mode == "minibatch":
+        res, _ = backend.minibatch_step(x, c, K, w,
+                                        backend.init_carry(x, c, K))
+        _check(x, c, res, tol, cell, w=w)
+    else:
+        carries = jax.vmap(lambda cc: backend.init_carry(x, cc, K))(cs)
+        res, _ = backend.batched_step(x, cs, K, carries)
+        for r in range(R):
+            _check(x, cs[r],
+                   jax.tree_util.tree_map(lambda a: a[r], res),
+                   tol, f"{cell}[r={r}]")
+
+
+def test_matrix_covers_whole_registry():
+    """The parametrization above is generated from backend_names(); this
+    guard documents (and enforces) that the registry is the source of
+    truth — the known engines must all be present, and the matrix size
+    follows the registry, not a hand-written list."""
+    names = B.backend_names()
+    assert set(names) >= {"dense", "blocked", "pallas", "fused", "hamerly"}
+    assert len(names) == len(set(names))
+
+
+def test_minibatch_zero_weight_rows_are_inert(fixture):
+    """The chunk contract: w=0 rows must vanish from sums/counts/energy
+    exactly — padding a chunk equals truncating it."""
+    x, c, _, w = fixture
+    n_real = int(np.asarray(w).sum())
+    for name in B.backend_names():
+        backend = _make(name, "f32")
+        res_pad, _ = backend.minibatch_step(
+            x, c, K, w, backend.init_carry(x, c, K))
+        xt = x[:n_real]
+        res_cut, _ = backend.minibatch_step(
+            xt, c, K, jnp.ones((n_real,), jnp.float32),
+            backend.init_carry(xt, c, K))
+        np.testing.assert_allclose(res_pad.sums, res_cut.sums,
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(res_pad.counts, res_cut.counts,
+                                   rtol=0, atol=1e-6, err_msg=name)
+        np.testing.assert_allclose(float(res_pad.energy),
+                                   float(res_cut.energy),
+                                   rtol=1e-5, err_msg=name)
+
+
+def test_fused_vmem_gate_accounts_for_compute_dtype(fixture, monkeypatch):
+    """Satellite regression: the fused kernel's VMEM gate is a *byte*
+    budget at the compute dtype — at bf16 a centroid block twice the f32
+    element limit must still take the fused single-pass path (the old
+    element-count gate fell back to the two-kernel path 2x too early)."""
+    from repro.core.backends import pallas as P
+    x, c, _, _ = fixture
+    kd_bytes_f32 = K * x.shape[1] * 4
+    calls = []
+    real = P.fused_lloyd_pallas
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(P, "fused_lloyd_pallas", spy)
+    # budget between the bf16 and f32 footprint of this K*d block:
+    # f32 overflows (two-kernel path, no fused call), bf16 fits.
+    monkeypatch.setattr(P, "FUSED_VMEM_BYTES", kd_bytes_f32 - 1)
+    f32_backend = P.fused_backend(B.Precision())
+    f32_backend.step(x, c, K, ())
+    assert not calls, "f32 block over budget must take the split path"
+    bf16_backend = P.fused_backend(B.Precision(compute=jnp.bfloat16))
+    bf16_backend.step(x, c, K, ())
+    assert calls, "bf16 halves the block bytes and must stay fused"

@@ -153,6 +153,58 @@ print("BATCHED_DIST_OK")
 
 
 @pytest.mark.slow
+def test_distributed_minibatch_streaming():
+    """Streaming mini-batch solver on a (2,4) mesh: chunk rows sharded,
+    one stat-psum per chunk, deterministic, and within psum-reduction
+    tolerance of the single-device streaming run on the same chunk
+    schedule (same key => same chunk order on every shard)."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import (make_distributed_kmeans_minibatch,
+                                    shard_dataset)
+from repro.core.init_schemes import kmeanspp_init
+from repro.core.kmeans import aa_kmeans_minibatch
+from repro.core.minibatch import MiniBatchConfig
+from repro.data.streaming import chunk_dataset, split_validation
+from repro.data.synthetic import make_blobs
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+k = 8
+x = jnp.asarray(make_blobs(16000, 8, k, seed=3, spread=5.0))
+xt, xv = split_validation(x, 1024, jax.random.PRNGKey(7))
+c0 = kmeanspp_init(jax.random.PRNGKey(1), x[:4096], k)
+cfg = MiniBatchConfig(k=k, chunk_size=2048, epochs=3)
+key = jax.random.PRNGKey(5)
+
+dc_local = chunk_dataset(xt, 2048)
+ref = jax.jit(lambda a, b, v, c, kk: aa_kmeans_minibatch(
+    a, b, v, c, cfg, key=kk))(dc_local.chunks, dc_local.weights, xv, c0, key)
+
+dc = chunk_dataset(xt, 2048, mesh=mesh, data_axes=("pod", "data"))
+fit = make_distributed_kmeans_minibatch(mesh, cfg, ("pod", "data"))
+res = fit(dc.chunks, dc.weights, xv, c0, key)
+res2 = fit(dc.chunks, dc.weights, xv, c0, key)
+assert int(res.n_steps) == int(ref.n_steps)
+np.testing.assert_allclose(float(res.energy), float(res2.energy), rtol=0)
+np.testing.assert_array_equal(np.asarray(res.centroids),
+                              np.asarray(res2.centroids))   # deterministic
+np.testing.assert_allclose(float(res.energy), float(ref.energy), rtol=1e-4)
+np.testing.assert_allclose(np.asarray(res.centroids),
+                           np.asarray(ref.centroids), rtol=1e-3, atol=1e-3)
+assert abs(int(res.n_accepted) - int(ref.n_accepted)) <= 1
+
+# fused-kernel backend composes with the streaming driver + mesh too
+fit_f = make_distributed_kmeans_minibatch(mesh, cfg, ("pod", "data"),
+                                          backend="fused")
+res_f = fit_f(dc.chunks, dc.weights, xv, c0, key)
+np.testing.assert_allclose(float(res_f.energy), float(ref.energy), rtol=1e-4)
+print("MINIBATCH_DIST_OK")
+""")
+    assert "MINIBATCH_DIST_OK" in out
+
+
+@pytest.mark.slow
 def test_sharded_train_step_runs():
     """Reduced smollm train step on a (2,2,2) pod/data/model mesh with real
     execution (not just lowering): loss finite, params update, grads agree

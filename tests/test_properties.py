@@ -1,0 +1,133 @@
+"""Property tests for the Anderson window solve and the energy guard.
+
+Two properties, each with a deterministic sweep (always runs) and a
+hypothesis-widened version (runs when `hypothesis` is installed; the
+shim in hypothesis_compat turns it into a skip otherwise):
+
+1. `anderson._spd_solve` — the unrolled pure-XLA Gauss-Jordan — matches
+   `jnp.linalg.solve` on exactly the masked SPD systems the window solve
+   builds, for every active window size m in 0..mbar.
+2. The guard path never keeps an energy-increasing iterate: on the
+   full-batch driver an accepted iteration strictly decreases E (and the
+   whole post-revert energy trace is non-increasing, Lloyd monotonicity
+   covering the reverted steps); on the mini-batch driver an accepted
+   chunk step's candidate beats the fallback on the validation chunk.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import anderson
+from repro.core.anderson import AAConfig
+from repro.core.init_schemes import kmeanspp_init
+from repro.core.kmeans import (KMeansConfig, aa_kmeans_minibatch,
+                               aa_kmeans_traced)
+from repro.core.minibatch import MiniBatchConfig
+from repro.data.streaming import chunk_dataset, split_validation
+from repro.data.synthetic import make_blobs
+
+MBAR = 12
+
+
+def _masked_spd_system(seed: int, m_active: int, d_flat: int = 24,
+                       mbar: int = MBAR):
+    """Build (gram, rhs) exactly as `aa_push_and_solve` does: active
+    columns' normal equations plus relative ridge, identity rows/cols for
+    the inactive remainder."""
+    rng = np.random.default_rng(seed)
+    d_f = jnp.asarray(rng.standard_normal((mbar, d_flat)), jnp.float32)
+    f = jnp.asarray(rng.standard_normal((d_flat,)), jnp.float32)
+    active = jnp.arange(mbar) < m_active
+    a_mask = jnp.where(active[:, None], d_f, 0.0)
+    gram = a_mask @ a_mask.T
+    rhs = a_mask @ f
+    lam = 1e-12 * (jnp.trace(gram) + 1.0)
+    eye = jnp.eye(mbar, dtype=f.dtype)
+    gram = jnp.where(active[:, None] & active[None, :], gram, 0.0) + \
+        eye * jnp.where(active, lam, 1.0)
+    return gram, rhs
+
+
+def _assert_solve_matches(gram, rhs):
+    got = np.asarray(anderson._spd_solve(gram, rhs))
+    want = np.asarray(jnp.linalg.solve(gram, rhs))
+    scale = max(float(np.max(np.abs(want))), 1.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale)
+
+
+@pytest.mark.parametrize("m_active", range(0, MBAR + 1))
+def test_spd_solve_matches_linalg_all_window_sizes(m_active):
+    for seed in (0, 1, 2):
+        gram, rhs = _masked_spd_system(seed * 1000 + m_active, m_active)
+        _assert_solve_matches(gram, rhs)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m_active=st.integers(0, MBAR),
+       d_flat=st.integers(1, 64))
+def test_spd_solve_matches_linalg_hypothesis(seed, m_active, d_flat):
+    gram, rhs = _masked_spd_system(seed, m_active, d_flat=d_flat)
+    _assert_solve_matches(gram, rhs)
+
+
+def _guard_trace(seed: int, spread: float):
+    k = 6
+    x = jnp.asarray(make_blobs(1500, 6, k, seed=seed, spread=spread))
+    c0 = kmeanspp_init(jax.random.PRNGKey(seed), x, k)
+    return aa_kmeans_traced(x, c0, KMeansConfig(k=k, max_iter=300),
+                            backend="dense")
+
+
+def _assert_guard_monotone(tr):
+    energies = [float(e) for e in tr.energies]
+    for i, accepted in enumerate(tr.accepted):
+        prev = np.inf if i == 0 else energies[i - 1]
+        if accepted:
+            assert energies[i] < prev, \
+                f"accepted iteration {i} increased E: {prev} -> {energies[i]}"
+        else:
+            # reverted -> the fallback G-iterate; Lloyd monotonicity
+            # bounds it by the previous post-revert energy (fp slack for
+            # an exactly-converged endgame step)
+            assert energies[i] <= prev * (1 + 1e-6), (i, prev, energies[i])
+
+
+@pytest.mark.parametrize("seed,spread", [(0, 4.0), (1, 1.5), (2, 1.0),
+                                         (3, 0.8)])
+def test_accepted_iterates_never_increase_energy(seed, spread):
+    tr = _guard_trace(seed, spread)
+    assert any(tr.accepted), "fixture should accept at least one AA step"
+    _assert_guard_monotone(tr)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), spread=st.floats(0.6, 5.0))
+def test_accepted_iterates_never_increase_energy_hypothesis(seed, spread):
+    _assert_guard_monotone(_guard_trace(seed, spread))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_minibatch_guard_accepts_only_val_improvements(seed):
+    """Streaming guard property: whenever a chunk step keeps the
+    accelerated candidate, that candidate was strictly better than the
+    running-stats fallback on the held-out validation chunk."""
+    k = 6
+    x = jnp.asarray(make_blobs(12000, 6, k, seed=seed, spread=2.0))
+    xt, xv = split_validation(x, 1024, jax.random.PRNGKey(seed))
+    c0 = kmeanspp_init(jax.random.PRNGKey(seed + 1), xv, k)
+    dc = chunk_dataset(xt, 2048)
+    cfg = MiniBatchConfig(k=k, chunk_size=2048, epochs=4)
+    _, trace = aa_kmeans_minibatch(dc.chunks, dc.weights, xv, c0, cfg,
+                                   key=jax.random.PRNGKey(seed),
+                                   return_trace=True)
+    acc = np.asarray(trace.accepted).reshape(-1)
+    e_cand = np.asarray(trace.e_cand).reshape(-1)
+    e_fall = np.asarray(trace.e_fallback).reshape(-1)
+    assert acc.any(), "fixture should accept at least one AA chunk step"
+    assert (e_cand[acc] < e_fall[acc]).all()
+    # and the kept energy is the min of the two candidates, always
+    e_val = np.asarray(trace.e_val).reshape(-1)
+    np.testing.assert_allclose(e_val, np.minimum(e_cand, e_fall), rtol=0)

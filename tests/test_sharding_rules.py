@@ -82,6 +82,11 @@ def test_artifacts_complete_and_coherent():
     recs = [json.loads(p.read_text()) for p in art.glob("*.json")
             if not p.name.startswith("aa-kmeans") and "__" in p.name
             and p.name.count("__") == 2]     # baseline (untagged) cells
+    if not recs:
+        # a kmeans-only dry-run (e.g. the verify recipe) creates the
+        # directory without the LM baseline sweep — that is still "not
+        # generated", not a coherence failure
+        pytest.skip("no baseline dry-run records in this checkout")
     cells = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
     assert len(cells) == 80, len(cells)
     bad = [r for r in recs if not (r.get("ok") or r.get("skipped"))]
