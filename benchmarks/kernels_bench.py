@@ -4,11 +4,24 @@ derivation for the kernel roofline (EXPERIMENTS.md §Roofline, K-Means rows).
 On this CPU container the Pallas kernels run in interpret mode (not
 representative); wall times here benchmark the jnp reference path that XLA
 compiles, while the DERIVED columns give the analytic TPU roofline of each
-kernel variant: bytes moved per iteration, flops, arithmetic intensity, and
-the predicted HBM-bound iteration time on v5e (819 GB/s, 197 TFLOP/s).
+kernel variant: X passes per iteration, bytes moved, flops, arithmetic
+intensity, and the predicted HBM-bound iteration time on v5e (819 GB/s,
+197 TFLOP/s).  The v2 fused kernel is priced with its k-tiled traffic
+model: X once, C re-streamed per X row tile.
+
+``--json [PATH]`` emits the full table as ``BENCH_kernels.json`` — the
+machine-readable seed of the perf trajectory (one record per kernel
+variant x shape: x_passes_per_iter, bytes_per_iter, flops_per_iter, wall
+time where measured).  ``--smoke`` shrinks the shapes and additionally
+drives the real Pallas kernels in interpret mode, so CI can assert the
+benchmark harness end-to-end without a TPU (test.sh --slow).
 """
 
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -16,10 +29,15 @@ import numpy as np
 
 from benchmarks.common import csv_row, timed
 from repro.core.backends import get_backend
-from repro.kernels import ref
+from repro.kernels import ref, tiles
 
 HBM_BW = 819e9
 PEAK = 197e12
+
+SHAPES = [(100_000, 9, 10), (100_000, 9, 100),
+          (53_500, 385, 10), (131_072, 64, 1000),
+          (131_072, 64, 65_536)]          # beyond the old fused VMEM gate
+SMOKE_SHAPES = [(512, 9, 10), (384, 17, 33)]
 
 # Deliberately a curated subset of backends.backend_names(): the backends
 # whose CPU wall clock is meaningful (Pallas engines join on real TPUs —
@@ -27,24 +45,106 @@ PEAK = 197e12
 STEP_BACKENDS = ("dense", "blocked", "hamerly")
 
 
-def analyze(n, d, k, fused: bool):
-    """Per-Lloyd-iteration bytes/flops on TPU (bf16 X, f32 accum)."""
-    x_bytes = n * d * 2
-    c_bytes = k * d * 4
-    flops = 2 * n * k * d          # distance cross-term (dominant)
-    flops += 2 * n * k * d         # one-hot matmul for the update
-    if fused:
-        bytes_moved = x_bytes + c_bytes + n * 4 + k * d * 4
-    else:
-        # assignment pass reads X, writes labels; update pass re-reads X;
-        # energy pass gathers (reuses labels/mindist)
+def analyze(n, d, k, variant: str):
+    """Per-Lloyd-iteration X passes / bytes / flops on TPU (bf16 X, f32
+    accum).  Pipeline variants: "split" (assignment pass + update pass),
+    "fused_v1" (whole C resident — the old gated kernel, for reference),
+    "fused" (v2 k-tiled: X once, C re-streamed per X row tile).
+    Single-kernel variants (one X pass each, their own byte/flop terms):
+    "assignment" (distances + labels/mind out), "update" (labels in,
+    one-hot matmul, stats out)."""
+    itemsize = 2
+    x_bytes = n * d * itemsize
+    c_bytes = k * d * itemsize
+    out_bytes = n * 4 + k * d * 4                  # labels+mind, f32 stats
+    dist_flops = 2 * n * k * d     # distance cross-term
+    onehot_flops = 2 * n * k * d   # one-hot matmul for the update
+    flops = dist_flops + onehot_flops
+    if variant == "split":
+        x_passes = 2.0
         bytes_moved = 2 * x_bytes + 2 * c_bytes + 2 * n * 4 + k * d * 4
+    elif variant == "fused_v1":
+        x_passes = 1.0
+        bytes_moved = x_bytes + c_bytes + out_bytes
+    elif variant == "fused":
+        x_passes = 1.0
+        tn, _ = tiles.choose_tiles(n, k, d, itemsize, kind="fused")
+        n_tiles = max(1, -(-n // tn))
+        bytes_moved = x_bytes + n_tiles * c_bytes + out_bytes
+    elif variant == "assignment":
+        x_passes = 1.0
+        tn, _ = tiles.choose_tiles(n, k, d, itemsize, kind="assignment")
+        n_tiles = max(1, -(-n // tn))
+        bytes_moved = x_bytes + n_tiles * c_bytes + 2 * n * 4
+        flops = dist_flops
+    elif variant == "update":
+        x_passes = 1.0
+        bytes_moved = x_bytes + n * 4 + k * d * 4 + k * 4
+        flops = onehot_flops
+    else:
+        raise ValueError(variant)
     ai = flops / bytes_moved
     t_mem = bytes_moved / HBM_BW
     t_comp = flops / PEAK
-    return {"bytes": bytes_moved, "flops": flops, "ai": ai,
+    return {"x_passes_per_iter": x_passes, "bytes_per_iter": bytes_moved,
+            "flops_per_iter": flops, "ai": ai,
             "t_mem_us": t_mem * 1e6, "t_comp_us": t_comp * 1e6,
             "bound": "compute" if t_comp > t_mem else "memory"}
+
+
+def kernel_records(shapes, smoke: bool = False):
+    """One record per kernel variant x shape: analytic roofline columns
+    plus a wall time where this host can measure one meaningfully (the
+    XLA-compiled jnp path always; the Pallas kernels themselves only in
+    --smoke interpret mode, flagged as such)."""
+    rng = np.random.default_rng(0)
+    records = []
+    for (n, d, k) in shapes:
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+
+        if n * k <= 200e6:
+            split = jax.jit(lambda a, b, kk=k: (
+                ref.update_ref(a, ref.assignment_ref(a, b)[0], kk)))
+            fused = jax.jit(lambda a, b: ref.fused_lloyd_ref(a, b))
+            _, t_split = timed(split, x, c)
+            _, t_fused = timed(fused, x, c)
+        else:
+            # the (N, K) distance matrix of the jnp path would not fit
+            # host memory — analytic roofline rows only for this shape
+            t_split = t_fused = None
+
+        for variant, t in (("split", t_split), ("fused", t_fused),
+                           ("fused_v1", None)):
+            rec = {"variant": variant, "n": n, "d": d, "k": k,
+                   "wall_us": None if t is None else t * 1e6,
+                   "wall_path": None if t is None else "xla_ref",
+                   **analyze(n, d, k, variant)}
+            records.append(rec)
+
+        if smoke:
+            # exercise the actual Pallas kernels (interpret mode)
+            from repro.kernels.assignment import assignment_pallas
+            from repro.kernels.fused_lloyd import fused_lloyd_pallas
+            from repro.kernels.update import update_pallas
+            w = jnp.ones((n,), jnp.float32)
+            for variant, fn in (
+                    ("pallas.fused", lambda: fused_lloyd_pallas(
+                        x, c, interpret=True)),
+                    ("pallas.fused_weighted", lambda: fused_lloyd_pallas(
+                        x, c, w, interpret=True)),
+                    ("pallas.assignment", lambda: assignment_pallas(
+                        x, c, interpret=True)),
+                    ("pallas.update", lambda: update_pallas(
+                        x, jnp.zeros((n,), jnp.int32), k, w=w,
+                        interpret=True))):
+                _, t = timed(lambda fn=fn: fn(), warmup=1, reps=1)
+                base = variant.split(".", 1)[1].replace("_weighted", "")
+                records.append({"variant": variant, "n": n, "d": d, "k": k,
+                                "wall_us": t * 1e6,
+                                "wall_path": "pallas_interpret",
+                                **analyze(n, d, k, base)})
+    return records
 
 
 def step_bench(backends=None, n=100_000, d=9, k=100):
@@ -73,35 +173,41 @@ def step_bench(backends=None, n=100_000, d=9, k=100):
     return rows
 
 
-def main():
-    rng = np.random.default_rng(0)
-    rows = []
-    for (n, d, k) in [(100_000, 9, 10), (100_000, 9, 100),
-                      (53_500, 385, 10), (131_072, 64, 1000)]:
-        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
-        c = jnp.asarray(rng.standard_normal((k, d)), jnp.float32)
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                        default=None, metavar="PATH",
+                        help="write records to PATH (default "
+                             "BENCH_kernels.json in the repo root)")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny shapes + drive the real Pallas kernels "
+                             "in interpret mode (CI smoke)")
+    args = parser.parse_args(argv)
 
-        split = jax.jit(lambda a, b, kk=k: (
-            ref.update_ref(a, ref.assignment_ref(a, b)[0], kk)))
-        fused = jax.jit(lambda a, b: ref.fused_lloyd_ref(a, b))
-        _, t_split = timed(split, x, c)
-        _, t_fused = timed(fused, x, c)
+    shapes = SMOKE_SHAPES if args.smoke else SHAPES
+    records = kernel_records(shapes, smoke=args.smoke)
+    for r in records:
+        print(csv_row(
+            f"kernel.{r['variant']}.n{r['n']}_d{r['d']}_k{r['k']}",
+            r["wall_us"] or 0.0,
+            f"x_passes={r['x_passes_per_iter']:g};"
+            f"tpu_bytes={r['bytes_per_iter']:.2e};ai={r['ai']:.1f};"
+            f"tpu_{r['bound']}_us="
+            f"{max(r['t_mem_us'], r['t_comp_us']):.1f}"))
+    if not args.smoke:
+        for row in step_bench():
+            print(row)
 
-        a_s = analyze(n, d, k, fused=False)
-        a_f = analyze(n, d, k, fused=True)
-        rows.append(csv_row(
-            f"kernel.split.n{n}_d{d}_k{k}", t_split * 1e6,
-            f"tpu_bytes={a_s['bytes']:.2e};ai={a_s['ai']:.1f};"
-            f"tpu_{a_s['bound']}_us={max(a_s['t_mem_us'], a_s['t_comp_us']):.1f}"))
-        rows.append(csv_row(
-            f"kernel.fused.n{n}_d{d}_k{k}", t_fused * 1e6,
-            f"tpu_bytes={a_f['bytes']:.2e};ai={a_f['ai']:.1f};"
-            f"tpu_{a_f['bound']}_us={max(a_f['t_mem_us'], a_f['t_comp_us']):.1f};"
-            f"mem_term_speedup={a_s['bytes']/a_f['bytes']:.2f}x"))
-    rows += step_bench()
-    for r in rows:
-        print(r)
-    return rows
+    if args.json:
+        path = Path(args.json)
+        if not path.is_absolute():
+            path = Path(__file__).resolve().parents[1] / path
+        path.write_text(json.dumps(
+            {"schema": "kernels_bench/v2",
+             "backend": jax.default_backend(),
+             "smoke": args.smoke, "records": records}, indent=2))
+        print(f"wrote {path}")
+    return records
 
 
 if __name__ == "__main__":

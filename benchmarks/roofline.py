@@ -90,6 +90,29 @@ def table(tag: str = "", mesh: str = "single", out=sys.stdout):
     return rows
 
 
+def kernels_table(json_path=None, out=sys.stdout):
+    """Kernel-engine roofline rows from kernels_bench's BENCH_kernels.json
+    (benchmarks/kernels_bench.py --json): X passes per iteration, bytes
+    moved and the predicted memory/compute-bound time per variant — the
+    K-Means analogue of the dry-run table above, analytic because the
+    fused Pallas kernels only execute natively on a TPU."""
+    path = Path(json_path) if json_path else \
+        Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+    if not path.exists():
+        return []
+    recs = json.loads(path.read_text()).get("records", [])
+    print(f"\n=== kernel engine ({path.name}) ===", file=out)
+    print(f"{'variant':24s} {'n':>8s} {'d':>5s} {'k':>7s} {'Xpass':>6s} "
+          f"{'bytes':>10s} {'ai':>7s} {'pred_us':>8s} {'bound':>7s}",
+          file=out)
+    for r in recs:
+        pred = max(r["t_mem_us"], r["t_comp_us"])
+        print(f"{r['variant']:24s} {r['n']:8d} {r['d']:5d} {r['k']:7d} "
+              f"{r['x_passes_per_iter']:6g} {r['bytes_per_iter']:10.2e} "
+              f"{r['ai']:7.1f} {pred:8.1f} {r['bound']:>7s}", file=out)
+    return recs
+
+
 def main():
     tag = sys.argv[1] if len(sys.argv) > 1 else ""
     for mesh in ("single", "multi"):
@@ -105,6 +128,7 @@ def main():
             print(f"most collective-bound:  {coll['arch']} {coll['shape']} "
                   f"(coll/comp = "
                   f"{coll['t_collective_s']/max(coll['t_compute_s'],1e-30):.2f})")
+    kernels_table()
 
 
 if __name__ == "__main__":

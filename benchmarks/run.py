@@ -71,7 +71,9 @@ def main() -> None:
     print("# === Kernel roofline (fused vs split Lloyd pass) ===",
           flush=True)
     try:
-        kernels_bench.main()
+        # empty argv: run.py's own CLI args must not leak into the
+        # benchmark's parser; the orchestrator always emits the JSON seed
+        kernels_bench.main(["--json"])
     except Exception:
         traceback.print_exc()
 

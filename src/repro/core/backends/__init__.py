@@ -17,9 +17,14 @@ Registered backends:
 
     dense    — jnp reference semantics (the oracle; legacy DENSE_OPS math)
     blocked  — row-blocked distances, bounded (block_n, K) intermediate
-    pallas   — separate tiled assignment/update kernels (large K*d)
-    fused    — single-pass Pallas kernel: one X read per accepted iteration
+    pallas   — separate tiled assignment/update kernels (decomposed engine)
+    fused    — single-pass Pallas kernel: one X read per accepted
+               iteration at arbitrary K (k-tiled; DESIGN.md §Kernels-v2)
     hamerly  — bound-based assignment carried across iterations
+
+Both Pallas engines fill every step slot natively: batched steps run R
+restarts as the kernels' leading grid axis, minibatch steps fold row
+weights into the stats in-pass.
 """
 
 from repro.core.backends.base import (Backend, Precision,        # noqa: F401

@@ -132,15 +132,18 @@ class Backend:
     # (N, d) shared or (R, N, d) per-problem.  The batched driver prefers
     # this over jax.vmap(step_fn) when set — a hand-batched formulation
     # can share the X stream across restarts and use matmul cluster stats
-    # where the vmapped scatter would serialise.  Must match step_fn's
-    # semantics per row (same labels/energy up to reduction order).
+    # where the vmapped scatter would serialise; the pallas/fused engines
+    # run all R restarts as the leading grid axis of ONE kernel launch
+    # instead of vmapping pl.pallas_call.  Must match step_fn's semantics
+    # per row (same labels/energy up to reduction order).
     batched_step_fn: Optional[Callable] = None
     # Optional weighted step for streaming chunks (DESIGN.md §Streaming):
     # (x, c, k, w, carry) -> (StepResult, carry), where w (N,) >= 0 scales
     # each row's contribution to sums/counts/energy (w = 0 marks a padding
     # row).  labels and min_sqdist stay per-row and unweighted.  When None,
     # ``minibatch_step`` falls back to step_fn for the assignment plus one
-    # weighted segment-sum over the chunk to reweight the stats.
+    # weighted segment-sum over the chunk to reweight the stats; the
+    # dense/blocked/pallas/fused engines all weight natively in-pass.
     minibatch_step_fn: Optional[Callable] = None
     # (x, labels, k) -> (sums, counts): partial stats of a known assignment
     # (the update half of G; used by the derived update op and by

@@ -1,19 +1,38 @@
 """Pallas-kernel backends: separate-kernel (`pallas`) and single-pass
-(`fused`) engines for Algorithm 1.
+(`fused`) engines for Algorithm 1 (DESIGN.md §Kernels-v2).
+
+`fused` consumes `fused_lloyd_pallas` v2: distances, argmin, cluster stats
+and energy in ONE physical pass over X for *arbitrary* K — the kernel
+k-tiles the centroid stream and carries the running argmin in VMEM
+scratch, so the old K*d VMEM gate (and its fallback to the two-kernel
+path) is gone.  Under the step-driven solver an accepted Algorithm-1
+iteration therefore costs exactly one X read — the paper's Sec-2.1 cost
+model realised on hardware at any K.
 
 `pallas` drives the tiled assignment and one-hot-matmul update kernels as
-two X passes per step — the path for K*d too large to hold C fully in VMEM.
+two X passes per step — kept as the decomposed engine (predict-style
+assignment reuse, per-kernel benchmarking) and as an independent check on
+the fused path.
 
-`fused` consumes `fused_lloyd_pallas`: distances, argmin, cluster stats and
-energy in ONE physical pass over X (the kernel holds C in VMEM, valid while
-the K*d centroid block fits the FUSED_VMEM_BYTES budget at the compute
-dtype's byte width).  Under the step-driven solver an accepted
-Algorithm-1 iteration therefore costs exactly one X read — the paper's
-Sec-2.1 cost model realised on hardware.  `fused_backend` falls back to the
-two-kernel step when K*d exceeds the VMEM budget.
+Both backends fill all three step slots natively (v2):
 
-On non-TPU hosts the kernels execute in interpret mode (correctness path);
-the TPU lowering is exercised by the dry-run entrypoints.
+  * ``step``           — one fused pass / assignment+update pair;
+  * ``batched_step``   — the kernels' leading-R grid runs R centroid
+    sets per launch (multi-restart driver, the minibatch guard's R=2);
+  * ``minibatch_step`` — the kernels' native row weights fold chunk
+    weights into sums/counts/energy in the same pass, instead of the
+    generic step + weighted-segment-sum fallback.
+
+Precision policy (applied identically in both engines): the *compute*
+dtype covers the distance math AND the X stream into the stats matmul —
+X enters VMEM once per pass, in one dtype — while sums/counts/energy
+accumulate in f32 on the MXU (`preferred_element_type`) and are returned
+in the policy's accum dtype.  (v1 split the difference: assignment saw
+the compute-cast X but the update kernel re-read the uncast original,
+so the two engines' stats disagreed at bf16.)
+
+On non-TPU hosts the kernels execute in interpret mode (correctness
+path); the TPU lowering is exercised by the dry-run entrypoints.
 """
 
 from __future__ import annotations
@@ -24,17 +43,14 @@ import jax.numpy as jnp
 from repro.core.backends.base import (Backend, Precision, StepResult,
                                       DEFAULT_PRECISION)
 from repro.core.lloyd import AssignResult
+from repro.kernels import tiles
 from repro.kernels.assignment import assignment_pallas
 from repro.kernels.fused_lloyd import fused_lloyd_pallas
 from repro.kernels.update import update_pallas
 
-# VMEM budget for holding the full centroid block in the fused kernel:
-# 8 MB, about half of one core's VMEM.  The gate is in BYTES of the
-# *compute* dtype — at bf16 the same budget holds 2x the K*d elements
-# (an element-count gate assuming f32 made bf16 fall back to the
-# two-kernel path 2x too early).  FUSED_MAX_KD keeps the legacy
-# f32-element view of the same budget for existing callers.
-FUSED_VMEM_BYTES = 8 * 1024 * 1024
+# Legacy names: the VMEM budget is no longer a gate (there is no fallback
+# path) — it seeds the tile chooser's footprint model (kernels/tiles.py).
+FUSED_VMEM_BYTES = tiles.DEFAULT_VMEM_BUDGET
 FUSED_MAX_KD = FUSED_VMEM_BYTES // 4
 
 
@@ -51,46 +67,105 @@ def _stats_fn(x, labels, k):
     return update_pallas(x, labels, k, interpret=_interpret())
 
 
+def _pack(precision: Precision, labels, mind, sums, counts, energy=None):
+    acc = precision.accum_dtype
+    mind = mind.astype(acc)
+    if energy is None:
+        energy = jnp.sum(mind, axis=-1)
+    else:
+        energy = energy.astype(acc)
+    return StepResult(labels, mind, sums.astype(acc), counts.astype(acc),
+                      energy)
+
+
+# ---------------------------------------------------------------------------
+# Split two-kernel engine ("pallas")
+# ---------------------------------------------------------------------------
+
 def _split_step(precision: Precision):
     def step_fn(x, c, k, carry):
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(c)
         labels, mind = assignment_pallas(xc, cc, interpret=_interpret())
-        sums, counts = update_pallas(x, labels, k, interpret=_interpret())
-        acc = precision.accum_dtype
-        mind = mind.astype(acc)
-        return StepResult(labels, mind, sums.astype(acc), counts.astype(acc),
-                          jnp.sum(mind)), carry
+        # policy: the stats matmul reads the same compute-cast X as the
+        # distance pass (one X stream, one dtype), accumulating in f32
+        sums, counts = update_pallas(xc, labels, k, interpret=_interpret())
+        return _pack(precision, labels, mind, sums, counts), carry
     return step_fn
+
+
+def _split_batched(precision: Precision):
+    def batched_step_fn(x, cs, k, carries):
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(cs)
+        labels, mind = assignment_pallas(xc, cc, interpret=_interpret())
+        sums, counts = update_pallas(xc, labels, k, interpret=_interpret())
+        return _pack(precision, labels, mind, sums, counts), carries
+    return batched_step_fn
+
+
+def _split_minibatch(precision: Precision):
+    def minibatch_step_fn(x, c, k, w, carry):
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(c)
+        labels, mind = assignment_pallas(xc, cc, interpret=_interpret())
+        sums, counts = update_pallas(xc, labels, k, w=w,
+                                     interpret=_interpret())
+        acc = precision.accum_dtype
+        energy = jnp.sum(mind.astype(acc) * w.astype(acc))
+        return _pack(precision, labels, mind, sums, counts, energy), carry
+    return minibatch_step_fn
 
 
 def pallas_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     return Backend(name="pallas",
                    step_fn=_split_step(precision),
+                   batched_step_fn=_split_batched(precision),
+                   minibatch_step_fn=_split_minibatch(precision),
                    stats_fn=_stats_fn,
                    assign_fn=_assign_fn,
                    precision=precision)
 
 
-def fused_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
-    split = _split_step(precision)
+# ---------------------------------------------------------------------------
+# Single-pass engine ("fused")
+# ---------------------------------------------------------------------------
 
+def _fused_step(precision: Precision):
     def step_fn(x, c, k, carry):
-        cdtype = jnp.dtype(precision.compute) if precision.compute is not None \
-            else x.dtype
-        # static shapes: Python branch
-        if k * x.shape[1] * cdtype.itemsize > FUSED_VMEM_BYTES:
-            return split(x, c, k, carry)
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(c)
         labels, mind, sums, counts, energy = fused_lloyd_pallas(
             xc, cc, interpret=_interpret())
-        acc = precision.accum_dtype
-        return StepResult(labels, mind.astype(acc), sums.astype(acc),
-                          counts.astype(acc), energy.astype(acc)), carry
+        return _pack(precision, labels, mind, sums, counts, energy), carry
+    return step_fn
 
+
+def _fused_batched(precision: Precision):
+    def batched_step_fn(x, cs, k, carries):
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(cs)
+        labels, mind, sums, counts, energy = fused_lloyd_pallas(
+            xc, cc, interpret=_interpret())
+        return _pack(precision, labels, mind, sums, counts, energy), carries
+    return batched_step_fn
+
+
+def _fused_minibatch(precision: Precision):
+    def minibatch_step_fn(x, c, k, w, carry):
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(c)
+        labels, mind, sums, counts, energy = fused_lloyd_pallas(
+            xc, cc, w, interpret=_interpret())
+        return _pack(precision, labels, mind, sums, counts, energy), carry
+    return minibatch_step_fn
+
+
+def fused_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     return Backend(name="fused",
-                   step_fn=step_fn,
+                   step_fn=_fused_step(precision),
+                   batched_step_fn=_fused_batched(precision),
+                   minibatch_step_fn=_fused_minibatch(precision),
                    stats_fn=_stats_fn,
                    assign_fn=_assign_fn,
                    precision=precision)

@@ -22,9 +22,11 @@ Three adaptations of Algorithm 1, all local to this module:
     accept test compares full-X energies, which are unavailable online.
     Instead each step evaluates the accelerated candidate C^t and the
     fallback C_AU^t on one fixed validation chunk (a single batched step —
-    R = 2 centroid sets, one pass over the val rows) and keeps the
-    candidate only if it is strictly better there.  The same validation
-    energies drive the paper's dynamic-m adjustment.
+    R = 2 centroid sets, one pass over the val rows; the dense backend's
+    shared-X einsum, or ONE leading-R-grid kernel launch on the
+    pallas/fused engines) and keeps the candidate only if it is strictly
+    better there.  The same validation energies drive the paper's
+    dynamic-m adjustment.
 
   * **Seeding happens on the first chunk.**  The window is seeded with
     (G(C^0) − C^0, G(C^0)) computed from chunk 0's stats; the first step
@@ -119,9 +121,10 @@ def guard_pick(x_val, state: MiniBatchState, cfg: MiniBatchConfig,
     """Validation-chunk energy guard (Algorithm 1 lines 12-14, adapted).
 
     One batched step (R = 2 centroid sets, one pass over the val rows —
-    shared-X einsum on the dense backend) prices both the accelerated
-    candidate and the fallback; the candidate is kept only if strictly
-    better.  Returns (kept_c, kept_energy, accepted, (e_cand, e_fallback)).
+    shared-X einsum on the dense backend, the native leading-R fused
+    kernel on pallas/fused) prices both the accelerated candidate and the
+    fallback; the candidate is kept only if strictly better.  Returns
+    (kept_c, kept_energy, accepted, (e_cand, e_fallback)).
     """
     cands = jnp.stack([state.c, state.c_au])
     carries = jax.vmap(lambda cc: backend.init_carry(x_val, cc, cfg.k))(cands)

@@ -1,20 +1,42 @@
-"""Fused Pallas TPU kernel: one full Lloyd pass reading X exactly once.
+"""Fused Pallas TPU kernel v2: one full Lloyd pass reading X exactly once,
+for arbitrary K (DESIGN.md §Kernels-v2).
 
-Beyond-paper TPU optimisation (see EXPERIMENTS.md §Perf).  A Lloyd iteration
-as separate assignment + update + energy passes streams X from HBM two to
-three times; since the per-iteration work is memory-bound for small/medium K
-(arithmetic intensity ~ K flops/byte for assignment), fusing the three into
-a single pass halves the dominant roofline term.
+A Lloyd iteration as separate assignment + update + energy passes streams X
+from HBM two to three times; the per-iteration work is memory-bound for
+small/medium K (arithmetic intensity ~ K flops/byte for assignment), so
+fusing the three into a single pass halves the dominant roofline term.
 
-For each (TN x d) sample tile held in VMEM:
-    1. distances to ALL centroids (C held fully in VMEM — valid for
-       K*d <= ~2 MSamples, which covers the paper's K <= 1000 regime;
-       larger K falls back to the two-kernel path),
-    2. per-row argmin -> labels tile,
-    3. one-hot^T @ X accumulation into (K, d) sums + counts,
-    4. energy accumulation sum(min_dist).
+v1 of this kernel held the full (K, d) centroid block in VMEM and fell
+back to the two-kernel path past an 8 MB gate.  v2 k-tiles instead: the
+grid is (R, n_tiles, k_tiles) with k minor, and each X row tile is
+resident in VMEM for the whole k sweep —
 
-Outputs: labels (N,), sums (K,d), counts (K,), energy (1,1).
+    1. distances of the (TN x d) X tile against one (TK x d) centroid
+       tile per grid step (MXU), folding a running (min, argmin) held in
+       VMEM *scratch* across the k tiles;
+    2. at the final k tile the assignment of the X tile is complete:
+       emit labels/min-dist and accumulate the weighted one-hot cluster
+       stats and energy — while the X block is still resident, so X is
+       read from HBM exactly once regardless of K.
+
+The (K, d) f32 stats accumulator stays VMEM-resident across the grid
+(k-tiling the *inputs* is what removed the old cliff; the accumulator's
+K·d·4 bytes is the remaining — much later — limit, priced by the
+`tiles.choose_tiles` footprint model).
+
+Row weights are native: every row's contribution to sums/counts/energy is
+scaled by its weight, which (a) makes this kernel the streaming
+`minibatch_step` (padding rows carry weight 0 and vanish exactly — no
+post-hoc subtraction) and (b) is how the wrapper handles its own
+tile-padding rows.  labels/min_sqdist stay per-row and unweighted.
+
+The leading R grid axis batches restarts: c of shape (R, K, d) runs R
+centroid sets against shared (N, d) or per-problem (R, N, d) samples in
+one kernel launch — the native `batched_step` for the multi-restart
+driver and the minibatch validation guard's R = 2 step.
+
+Outputs: labels (N,), min_sqdist (N,), sums (K,d), counts (K,), energy ()
+— with a leading R axis when c is (R, K, d).
 """
 
 from __future__ import annotations
@@ -24,120 +46,179 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.assignment import _pad_to
+from repro.kernels import tiles
+from repro.kernels.tiles import pad_to
 
-DEFAULT_TN = 512
 
+def _fused_kernel(x_ref, c_ref, csq_ref, w_ref,
+                  labels_ref, mind_ref, sums_ref, counts_ref, energy_ref,
+                  mind_s, amin_s, *, tk: int):
+    i = pl.program_id(1)          # X row tile (sequential: stats accumulate)
+    j = pl.program_id(2)          # centroid tile (minor: argmin sweep)
+    nk = pl.num_programs(2)
 
-def _fused_kernel(x_ref, c_ref, csq_ref, labels_ref, mind_ref, sums_ref,
-                  counts_ref, energy_ref):
-    i = pl.program_id(0)
-
-    x = x_ref[...]                                   # (TN, d)
-    c = c_ref[...]                                   # (K, d)
-    csq = csq_ref[...]                               # (1, K)
+    x = x_ref[...]
+    x = x.reshape(x.shape[-2], x.shape[-1])            # (TN, d)
+    c = c_ref[...].reshape(c_ref.shape[-2], c_ref.shape[-1])   # (TK, d)
+    csq = csq_ref[...].reshape(1, -1)                  # (1, TK)
 
     xf = x.astype(jnp.float32)
     xsq = jnp.sum(xf * xf, axis=-1, keepdims=True)
     cross = jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)          # (TN, K) MXU pass 1
+        preferred_element_type=jnp.float32)            # (TN, TK) on the MXU
     dist = jnp.maximum(xsq - 2.0 * cross + csq, 0.0)
 
-    labels = jnp.argmin(dist, axis=-1).astype(jnp.int32)
-    mind = jnp.min(dist, axis=-1)
-    labels_ref[...] = labels
-    mind_ref[...] = mind
+    local_min = jnp.min(dist, axis=-1)                 # (TN,)
+    local_arg = jnp.argmin(dist, axis=-1).astype(jnp.int32) + j * tk
 
-    ks = jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
-    onehot = (labels[:, None] == ks).astype(jnp.float32)
-    psum = jax.lax.dot_general(
-        onehot, xf, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)          # (K, d) MXU pass 2
-    pcount = jnp.sum(onehot, axis=0)
-    penergy = jnp.sum(mind)
+    @pl.when(j == 0)
+    def _seed():
+        mind_s[...] = local_min
+        amin_s[...] = local_arg
 
-    @pl.when(i == 0)
-    def _init():
-        sums_ref[...] = psum
-        counts_ref[...] = pcount
-        energy_ref[0, 0] = penergy
+    @pl.when(j > 0)
+    def _sweep():
+        better = local_min < mind_s[...]     # strict: ties keep the low tile
+        amin_s[...] = jnp.where(better, local_arg, amin_s[...])
+        mind_s[...] = jnp.where(better, local_min, mind_s[...])
 
-    @pl.when(i > 0)
-    def _accum():
-        sums_ref[...] += psum
-        counts_ref[...] += pcount
-        energy_ref[0, 0] += penergy
+    # Final k tile: the X tile's assignment is complete and the block is
+    # still resident — emit everything the step needs in the same pass.
+    @pl.when(j == nk - 1)
+    def _emit():
+        labels = amin_s[...]
+        mind = mind_s[...]
+        w = w_ref[...]                                 # (TN,) f32
+        labels_ref[...] = labels.reshape(labels_ref.shape)
+        mind_ref[...] = mind.reshape(mind_ref.shape)
+
+        @pl.when(i == 0)
+        def _init():
+            sums_ref[...] = jnp.zeros(sums_ref.shape, sums_ref.dtype)
+            counts_ref[...] = jnp.zeros(counts_ref.shape, counts_ref.dtype)
+            energy_ref[...] = jnp.zeros(energy_ref.shape, energy_ref.dtype)
+
+        tn = labels.shape[0]
+
+        def _accum_tile(jj, carry):
+            # Weighted one-hot restricted to centroid tile jj keeps the
+            # intermediate at (TN, TK) — never (TN, K).
+            ks = jax.lax.broadcasted_iota(jnp.int32, (tn, tk), 1) + jj * tk
+            onehot = jnp.where(labels[:, None] == ks, w[:, None],
+                               jnp.float32(0.0))
+            psum = jax.lax.dot_general(
+                onehot, xf, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)    # (TK, d) on the MXU
+            sums_ref[0, pl.ds(jj * tk, tk), :] += psum
+            counts_ref[0, pl.ds(jj * tk, tk)] += jnp.sum(onehot, axis=0)
+            return carry
+
+        jax.lax.fori_loop(0, nk, _accum_tile, 0)
+        energy_ref[0, 0] += jnp.sum(mind * w)
 
 
-@functools.partial(jax.jit, static_argnames=("tn", "interpret"))
-def fused_lloyd_pallas(x: jax.Array, c: jax.Array, *,
-                       tn: int = DEFAULT_TN, interpret: bool = False):
-    """Fused assignment+update+energy.  x (N,d), c (K,d) ->
-    (labels (N,) i32, min_sqdist (N,) f32, sums (K,d) f32, counts (K,) f32,
-    energy () f32).
+@functools.partial(jax.jit, static_argnames=("tn", "tk", "interpret"))
+def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
+    r, k, d = cs.shape
+    n = x.shape[-2]
+    x_batched = x.ndim == 3
 
-    Requires K*d to fit in VMEM (checked by the ops.py dispatcher).
-    Padded sample rows carry +0 contribution: their distances are computed
-    against real centroids but their one-hot row is forced to zero and their
-    min-dist excluded from the energy.
-    """
-    n, d = x.shape
-    k = c.shape[0]
-    tn = min(tn, max(8, n))
-
-    xp = _pad_to(x, 0, tn)
-    xp = _pad_to(xp, 1, 128)
-    cp = _pad_to(c, 0, 8)
-    cp = _pad_to(cp, 1, 128)
+    xp = pad_to(pad_to(x, -2, tn), -1, tiles.LANE)
+    cp = pad_to(pad_to(cs, -2, tk), -1, tiles.LANE)
+    wp = pad_to(w, 0, tn)            # tile-padding rows weigh 0 -> inert
 
     cpf = cp.astype(jnp.float32)
-    csq = jnp.sum(cpf * cpf, axis=-1)
-    if cp.shape[0] != k:
-        mask = jnp.arange(cp.shape[0]) >= k
-        csq = jnp.where(mask, jnp.float32(jnp.finfo(jnp.float32).max), csq)
-    csq = csq[None, :]                                # (1, Kp)
+    csq = jnp.sum(cpf * cpf, axis=-1)                  # (R, Kp)
+    if cp.shape[-2] != k:
+        # padded centroid rows must never win the argmin
+        mask = jnp.arange(cp.shape[-2]) >= k
+        csq = jnp.where(mask[None, :],
+                        jnp.float32(jnp.finfo(jnp.float32).max), csq)
 
-    np_, dp = xp.shape
-    kp = cp.shape[0]
-    # Zero padded sample rows so their sum/count/energy contribution is a
-    # clean zero in exactly one cluster... instead: set their x to the first
-    # centroid and subtract?  Simpler and exact: mask via a validity column.
-    # We pass padded rows as all-zero and post-subtract their contribution.
-    n_pad = np_ - n
+    np_, dp = xp.shape[-2], xp.shape[-1]
+    kp = cp.shape[-2]
+    grid = (r, np_ // tn, kp // tk)
 
-    labels, mind, sums, counts, energy = pl.pallas_call(
-        _fused_kernel,
-        grid=(np_ // tn,),
+    if x_batched:
+        x_spec = pl.BlockSpec((1, tn, dp), lambda rr, i, j: (rr, i, 0))
+    else:
+        x_spec = pl.BlockSpec((tn, dp), lambda rr, i, j: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, tk=tk),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((tn, dp), lambda i: (i, 0)),
-            pl.BlockSpec((kp, dp), lambda i: (0, 0)),
-            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+            x_spec,
+            pl.BlockSpec((1, tk, dp), lambda rr, i, j: (rr, j, 0)),
+            pl.BlockSpec((1, tk), lambda rr, i, j: (rr, j)),
+            pl.BlockSpec((tn,), lambda rr, i, j: (i,)),
         ],
         out_specs=[
-            pl.BlockSpec((tn,), lambda i: (i,)),
-            pl.BlockSpec((tn,), lambda i: (i,)),
-            pl.BlockSpec((kp, dp), lambda i: (0, 0)),
-            pl.BlockSpec((kp,), lambda i: (0,)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+            pl.BlockSpec((1, kp, dp), lambda rr, i, j: (rr, 0, 0)),
+            pl.BlockSpec((1, kp), lambda rr, i, j: (rr, 0)),
+            pl.BlockSpec((1, 1), lambda rr, i, j: (rr, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((np_,), jnp.int32),
-            jax.ShapeDtypeStruct((np_,), jnp.float32),
-            jax.ShapeDtypeStruct((kp, dp), jnp.float32),
-            jax.ShapeDtypeStruct((kp,), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, np_), jnp.int32),
+            jax.ShapeDtypeStruct((r, np_), jnp.float32),
+            jax.ShapeDtypeStruct((r, kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((r, kp), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((tn,), jnp.float32),            # running min
+            pltpu.VMEM((tn,), jnp.int32),              # running argmin
+        ],
+        # restarts are independent; stats accumulate across i; the k
+        # sweep folds scratch sequentially
+        **tiles.dimension_semantics("parallel", "arbitrary", "arbitrary"),
         interpret=interpret,
-    )(xp, cp, csq)
+    )(xp, cp, csq, wp)
 
-    if n_pad:
-        # Padded rows are all-zero samples: they were assigned to the
-        # centroid nearest the origin.  Remove their contribution exactly.
-        zlab, zmind = labels[n], jnp.min(csq)  # identical for every pad row
-        sums = sums  # zero rows add nothing to sums
-        counts = counts.at[zlab].add(-jnp.float32(n_pad))
-        energy = energy - jnp.float32(n_pad) * zmind
-    return (labels[:n], mind[:n], sums[:k, :d], counts[:k],
-            energy[0, 0])
+
+def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
+                       tn=None, tk=None, interpret: bool = False,
+                       vmem_bytes=None):
+    """Fused assignment+update+energy in ONE physical pass over x.
+
+    x: (N, d) — or (R, N, d) for per-problem batches; c: (K, d) — or
+    (R, K, d) to run R centroid sets in one launch (the batched slot).
+    w: optional (N,) row weights folded into sums/counts/energy (the
+    minibatch slot; labels/min_sqdist stay unweighted).
+
+    Returns (labels i32, min_sqdist f32, sums (K,d) f32, counts (K,) f32,
+    energy () f32), each gaining a leading R axis when c is (R, K, d).
+
+    Tile sizes default to `tiles.choose_tiles` (VMEM-budget-aware; k is
+    tiled, so arbitrary K takes this path — there is no fallback).
+    """
+    batched = c.ndim == 3
+    if x.ndim == 3 and not batched:
+        raise ValueError(
+            f"per-problem x {x.shape} needs a per-problem c (R, K, d); "
+            f"got {c.shape} — broadcast c yourself if the sets are shared")
+    cs = c if batched else c[None]
+    k, d = cs.shape[-2], cs.shape[-1]
+    n = x.shape[-2]
+    if w is None:
+        w = jnp.ones((n,), jnp.float32)
+    else:
+        w = w.astype(jnp.float32)
+    if tn is None or tk is None:
+        ct, ck = tiles.choose_tiles(n, k, d, jnp.dtype(x.dtype).itemsize,
+                                    kind="fused", vmem_bytes=vmem_bytes)
+        tn = ct if tn is None else tn
+        tk = ck if tk is None else tk
+
+    labels, mind, sums, counts, energy = _fused_call(
+        x, cs, w, tn=tn, tk=tk, interpret=interpret)
+    labels, mind = labels[:, :n], mind[:, :n]
+    sums, counts, energy = sums[:, :k, :d], counts[:, :k], energy[:, 0]
+    if not batched:
+        return labels[0], mind[0], sums[0], counts[0], energy[0]
+    return labels, mind, sums, counts, energy

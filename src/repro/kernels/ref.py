@@ -21,12 +21,14 @@ def assignment_ref(x: jax.Array, c: jax.Array):
     return jnp.argmin(d, axis=-1).astype(jnp.int32), jnp.min(d, axis=-1)
 
 
-def update_ref(x: jax.Array, labels: jax.Array, k: int):
-    """Per-cluster sums and counts.  -> (sums (K,d) f32, counts (K,) f32)."""
+def update_ref(x: jax.Array, labels: jax.Array, k: int, w=None):
+    """Per-cluster sums and counts, optionally row-weighted by w (N,).
+    -> (sums (K,d) f32, counts (K,) f32)."""
     x = x.astype(jnp.float32)
-    sums = jax.ops.segment_sum(x, labels, num_segments=k)
-    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), jnp.float32), labels,
-                                 num_segments=k)
+    w = jnp.ones((x.shape[0],), jnp.float32) if w is None \
+        else w.astype(jnp.float32)
+    sums = jax.ops.segment_sum(x * w[:, None], labels, num_segments=k)
+    counts = jax.ops.segment_sum(w, labels, num_segments=k)
     return sums, counts
 
 

@@ -1,0 +1,149 @@
+"""VMEM-aware tile sizing for the Pallas kernel engine (DESIGN.md
+§Kernels-v2).
+
+Every kernel in this package streams X in (TN x d) row tiles and C in
+(TK x d) centroid tiles.  The v1 kernels hardcoded TN = TK = 512, which
+(a) wasted VMEM at small d and (b) said nothing about whether a tile
+actually fits — the fused kernel instead *gated* on K*d and fell back to
+a two-kernel path.  v2 replaces both with `choose_tiles`: given the
+problem shape and the compute dtype's byte width, pick the largest
+(TN, TK) whose working set fits the VMEM budget, shrinking the k tile
+first (k-tiling is the lever that removed the fused kernel's VMEM
+cliff; see fused_lloyd.py).
+
+The budget is ``DEFAULT_VMEM_BUDGET`` (8 MB, about half of one core's
+VMEM — the other half is slack for Mosaic's own temporaries and the
+double-buffering head-room the model below only approximates).  The
+footprint model counts, per kernel kind:
+
+  * double-buffered input tiles (X, C, |c|², row weights, labels),
+  * the distance / one-hot compute blocks (TN x TK f32),
+  * the *resident* accumulators: the fused kernel accumulates the full
+    (K, d) f32 cluster stats in VMEM across the whole grid, so K·d·4
+    bytes is a fixed term no tile size can shrink.  For K·d beyond the
+    budget the chooser bottoms out at the minimum tile and the kernel
+    still compiles — the accumulator is then the compiler's (spilling)
+    problem, not a Python-level fallback.  The cross-over sits far
+    above the paper's K <= 1000 regime.
+
+`dimension_semantics` builds the Mosaic compiler hint (parallel over
+the restart/sample grid axes, arbitrary over the sequential k axis) in
+a form that degrades gracefully across jax versions.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128                       # minor-dim tile width on TPU
+MAX_TILE = 512                   # largest row tile the chooser will pick
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def round_up(v: int, m: int) -> int:
+    return v + (-v) % m
+
+
+def sublane(itemsize: int) -> int:
+    """Minimum second-to-minor tile extent for a dtype's byte width."""
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def pad_to(a: jax.Array, axis: int, multiple: int, value=0.0):
+    """Pad ``axis`` of ``a`` up to a multiple of ``multiple``."""
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis % a.ndim] = (0, rem)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _resident(kind: str, kp: int, dp: int) -> int:
+    """Grid-resident bytes that no tile size can shrink (the fused
+    kernel's f32 stats accumulators)."""
+    return kp * dp * 4 + kp * 4 + 8 if kind == "fused" else 0
+
+
+def _tile_cost(kind: str, tn: int, tk: int, dp: int, itemsize: int) -> int:
+    """Tile-dependent VMEM bytes of one grid cell's working set."""
+    x_tile = 2 * tn * dp * itemsize          # double-buffered X tile
+    c_tile = 2 * tk * dp * itemsize          # double-buffered C tile
+    csq_tile = 2 * tk * 4
+    w_tile = 2 * tn * 4
+    lab_tiles = 2 * tn * (4 + 4)             # labels + min-dist tiles
+    dist = tn * tk * 4                       # distance / one-hot block
+    if kind == "fused":
+        scratch = tn * (4 + 4)               # running min / argmin
+        return (x_tile + c_tile + csq_tile + w_tile + lab_tiles
+                + 2 * dist + scratch)
+    if kind == "assignment":
+        return x_tile + c_tile + csq_tile + lab_tiles + dist
+    if kind == "update":
+        out_tiles = 2 * (tk * dp * 4 + tk * 4)   # sums + counts blocks
+        return x_tile + w_tile + 2 * tn * 4 + out_tiles + dist
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def _footprint(kind: str, tn: int, tk: int, kp: int, dp: int,
+               itemsize: int) -> int:
+    """Approximate VMEM bytes of one grid cell's working set."""
+    return _tile_cost(kind, tn, tk, dp, itemsize) + _resident(kind, kp, dp)
+
+
+def choose_tiles(n: int, k: int, d: int, itemsize: int, *,
+                 kind: str = "fused",
+                 vmem_bytes: Optional[int] = None) -> Tuple[int, int]:
+    """Pick (tn, tk) for a kernel of ``kind`` so its working set fits.
+
+    Starts from MAX_TILE and halves the larger of the two tiles (k tile
+    on ties — k-tiling is the v2 lever) until the `_footprint` model
+    fits ``vmem_bytes`` (default: the module's ``DEFAULT_VMEM_BUDGET``,
+    read at call time so tests can monkeypatch it).  Tiles are kept at
+    multiples of the dtype's sublane and never exceed the padded
+    problem extent.
+
+    The fused kernel's grid-resident stats accumulator is charged only
+    up to *half* the budget: once K·d is irreducibly past that, further
+    tile shrinking cannot buy the accumulator back — it would only
+    multiply the C re-stream traffic — so the tiles keep the remaining
+    half to size against and the accumulator becomes the compiler's
+    (spilling) problem, as documented in DESIGN.md §Kernels-v2.
+    """
+    budget = DEFAULT_VMEM_BUDGET if vmem_bytes is None else vmem_bytes
+    sl = sublane(itemsize)
+    dp = round_up(max(d, 1), LANE)
+    tn = min(MAX_TILE, round_up(max(n, 1), sl))
+    tk = min(MAX_TILE, round_up(max(k, 1), sl))
+
+    def cost(a, b):
+        resident = _resident(kind, round_up(max(k, 1), b), dp)
+        return _tile_cost(kind, a, b, dp, itemsize) + \
+            min(resident, budget // 2)
+
+    while cost(tn, tk) > budget and (tn > sl or tk > sl):
+        if tk >= tn and tk > sl:
+            tk = max(sl, round_up(tk // 2, sl))
+        else:
+            tn = max(sl, round_up(tn // 2, sl))
+    return tn, tk
+
+
+def dimension_semantics(*sems: str):
+    """kwargs for pl.pallas_call carrying the Mosaic dimension-semantics
+    hint ("parallel" | "arbitrary" per grid axis), or {} when the
+    installed jax has no TPU compiler-params spelling (the hint is an
+    optimisation, never a correctness requirement)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        params = getattr(pltpu, "CompilerParams", None) or \
+            getattr(pltpu, "TPUCompilerParams", None)
+        if params is None:
+            return {}
+        return {"compiler_params": params(dimension_semantics=tuple(sems))}
+    except ImportError:                      # pragma: no cover
+        return {}

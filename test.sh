@@ -6,8 +6,11 @@
 #
 #   ./test.sh              # fast tier: slow marker excluded
 #   ./test.sh --slow       # slow tier: multi-device subprocesses,
-#                          #   launchers, streaming smoke
+#                          #   launchers, streaming smoke, and the perf
+#                          #   smoke (kernels_bench --smoke in interpret
+#                          #   mode, emitting BENCH_kernels.json)
 #   ./test.sh -m 'conformance'   # any extra pytest args pass through
+#   ./test.sh -m 'perf'          # just the benchmark-harness smoke
 #
 # Notes:
 #   * PYTHONPATH=src — the package is not installed in the container.

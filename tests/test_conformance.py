@@ -163,28 +163,31 @@ def test_minibatch_zero_weight_rows_are_inert(fixture):
                                    rtol=1e-5, err_msg=name)
 
 
-def test_fused_vmem_gate_accounts_for_compute_dtype(fixture, monkeypatch):
-    """Satellite regression: the fused kernel's VMEM gate is a *byte*
-    budget at the compute dtype — at bf16 a centroid block twice the f32
-    element limit must still take the fused single-pass path (the old
-    element-count gate fell back to the two-kernel path 2x too early)."""
+def test_fused_has_no_vmem_fallback(fixture, monkeypatch):
+    """Satellite regression (kernels v2): the VMEM budget now drives the
+    tile chooser, not a gate — a budget far too small for the centroid
+    block must still take the fused single-pass kernel (k-tiled), never
+    the old two-kernel fallback, and the step must stay correct."""
     from repro.core.backends import pallas as P
+    from repro.kernels import tiles
     x, c, _, _ = fixture
-    kd_bytes_f32 = K * x.shape[1] * 4
-    calls = []
+    fused_calls, split_calls = [], []
     real = P.fused_lloyd_pallas
 
     def spy(*a, **kw):
-        calls.append(1)
+        fused_calls.append(1)
         return real(*a, **kw)
 
     monkeypatch.setattr(P, "fused_lloyd_pallas", spy)
-    # budget between the bf16 and f32 footprint of this K*d block:
-    # f32 overflows (two-kernel path, no fused call), bf16 fits.
-    monkeypatch.setattr(P, "FUSED_VMEM_BYTES", kd_bytes_f32 - 1)
-    f32_backend = P.fused_backend(B.Precision())
-    f32_backend.step(x, c, K, ())
-    assert not calls, "f32 block over budget must take the split path"
-    bf16_backend = P.fused_backend(B.Precision(compute=jnp.bfloat16))
-    bf16_backend.step(x, c, K, ())
-    assert calls, "bf16 halves the block bytes and must stay fused"
+    monkeypatch.setattr(P, "assignment_pallas",
+                        lambda *a, **kw: split_calls.append(1))
+    # smaller than one (K, d) centroid block at f32 — v1 fell back here
+    monkeypatch.setattr(tiles, "DEFAULT_VMEM_BUDGET", K * x.shape[1] * 4 - 1)
+    res, _ = P.fused_backend(B.Precision()).step(x, c, K, ())
+    assert fused_calls and not split_calls, (fused_calls, split_calls)
+    _check(x, c, res, TOLS["f32"], "fused/tiny-vmem-budget")
+    # and the chooser actually shrank the tiles under that budget
+    tn, tk = tiles.choose_tiles(x.shape[0], K, x.shape[1], 4, kind="fused")
+    assert (tn, tk) != tiles.choose_tiles(x.shape[0], K, x.shape[1], 4,
+                                          kind="fused",
+                                          vmem_bytes=tiles.MAX_TILE ** 3)
