@@ -1,0 +1,126 @@
+"""Segmentation-overhead benchmark for the persistence engine
+(DESIGN.md §Persistence).
+
+A checkpointed solve is a host loop over jit'd `while_loop` segments, so
+its cost over the monolithic solve decomposes into (a) host/dispatch
+overhead per segment boundary and (b) the `device_get` + atomic npz write
+per snapshot.  This module times the same fixed-seed solve three ways —
+monolithic, segmented with no snapshot writes (``checkpoint_cb`` only),
+and segmented with real artifacts to a temp dir — and reports the
+per-boundary overheads, so the perf trajectory catches a regression that
+would make "resumable" cost more than it must.
+
+    PYTHONPATH=src python -m benchmarks.checkpoint_bench [--json [PATH]]
+        [--checkpoint-every S] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+# full run: long enough that per-boundary cost is resolvable over noise;
+# smoke: just proves the segmented path runs end to end (CI)
+FULL = dict(n=20000, d=16, k=32, max_iter=60)
+SMOKE = dict(n=512, d=8, k=8, max_iter=12)
+
+
+def _solve_time(fn, reps=3):
+    """Median wall time of a solve, compile excluded (one warm-up call;
+    the segmented drivers block on every segment, so block_until_ready on
+    the result is enough)."""
+    import jax
+    jax.block_until_ready(fn())
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run(checkpoint_every: int = 10, smoke: bool = False) -> dict:
+    import jax.numpy as jnp
+    import jax
+
+    from repro.core.init_schemes import kmeanspp_init
+    from repro.core.kmeans import KMeansConfig, aa_kmeans
+    from repro.data.synthetic import make_blobs
+
+    p = SMOKE if smoke else FULL
+    x = jnp.asarray(make_blobs(p["n"], p["d"], p["k"], seed=0, spread=1.0))
+    c0 = kmeanspp_init(jax.random.PRNGKey(0), x, p["k"])
+    cfg = KMeansConfig(k=p["k"], max_iter=p["max_iter"])
+    every = max(1, int(checkpoint_every))
+
+    # the monolithic baseline is the jitted whole-solve program, like any
+    # production caller would run it (aa_kmeans_jit idiom)
+    mono = jax.jit(lambda xx, cc: aa_kmeans(xx, cc, cfg))
+    ref = mono(x, c0)
+    t_mono = _solve_time(lambda: mono(x, c0))
+    t_seg = _solve_time(lambda: aa_kmeans(
+        x, c0, cfg, checkpoint_every=every, checkpoint_cb=lambda st, t: None))
+    with tempfile.TemporaryDirectory() as d:
+        t_ckpt = _solve_time(lambda: aa_kmeans(
+            x, c0, cfg, checkpoint_every=every, checkpoint_dir=d))
+        n_snaps = len(list(Path(d).glob("it_*.npz")))
+        # roundtrip correctness rides along: resume the final artifact
+        res = aa_kmeans(x, c0, cfg,
+                        resume_from=max(Path(d).glob("it_*.npz")))
+    assert float(res.energy) == float(ref.energy), \
+        "resumed solve diverged from the monolithic result"
+    n_bounds = max(1, n_snaps)
+    return {
+        "n": p["n"], "d": p["d"], "k": p["k"],
+        "n_iter": int(ref.n_iter), "checkpoint_every": every,
+        "segments": n_bounds, "snapshots": n_snaps,
+        "t_monolithic_s": t_mono, "t_segmented_s": t_seg,
+        "t_checkpointed_s": t_ckpt,
+        "seg_overhead_us_per_boundary": (t_seg - t_mono) / n_bounds * 1e6,
+        "snap_overhead_us_per_snapshot": (t_ckpt - t_seg) / n_bounds * 1e6,
+    }
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--checkpoint-every", type=int, default=10,
+                        metavar="S", help="segment length in iterations")
+    parser.add_argument("--json", nargs="?", const="BENCH_checkpoint.json",
+                        default=None, metavar="PATH",
+                        help="write the record to PATH (default "
+                             "BENCH_checkpoint.json in the repo root)")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny problem; proves the segmented path (CI)")
+    args = parser.parse_args(argv)
+
+    import jax
+    rec = run(checkpoint_every=args.checkpoint_every, smoke=args.smoke)
+    tag = f"n{rec['n']}_k{rec['k']}_s{rec['checkpoint_every']}"
+    print(csv_row(f"checkpoint.monolithic.{tag}",
+                  rec["t_monolithic_s"] * 1e6))
+    print(csv_row(f"checkpoint.segmented.{tag}", rec["t_segmented_s"] * 1e6,
+                  f"boundary_us={rec['seg_overhead_us_per_boundary']:.1f}"))
+    print(csv_row(f"checkpoint.snapshotted.{tag}",
+                  rec["t_checkpointed_s"] * 1e6,
+                  f"snapshot_us={rec['snap_overhead_us_per_snapshot']:.1f};"
+                  f"snapshots={rec['snapshots']}"))
+    if args.json:
+        path = Path(args.json)
+        if not path.is_absolute():
+            path = Path(__file__).resolve().parents[1] / path
+        path.write_text(json.dumps(
+            {"schema": "checkpoint_bench/v1",
+             "backend": jax.default_backend(),
+             "smoke": args.smoke, "record": rec}, indent=2))
+        print(f"wrote {path}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,9 @@ def main() -> None:
                     choices=sorted(backend_names()),
                     help="solver engine for the table runs "
                          "(repro.core.backends registry)")
+    ap.add_argument("--checkpoint-every", type=int, default=10, metavar="S",
+                    help="segment length for the persistence-overhead "
+                         "block (benchmarks/checkpoint_bench.py)")
     args = ap.parse_args()
 
     from benchmarks import kernels_bench, roofline, table2_dynamic_m, \
@@ -65,6 +68,15 @@ def main() -> None:
     try:
         from benchmarks import batched_sweep
         batched_sweep.main(backend=args.backend)
+    except Exception:
+        traceback.print_exc()
+
+    print("# === Checkpoint segmentation overhead ===", flush=True)
+    try:
+        from benchmarks import checkpoint_bench
+        checkpoint_bench.main(
+            ["--json", "--checkpoint-every", str(args.checkpoint_every)]
+            + (["--smoke"] if args.fast else []))
     except Exception:
         traceback.print_exc()
 

@@ -1,0 +1,12 @@
+"""Checkpointing layers.
+
+``checkpointer``/``reshard`` — the generic async, atomic, mesh-aware
+training checkpointer (directory-per-step format; used by the LM launch
+stack).  ``kmeans`` — the K-Means solver/estimator persistence facade
+over `repro.core.serialize` (single-artifact snapshots, segment-loop
+resume, elastic re-mesh; DESIGN.md §Persistence).
+"""
+
+from repro.checkpoint.kmeans import (latest_snapshot,     # noqa: F401
+                                     load_estimator, resume_point,
+                                     save_estimator)

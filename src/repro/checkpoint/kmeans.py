@@ -1,0 +1,84 @@
+"""K-Means solver & model persistence facade (DESIGN.md §Persistence).
+
+The mechanics live one layer down so they stay import-cycle-free:
+
+  * `repro.core.serialize`   — the version-tagged npz/msgpack artifact;
+  * `repro.core.kmeans`      — segmented drivers (``checkpoint_every=`` /
+    ``resume_from=`` on `aa_kmeans`, `aa_kmeans_batched`,
+    `aa_kmeans_minibatch`) that write one ``it_<t>.npz`` per boundary;
+  * `repro.core.distributed` — shard_map'd segments +
+    `restore_distributed_loop_state` (elastic re-mesh on device_put);
+  * `repro.core.api`         — ``AAKMeans.save/load``,
+    ``MiniBatchAAKMeans.save/load`` (incl. a mid-``partial_fit`` stream).
+
+This module adds the operational conveniences a preemptible job actually
+calls: find the newest snapshot in a run directory, resolve the
+"fresh start or resume" decision in one line, and (re-)hydrate estimator
+artifacts without knowing which estimator class wrote them.
+
+    ckpt_dir = "gs://.../run7"      # any filesystem path
+    res = aa_kmeans(x, c0, cfg, checkpoint_every=50,
+                    checkpoint_dir=ckpt_dir,
+                    resume_from=latest_snapshot(ckpt_dir))   # None on 1st run
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Optional
+
+from repro.core import serialize
+from repro.core.api import AAKMeans, MiniBatchAAKMeans
+
+
+def latest_snapshot(ckpt_dir) -> Optional[Path]:
+    """Newest solver snapshot in a segmented run's checkpoint directory,
+    or None when there is none yet (first run / clean directory) — the
+    value to pass straight to ``resume_from=``.  Snapshots are atomically
+    renamed into place, so the newest complete artifact is always valid;
+    a stray ``.tmp`` from a crash mid-write is ignored."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    snaps = sorted(p for p in d.glob("it_*.npz") if not p.name.endswith(".tmp"))
+    return snaps[-1] if snaps else None
+
+
+def resume_point(ckpt_dir) -> tuple[Optional[Path], Optional[dict]]:
+    """(path, meta) of the newest snapshot, or (None, None).  The meta
+    block carries what a scheduler wants to log on restart: the iteration
+    / trip / epoch counter ``t``, ``k``, the backend identity, and (for
+    distributed runs) the mesh the checkpoint was taken under — which is
+    informational only, since artifacts are mesh-free (DESIGN.md
+    §Persistence, elastic restore)."""
+    p = latest_snapshot(ckpt_dir)
+    if p is None:
+        return None, None
+    meta, _ = serialize.load(p)
+    return p, meta
+
+
+_ESTIMATORS = {
+    serialize.KIND_ESTIMATOR_AA: AAKMeans,
+    serialize.KIND_ESTIMATOR_MB: MiniBatchAAKMeans,
+}
+
+
+def save_estimator(model, path) -> Path:
+    """``model.save(path)`` for either estimator (symmetry with
+    `load_estimator`)."""
+    return model.save(path)
+
+
+def load_estimator(path):
+    """Load an estimator artifact without knowing which class wrote it:
+    the artifact's ``kind`` tag picks AAKMeans vs MiniBatchAAKMeans — the
+    serving-process entry point."""
+    meta, _ = serialize.load(path)
+    cls = _ESTIMATORS.get(meta.get("kind"))
+    if cls is None:
+        raise ValueError(
+            f"{os.fspath(path)}: kind {meta.get('kind')!r} is not an "
+            f"estimator artifact (expected one of {sorted(_ESTIMATORS)})")
+    return cls.load(path)

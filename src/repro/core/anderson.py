@@ -64,6 +64,16 @@ class AAState(NamedTuple):
     ncols  : number of valid history columns (= min(t, mbar)).
     head   : next write position in the circular buffers.
     m      : current window size (dynamically adjusted).
+
+    Persistence contract (DESIGN.md §Persistence): this tuple IS the
+    acceleration's whole memory — there is no hidden host state — and
+    every leaf is a fixed-shape array, so snapshotting it (inside the
+    solver's `_LoopState`, via `repro.core.serialize`) and restoring it
+    bit-exactly resumes the accelerated trajectory the paper's energy
+    guard depends on.  A restart from bare centroids instead discards the
+    window (ncols/head/m reset), which changes every subsequent AA step.
+    Adding a field here is a snapshot-schema change: bump
+    `serialize.SCHEMA_VERSION` and provide a migration.
     """
     dF: jax.Array
     dG: jax.Array

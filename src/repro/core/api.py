@@ -24,6 +24,8 @@ mesh-fitted model keeps using its mesh for predict/transform.
 from __future__ import annotations
 
 import dataclasses
+import math
+import re
 from typing import Optional
 
 import jax
@@ -32,6 +34,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import serialize
 from repro.core.anderson import AAConfig
 from repro.core.distributed import (make_distributed_kmeans_batched,
                                     make_distributed_kmeans_minibatch,
@@ -39,9 +42,11 @@ from repro.core.distributed import (make_distributed_kmeans_batched,
 from repro.core.init_schemes import batched_init, make_init
 from repro.core.kmeans import (KMeansConfig, KMeansResult,
                                aa_kmeans_batched, aa_kmeans_minibatch,
-                               resolve_backend, select_best)
-from repro.core.minibatch import (MiniBatchConfig, guard_pick,
-                                  minibatch_init, minibatch_iteration)
+                               minibatch_stream_like, resolve_backend,
+                               select_best)
+from repro.core.minibatch import (MiniBatchConfig, MiniBatchState,
+                                  guard_pick, minibatch_init,
+                                  minibatch_iteration)
 from repro.data.streaming import (chunk_dataset, shard_count,
                                   split_validation)
 
@@ -65,6 +70,111 @@ def _mesh_rows_apply(model, x, kind, fn):
             out_specs=P(axes)))
     out = run(x_sh, jnp.asarray(model.centroids_))
     return out[:x.shape[0]]
+
+
+def _chunked_rows_apply(model, x, kind, fn, out_dtype, out_cols=None,
+                        chunk_size=None):
+    """Run ``fn(x_chunk, centroids) -> per-row output`` jitted, chunk by
+    chunk, into a HOST (numpy) array — the single-device serving path
+    shared by both estimators.  The chunking bounds the device footprint
+    for host-sized X (an (N, K) transform of such an X would not fit back
+    on device either, hence the numpy result), and the jitted fn is
+    cached on the model per (kind, backend) so a serving loop pays
+    dispatch/tracing once instead of eager per-call overhead."""
+    cache = model.__dict__.setdefault("_local_runners", {})
+    run = cache.get((kind, model.backend))
+    if run is None:
+        run = cache[(kind, model.backend)] = jax.jit(fn)
+    step = chunk_size or getattr(model, "chunk_size", 0) or 16384
+    n = x.shape[0]
+    c = jnp.asarray(model.centroids_)
+    shape = (n,) if out_cols is None else (n, out_cols)
+    out = np.empty(shape, out_dtype)
+    for i in range(0, n, step):
+        out[i:i + step] = np.asarray(run(jnp.asarray(x[i:i + step]), c))
+    return out
+
+
+# -- estimator persistence (DESIGN.md §Persistence) -------------------------
+
+def _encode_backend(bk):
+    """Registry names pass through; a Backend instance is recorded by
+    registry identity + precision policy so `load` can rebuild an
+    EQUIVALENT engine — recording only `bk.name` would either fail to
+    resolve ('blocked4096' is not a registry key) or silently drop a
+    custom precision, serving at a different dtype than the fit."""
+    if isinstance(bk, str):
+        return bk
+    enc = {"name": bk.name}
+    prec = bk.precision
+    if prec.compute is not None:
+        enc["compute"] = np.dtype(prec.compute).name
+    if prec.accum is not None:
+        enc["accum"] = np.dtype(prec.accum).name
+    return enc
+
+
+def _decode_backend(enc, path):
+    if isinstance(enc, str):
+        return enc
+    from repro.core.backends import Precision, backend_names, get_backend
+    name = enc["name"].split("@")[0]   # the mesh wrap belongs to a process
+    opts = {}
+    m = re.fullmatch(r"blocked(\d+)", name)
+    if m:
+        name, opts["block_n"] = "blocked", int(m.group(1))
+    if "compute" in enc or "accum" in enc:
+        opts["precision"] = Precision(
+            compute=np.dtype(enc["compute"]) if "compute" in enc else None,
+            accum=np.dtype(enc["accum"]) if "accum" in enc else None)
+    if name not in backend_names():
+        raise ValueError(
+            f"{path}: model was fitted with backend {enc['name']!r}, which "
+            f"cannot be rebuilt from the registry "
+            f"({sorted(backend_names())}); construct the engine yourself "
+            f"and set model.backend on the loaded model before serving")
+    return get_backend(name, **opts)
+
+
+def _save_estimator(model, path, kind, arrays: dict, stream: dict,
+                    scalars: dict):
+    """One serialize.py artifact: fitted arrays + (optionally) streaming
+    state as the tree, constructor params and scalar fitted stats in the
+    meta block.  The mesh is deliberately NOT persisted — a mesh is a
+    property of the process, not of the model; a loaded model is local
+    until the caller assigns one."""
+    params = {}
+    for f in dataclasses.fields(model):
+        if f.name.endswith("_") or f.name.startswith("_"):
+            continue
+        v = getattr(model, f.name)
+        if f.name == "mesh":
+            continue
+        if f.name == "backend":
+            v = _encode_backend(v)
+        if f.name == "data_axes":
+            v = list(v)
+        params[f.name] = v
+    tree = {"arrays": arrays}
+    if stream:
+        tree["stream"] = stream
+    return serialize.save(
+        path, tree, kind=kind,
+        extra={"params": params, "scalars": scalars,
+               "has": sorted(arrays), "has_stream": sorted(stream)})
+
+
+def _load_estimator(cls, path, kind):
+    meta, by_path = serialize.load(path, expect_kind=kind)
+    params = dict(meta["params"])
+    params["data_axes"] = tuple(params.get("data_axes", ("data",)))
+    params["backend"] = _decode_backend(params.get("backend", "dense"), path)
+    model = cls(**params)
+    for name in meta["has"]:
+        setattr(model, name, jnp.asarray(by_path[f"arrays/{name}"]))
+    for name, val in meta["scalars"].items():
+        setattr(model, name, val)
+    return model, meta, by_path
 
 
 @dataclasses.dataclass
@@ -123,9 +233,18 @@ class AAKMeans:
         # ONE device program: R restarts solved in a batch, winner picked
         # on device — n_init no longer multiplies dispatch/transfer cost.
         best: KMeansResult = fit_fn(x_in, c0s)
+        energy = float(best.energy)
+        if not math.isfinite(energy):
+            # select_best skips non-finite restarts, so reaching here means
+            # EVERY restart degenerated (NaN rows in X, exploded iterate).
+            # Surfacing beats returning restart 0 with a NaN inertia that
+            # every downstream comparison silently treats as "best".
+            raise FloatingPointError(
+                f"all {n_init} restarts produced non-finite energies "
+                f"(E={energy}); check X for NaN/inf rows")
         self.centroids_ = best.centroids
         self.labels_ = best.labels[:n]
-        self.energy_ = float(best.energy)
+        self.energy_ = energy
         self.n_iter_ = int(best.n_iter)
         self.n_accepted_ = int(best.n_accepted)
         return self
@@ -138,34 +257,64 @@ class AAKMeans:
     def _mesh_apply(self, x, kind, fn):
         return _mesh_rows_apply(self, x, kind, fn)
 
-    def predict(self, x) -> jax.Array:
+    def predict(self, x, chunk_size: Optional[int] = None):
         """Nearest-centroid labels.  A mesh-fitted model assigns under the
         same mesh/backend composition as ``fit`` — rows sharded over the
         data axes, centroids replicated — instead of silently falling back
         to a single-device pass over the full X (which defeats the point
-        of a distributed fit and breaks once N exceeds one device)."""
+        of a distributed fit and breaks once N exceeds one device).  The
+        local path runs jitted and chunked into a host array
+        (`_chunked_rows_apply`): a serving loop previously paid eager
+        dispatch per call, and a host-sized X materialised (N, K) at once."""
         self._assert_fitted()
-        x = jnp.asarray(x)
         bk = resolve_backend(self.backend)
+        label_fn = lambda xl, c: bk.assign(xl, c).labels  # noqa: E731
         if self.mesh is not None:
-            return self._mesh_apply(
-                x, "predict", lambda xl, c: bk.assign(xl, c).labels)
-        return bk.assign(x, self.centroids_).labels
+            return self._mesh_apply(jnp.asarray(x), "predict", label_fn)
+        return _chunked_rows_apply(self, x, "predict", label_fn, np.int32,
+                                   chunk_size=chunk_size)
 
-    def transform(self, x) -> jax.Array:
+    def transform(self, x, chunk_size: Optional[int] = None):
         """Distances to each centroid (N, K); mesh-fitted models compute
-        the row block on each shard's local rows (K is replicated)."""
+        the row block on each shard's local rows (K is replicated), the
+        local path is jitted + chunked like ``predict``."""
         from repro.core.lloyd import pairwise_sqdist
         self._assert_fitted()
-        x = jnp.asarray(x)
+        dist_fn = lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c))  # noqa: E731
         if self.mesh is not None:
-            return self._mesh_apply(
-                x, "transform", lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c)))
-        return jnp.sqrt(pairwise_sqdist(x, self.centroids_))
+            return self._mesh_apply(jnp.asarray(x), "transform", dist_fn)
+        return _chunked_rows_apply(self, x, "transform", dist_fn,
+                                   np.float32, out_cols=self.n_clusters,
+                                   chunk_size=chunk_size)
 
     @property
     def inertia_(self) -> float:
         return self.energy_
+
+    # -- persistence ------------------------------------------------------
+
+    def save(self, path):
+        """Persist params + fitted state to one npz artifact (no pickle;
+        `repro.core.serialize` schema) so a fitted model ships to a
+        serving process.  A Backend instance is recorded by registry
+        identity + precision and rebuilt on ``load``; the mesh is NOT
+        persisted — assign one after ``load`` when distributed serving is
+        wanted."""
+        self._assert_fitted()
+        arrays = {"centroids_": jnp.asarray(self.centroids_)}
+        if self.labels_ is not None:
+            arrays["labels_"] = jnp.asarray(self.labels_)
+        scalars = {"energy_": self.energy_, "n_iter_": self.n_iter_,
+                   "n_accepted_": self.n_accepted_}
+        return _save_estimator(self, path, serialize.KIND_ESTIMATOR_AA,
+                               arrays, {}, scalars)
+
+    @classmethod
+    def load(cls, path) -> "AAKMeans":
+        """Rebuild a fitted estimator from ``save``'s artifact."""
+        model, _, _ = _load_estimator(cls, path,
+                                      serialize.KIND_ESTIMATOR_AA)
+        return model
 
 
 @dataclasses.dataclass
@@ -353,24 +502,56 @@ class MiniBatchAAKMeans:
 
     def _chunked_apply(self, x, kind, fn, out_dtype, out_cols=None,
                        chunk_size=None):
-        """Apply ``fn(x_chunk, centroids) -> per-row output`` chunk by
-        chunk so the device footprint stays bounded for host-sized X;
-        the result stays a HOST (numpy) array for the same reason — an
-        (N, K) transform of a host-sized X would not fit back on device.
-        The jitted fn is cached per (kind, backend) — a serving loop pays
-        tracing once, like the mesh runners."""
-        cache = self.__dict__.setdefault("_local_runners", {})
-        run = cache.get((kind, self.backend))
-        if run is None:
-            run = cache[(kind, self.backend)] = jax.jit(fn)
-        step = chunk_size or self.chunk_size
-        n = x.shape[0]
-        c = jnp.asarray(self.centroids_)
-        shape = (n,) if out_cols is None else (n, out_cols)
-        out = np.empty(shape, out_dtype)
-        for i in range(0, n, step):
-            out[i:i + step] = np.asarray(run(jnp.asarray(x[i:i + step]), c))
-        return out
+        """Jitted chunk-by-chunk apply into a host array — shared with
+        AAKMeans via the module-level `_chunked_rows_apply`."""
+        return _chunked_rows_apply(self, x, kind, fn, out_dtype,
+                                   out_cols=out_cols, chunk_size=chunk_size)
+
+    # -- persistence ------------------------------------------------------
+
+    def save(self, path):
+        """Persist params + fitted state — INCLUDING an in-progress
+        ``partial_fit`` stream (running S/W stats, Anderson window, guard
+        energies, the carved validation chunk) — to one npz artifact.
+        A loaded mid-stream model continues ``partial_fit`` exactly where
+        this process stopped: the stream state is the whole trajectory
+        state, so feeding the same remaining chunks reproduces the
+        uninterrupted run bit for bit."""
+        self._assert_fitted()
+        arrays = {"centroids_": jnp.asarray(self.centroids_)}
+        if self.labels_ is not None:
+            arrays["labels_"] = jnp.asarray(self.labels_)
+        stream = {}
+        if self._state is not None:
+            stream = {"state": self._state,
+                      "x_val": jnp.asarray(self._x_val)}
+        # device scalars mid-stream (see partial_fit) -> host floats here
+        scalars = {
+            "energy_": None if self.energy_ is None else float(self.energy_),
+            "n_steps_": None if self.n_steps_ is None else int(self.n_steps_),
+            "n_accepted_": None if self.n_accepted_ is None
+            else int(self.n_accepted_)}
+        return _save_estimator(self, path, serialize.KIND_ESTIMATOR_MB,
+                               arrays, stream, scalars)
+
+    @classmethod
+    def load(cls, path) -> "MiniBatchAAKMeans":
+        """Rebuild from ``save``'s artifact; a saved mid-stream state is
+        restored so the next ``partial_fit``/``finalize`` continues the
+        stream."""
+        model, meta, by_path = _load_estimator(
+            cls, path, serialize.KIND_ESTIMATOR_MB)
+        if meta["has_stream"]:
+            like = minibatch_stream_like(
+                by_path["stream/state/c"], model._config(), model.backend)
+            state_paths, state_leaves, treedef = serialize.flatten_with_paths(
+                like["state"])
+            leaves = [jnp.asarray(np.asarray(by_path[f"stream/state/{p}"],
+                                             dtype=l.dtype))
+                      for p, l in zip(state_paths, state_leaves)]
+            model._state = jax.tree_util.tree_unflatten(treedef, leaves)
+            model._x_val = jnp.asarray(by_path["stream/x_val"])
+        return model
 
     def predict(self, x, chunk_size: Optional[int] = None):
         """Nearest-centroid labels, computed chunk by chunk into a host

@@ -80,7 +80,13 @@ class Precision:
               bf16 halves the X stream on TPU, distances still accumulate
               in f32 via preferred_element_type on the MXU paths).
     accum   — dtype for cluster sums/counts and the energy (None: f32,
-              matching the Pallas kernels' accumulators).
+              matching the Pallas kernels' accumulators).  ``accum_dtype``
+              floors the request at f32 (and `lloyd.cluster_sums`
+              promotes internally for direct callers): a sub-f32 count
+              saturates — bf16 stops counting at 256 members — which is a
+              correctness bug, not a precision trade-off, so every step
+              slot (single, batched one-hot, weighted minibatch)
+              accumulates at >= f32.
     """
     compute: Optional[Any] = None
     accum: Optional[Any] = None
@@ -90,7 +96,9 @@ class Precision:
 
     @property
     def accum_dtype(self):
-        return jnp.float32 if self.accum is None else self.accum
+        if self.accum is None:
+            return jnp.float32
+        return jnp.promote_types(self.accum, jnp.float32)
 
 
 DEFAULT_PRECISION = Precision()

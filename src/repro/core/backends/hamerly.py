@@ -37,11 +37,20 @@ from repro.core.lloyd import pairwise_sqdist
 
 
 def _full_scan(x, c):
+    """Closest two centroids per row via a top-2 min reduction.
+
+    Hamerly's bounds only ever need (argmin, min, second-min) of each
+    distance row; a full `argsort` is O(K log K) work and an (N, K)
+    permutation materialisation for three columns of output.  Two masked
+    min-reductions are O(K) and keep the argmin/argsort tie convention
+    (first index wins) so assignments are unchanged."""
     d = jnp.sqrt(pairwise_sqdist(x, c))
-    order = jnp.argsort(d, axis=1)
-    lab = order[:, 0].astype(jnp.int32)
-    n = x.shape[0]
-    return lab, d[jnp.arange(n), lab], d[jnp.arange(n), order[:, 1]]
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    d1 = jnp.min(d, axis=1)
+    k = c.shape[0]
+    others = jnp.where(jnp.arange(k)[None, :] == lab[:, None], jnp.inf, d)
+    d2 = jnp.min(others, axis=1)
+    return lab, d1, d2
 
 
 def hamerly_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:

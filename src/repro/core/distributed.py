@@ -27,14 +27,16 @@ configuration, not a code path.  The *same* Algorithm-1 driver
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Union
+import os
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import lloyd
+from repro.core import kmeans as KM
+from repro.core import lloyd, serialize
 from repro.core.backends import Backend, distribute
 from repro.core.kmeans import (KMeansConfig, KMeansResult, aa_kmeans,
                                aa_kmeans_batched, aa_kmeans_minibatch,
@@ -72,18 +74,113 @@ def distributed_lloyd_ops(data_axes: Sequence[str],
                     reduce_scalar=lambda s: jax.lax.psum(s, axes))
 
 
+def _mesh_shards(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _is_spec(s) -> bool:
+    # PartitionSpec subclasses tuple, so tree_map would descend into it
+    # without an explicit is_leaf.
+    return isinstance(s, P)
+
+
+def loop_state_specs(local_backend: Backend, cfg: KMeansConfig,
+                     x_local, c0, axes: Sequence[str]):
+    """PartitionSpec tree for a `_LoopState` under row sharding.
+
+    Per-row leaves (labels, the previous assignment, and any per-row
+    backend carry, recognised by a leading dim equal to the local row
+    count) shard over ``axes``; centroids, energies, the Anderson window
+    and the counters are replicated — exactly the layout the solver's
+    shard_map maintains, reused here as both shard_map in/out specs and
+    the device_put shardings of an elastic restore."""
+    axes = tuple(axes)
+
+    def shape_at(n_rows):
+        return jax.eval_shape(
+            lambda xx, cc: KM._init_state(xx, cc, cfg, local_backend),
+            jax.ShapeDtypeStruct((n_rows, x_local.shape[1]), x_local.dtype),
+            jax.ShapeDtypeStruct(c0.shape, c0.dtype))
+
+    # Classify carry leaves by whether their leading dim tracks the row
+    # count — probed by eval_shape at a second N, NOT by comparing shapes
+    # against n_local (a centroid-shaped carry leaf, e.g. hamerly's
+    # c_last (K, d), would collide whenever K == n_local and get sharded).
+    like = shape_at(x_local.shape[0])
+    probe = shape_at(x_local.shape[0] + 1)
+    row, rep = P(axes), P()
+
+    def carry_spec(leaf, probe_leaf):
+        per_row = getattr(leaf, "ndim", 0) >= 1 and \
+            leaf.shape[:1] != probe_leaf.shape[:1]
+        return row if per_row else rep
+
+    return KM._LoopState(
+        c=rep, c_au=rep, p_prev=row, e_prev=rep, e_prev2=rep,
+        aa=jax.tree_util.tree_map(lambda _: rep, like.aa),
+        t=rep, n_acc=rep, converged=rep, labels=row, e_last=rep,
+        carry=jax.tree_util.tree_map(carry_spec, like.carry, probe.carry))
+
+
+def restore_distributed_loop_state(path, x, c0, cfg: KMeansConfig,
+                                   local_backend: Backend,
+                                   mesh: jax.sharding.Mesh,
+                                   data_axes: Sequence[str] = ("data",)):
+    """Elastic restore: place a solver snapshot onto ``mesh``.
+
+    Snapshots store UNSHARDED host arrays (serialize.py), so restoring
+    onto a different mesh or data-axes layout than the one the checkpoint
+    was taken under is a `device_put` with the new shardings — the mesh
+    geometry appears nowhere in the artifact.  ``x``/``c0`` supply the
+    problem shapes (the like tree); the snapshot's backend identity is
+    checked up to the '@axes' distribution suffix."""
+    axes = tuple(data_axes)
+    n_shards = _mesh_shards(mesh, axes)
+    if x.shape[0] % n_shards:
+        raise ValueError(
+            f"N={x.shape[0]} must divide over the {n_shards} shards of "
+            f"mesh axes {axes} to restore onto this mesh "
+            f"(pad via shard_dataset first)")
+    like = KM.loop_state_like(x, c0, cfg, local_backend)
+    host_state, meta = serialize.restore(path, like,
+                                         expect_kind=serialize.KIND_LOOP)
+    KM._check_resume_meta(meta, cfg, local_backend, str(path))
+    x_local = jax.ShapeDtypeStruct((x.shape[0] // n_shards, x.shape[1]),
+                                   x.dtype)
+    specs = loop_state_specs(local_backend, cfg, x_local, c0, axes)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=_is_spec)
+    return jax.device_put(host_state, shardings), meta
+
+
 def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
                             data_axes: Sequence[str] = ("data",),
                             block_n: int = 0,
-                            backend: Union[str, Backend, None] = None):
+                            backend: Union[str, Backend, None] = None,
+                            checkpoint_every: int = 0,
+                            checkpoint_dir=None):
     """Build the jitted multi-device solver.
 
-    Returns ``fit(x, c0) -> KMeansResult`` where x is (N, d) sharded (or
-    shardable) over ``data_axes`` and c0 is (K, d) replicated.  N must be
-    divisible by the product of the data-axis sizes.  ``backend`` picks the
-    per-shard engine (any registry name or local Backend instance, wrapped
-    here by ``distribute``); an already distribute()-wrapped backend is
-    used as-is provided its axes match ``data_axes``.
+    Returns ``fit(x, c0, resume_from=None) -> KMeansResult`` where x is
+    (N, d) sharded (or shardable) over ``data_axes`` and c0 is (K, d)
+    replicated.  N must be divisible by the product of the data-axis
+    sizes.  ``backend`` picks the per-shard engine (any registry name or
+    local Backend instance, wrapped here by ``distribute``); an already
+    distribute()-wrapped backend is used as-is provided its axes match
+    ``data_axes``.
+
+    Persistence (DESIGN.md §Persistence): with ``checkpoint_every`` set
+    (or ``resume_from`` passed to fit), the solve runs as a host loop over
+    shard_map'd segments; snapshots gather to host via `jax.device_get`
+    and are therefore mesh-free — a checkpoint taken here restores onto a
+    DIFFERENT mesh or axes layout by building the new fit with that mesh
+    and passing the same path (`restore_distributed_loop_state` reshards
+    on device_put).  A resumed run is bit-identical to an uninterrupted
+    run on the same mesh; across meshes the trajectory agrees up to psum
+    reduction order.
     """
     axes = tuple(data_axes)
     ops = _resolve_distributed(backend, cfg, block_n, axes)
@@ -102,10 +199,73 @@ def make_distributed_kmeans(mesh: jax.sharding.Mesh, cfg: KMeansConfig,
     rep_sharding = NamedSharding(mesh, rep)
 
     @jax.jit
-    def fit(x, c0):
+    def _fit_whole(x, c0):
         x = jax.lax.with_sharding_constraint(x, x_sharding)
         c0 = jax.lax.with_sharding_constraint(c0, rep_sharding)
         return _run(x, c0)
+
+    # -- segmented path (host loop over shard_map'd while_loop segments) --
+    local = resolve_backend(backend, cfg=cfg, block_n=block_n) \
+        if not isinstance(backend, Backend) or not backend.axes else None
+    programs = {}   # (x shape/dtype, c0 shape/dtype) -> (init, seg, specs)
+
+    def _segment_programs(x, c0):
+        key = (x.shape, str(x.dtype), c0.shape, str(c0.dtype))
+        built = programs.get(key)
+        if built is not None:
+            return built
+        if local is None:
+            raise ValueError(
+                "checkpointed distributed solves need a local backend "
+                "(registry name or un-distributed instance) so the state "
+                "layout can be derived; got a pre-distributed backend")
+        n_shards = _mesh_shards(mesh, axes)
+        if x.shape[0] % n_shards:
+            raise ValueError(f"N={x.shape[0]} must be divisible by the "
+                             f"{n_shards} shards of {axes}")
+        x_local = jax.ShapeDtypeStruct((x.shape[0] // n_shards, x.shape[1]),
+                                       x.dtype)
+        specs = loop_state_specs(local, cfg, x_local, c0, axes)
+        init = jax.jit(compat.shard_map(
+            lambda xl, cc: KM._init_state(xl, cc, cfg, ops),
+            mesh=mesh, in_specs=(x_spec, rep), out_specs=specs))
+        seg = jax.jit(compat.shard_map(
+            lambda xl, st, end: KM._run_segment(xl, st, end, cfg=cfg,
+                                                backend=ops),
+            mesh=mesh, in_specs=(x_spec, specs, rep), out_specs=specs))
+        built = programs[key] = (init, seg, specs)
+        return built
+
+    def _fit_segmented(x, c0, resume_from):
+        KM._no_trace(x, "make_distributed_kmeans fit")
+        every = int(checkpoint_every) if checkpoint_every else cfg.max_iter
+        init, seg, _ = _segment_programs(x, c0)
+        x = jax.device_put(x, x_sharding)
+        c0 = jax.device_put(c0, rep_sharding)
+        if resume_from is None:
+            state = init(x, c0)
+        elif isinstance(resume_from, (str, os.PathLike)):
+            state, _ = restore_distributed_loop_state(
+                resume_from, x, c0, cfg, local, mesh, axes)
+        else:
+            state = resume_from
+        t = int(state.t)
+        while not bool(state.converged) and t < cfg.max_iter:
+            seg_end = min(t + every, cfg.max_iter)
+            state = seg(x, state, jnp.asarray(seg_end, jnp.int32))
+            t = int(state.t)
+            if checkpoint_dir is not None:
+                KM._snapshot(checkpoint_dir, state, serialize.KIND_LOOP,
+                             t, cfg, ops,
+                             extra={"mesh": dict(mesh.shape),
+                                    "data_axes": list(axes)})
+        return KM._result_from_state(state)
+
+    def fit(x, c0, resume_from=None):
+        if not checkpoint_every and checkpoint_dir is None \
+                and resume_from is None:
+            return _fit_whole(x, c0)
+        return _fit_segmented(x, c0, resume_from)
 
     return fit
 

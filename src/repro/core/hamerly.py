@@ -38,12 +38,16 @@ class HamerlyState(NamedTuple):
 
 
 def _full_scan(x, c):
+    """(argmin, min, second-min) of each distance row via two O(K) masked
+    min reductions — a full argsort is O(K log K) plus an (N, K) index
+    materialisation for three columns of output (same tie convention:
+    first index wins, exactly like argmin)."""
     d = jnp.sqrt(pairwise_sqdist(x, c))
-    order = jnp.argsort(d, axis=1)
-    lab = order[:, 0].astype(jnp.int32)
-    n = x.shape[0]
-    u = d[jnp.arange(n), lab]
-    l2 = d[jnp.arange(n), order[:, 1]]
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    u = jnp.min(d, axis=1)
+    k = c.shape[0]
+    others = jnp.where(jnp.arange(k)[None, :] == lab[:, None], jnp.inf, d)
+    l2 = jnp.min(others, axis=1)
     return lab, u, l2
 
 

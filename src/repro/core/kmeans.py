@@ -40,13 +40,15 @@ Faithfulness notes (vs. the pseudo-code in the paper):
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import time
-from typing import Any, NamedTuple, Optional, Union
+from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import anderson
+from repro.core import anderson, serialize
 from repro.core.anderson import AAConfig, AAState
 from repro.core.backends import Backend, from_lloyd_ops, get_backend
 from repro.core.lloyd import DENSE_OPS, LloydOps
@@ -222,16 +224,158 @@ def _iteration(x, state: _LoopState, cfg: KMeansConfig, backend: Backend):
     return new_state, converged, accepted, e_cur
 
 
+# ---------------------------------------------------------------------------
+# Segmented execution & persistence (DESIGN.md §Persistence)
+# ---------------------------------------------------------------------------
+#
+# A checkpointable solve runs as a HOST loop over jit'd `lax.while_loop`
+# segments: each segment executes the identical `_iteration` body until a
+# traced boundary (`state.t < seg_end`), so pausing never enters the jit
+# trace and the sequence of executed loop bodies — hence every bit of the
+# trajectory — is exactly that of the uninterrupted single-while_loop run.
+# Snapshots are the raw loop-state pytree via `repro.core.serialize`; the
+# "like" trees below derive the expected structure from the init functions
+# themselves (eval_shape), so the snapshot schema cannot drift from the
+# code.  tests/test_persistence.py proves resume parity against the golden
+# trajectory.
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _run_segment(x, state: _LoopState, seg_end, cfg: KMeansConfig,
+                 backend: Backend) -> _LoopState:
+    """Run Algorithm-1 iterations until convergence or t == seg_end.
+    ``seg_end`` is a traced scalar, so every segment of a solve reuses one
+    compiled program."""
+    def cond(st: _LoopState):
+        return jnp.logical_and(~st.converged, st.t < seg_end)
+
+    def body(st: _LoopState):
+        new_state, _, _, _ = _iteration(x, st, cfg, backend)
+        return new_state
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+_init_state_jit = jax.jit(_init_state, static_argnames=("cfg", "backend"))
+
+
+def loop_state_like(x, c0, cfg: KMeansConfig, backend: BackendLike = None):
+    """ShapeDtypeStruct tree of `_LoopState` for this problem/backend —
+    the restore target for `serialize.restore` (no compute, no copies)."""
+    bk = resolve_backend(backend, cfg=cfg)
+    return jax.eval_shape(lambda xx, cc: _init_state(xx, cc, cfg, bk),
+                          jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          jax.ShapeDtypeStruct(c0.shape, c0.dtype))
+
+
+def _backend_base(name: str) -> str:
+    """Mesh-layout-free backend identity: `distribute()` suffixes the name
+    with '@axes', which must not block an elastic (re-mesh) restore."""
+    return name.split("@")[0]
+
+
+def _check_resume_meta(meta: dict, cfg, backend: Backend, what: str):
+    if meta.get("k") is not None and meta["k"] != cfg.k:
+        raise ValueError(f"{what}: snapshot was taken at k={meta['k']}, "
+                         f"resuming with k={cfg.k}")
+    snap_bk = meta.get("backend")
+    if snap_bk and _backend_base(snap_bk) != _backend_base(backend.name):
+        raise ValueError(
+            f"{what}: snapshot was taken on backend {snap_bk!r} but the "
+            f"resume uses {backend.name!r}; the per-backend carry (and on "
+            f"some backends the reduction order) differs, so the resumed "
+            f"trajectory would not match — resume on the same engine")
+
+
+def _resolve_resume(resume_from, like, kind: str, cfg, backend: Backend):
+    """Accept a state pytree (used as-is) or an artifact path (restored
+    into ``like``); returns host/device state ready to enter a segment."""
+    if resume_from is None:
+        return None
+    if isinstance(resume_from, (str, os.PathLike)):
+        state, meta = serialize.restore(resume_from, like, expect_kind=kind)
+        _check_resume_meta(meta, cfg, backend, str(resume_from))
+        return state
+    return resume_from
+
+
+def _snapshot(checkpoint_dir, state, kind: str, step: int, cfg,
+              backend: Backend, extra: Optional[dict] = None):
+    path = os.path.join(os.fspath(checkpoint_dir), f"it_{step:08d}")
+    return serialize.save(path, state, kind=kind,
+                          extra={"t": step, "k": cfg.k,
+                                 "backend": backend.name, **(extra or {})})
+
+
+def _no_trace(x, who: str):
+    if isinstance(x, jax.core.Tracer):
+        raise ValueError(
+            f"{who} with checkpoint_every/resume_from runs a host-side "
+            f"segment loop and cannot itself be jit-traced; jit only the "
+            f"plain (checkpoint-free) call, or let the driver's internal "
+            f"per-segment jit do the compiling")
+
+
+def _result_from_state(state: _LoopState) -> KMeansResult:
+    # Iteration count convention of the paper's "a/b": b counts the initial
+    # C^1 = G(C^0) plus every fully-executed loop body; the body that merely
+    # *detects* convergence (line 4-5 early return) is not counted.
+    n_iter = state.t + jnp.where(state.converged, 0, 1)
+    return KMeansResult(state.c, state.labels, state.e_last,
+                        n_iter, state.n_acc, state.converged)
+
+
+def _aa_kmeans_segmented(x, c0, cfg: KMeansConfig, bk: Backend,
+                         checkpoint_every: int, checkpoint_dir,
+                         resume_from, checkpoint_cb) -> KMeansResult:
+    _no_trace(x, "aa_kmeans")
+    every = int(checkpoint_every) if checkpoint_every else cfg.max_iter
+    like = loop_state_like(x, c0, cfg, bk)
+    state = _resolve_resume(resume_from, like, serialize.KIND_LOOP, cfg, bk)
+    if state is None:
+        state = _init_state_jit(x, c0, cfg, bk)
+    t = int(state.t)
+    while not bool(state.converged) and t < cfg.max_iter:
+        seg_end = min(t + every, cfg.max_iter)
+        state = _run_segment(x, state, jnp.asarray(seg_end, jnp.int32),
+                             cfg, bk)
+        t = int(state.t)
+        if checkpoint_dir is not None:
+            _snapshot(checkpoint_dir, state, serialize.KIND_LOOP, t, cfg, bk)
+        if checkpoint_cb is not None:
+            checkpoint_cb(state, t)
+    return _result_from_state(state)
+
+
 def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
               ops: Optional[LloydOps] = None,
-              backend: BackendLike = None) -> KMeansResult:
+              backend: BackendLike = None, *,
+              checkpoint_every: int = 0,
+              checkpoint_dir=None,
+              resume_from=None,
+              checkpoint_cb: Optional[Callable] = None) -> KMeansResult:
     """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d).
 
     ``backend`` selects the engine ("dense" | "blocked" | "pallas" |
     "fused" | "hamerly", a Backend instance, or a distribute()-wrapped
     one).  ``ops`` is the deprecated LloydOps injection point, adapted via
-    the shim when passed."""
+    the shim when passed.
+
+    Persistence (DESIGN.md §Persistence): ``checkpoint_every=s`` runs the
+    solve as a host loop over jit'd s-iteration segments, snapshotting the
+    loop state after each segment — to ``checkpoint_dir`` (one
+    ``it_<t>.npz`` artifact per boundary, `repro.core.serialize` format)
+    and/or a ``checkpoint_cb(state, t)`` callback.  ``resume_from`` (a
+    snapshot path or a restored ``_LoopState``) continues a previous solve;
+    the resumed trajectory is bit-identical to the uninterrupted one
+    because segment boundaries only partition the identical sequence of
+    loop bodies.  The checkpoint parameters require host execution — do
+    not wrap the call itself in jit (each segment is jitted internally)."""
     bk = resolve_backend(backend, ops, cfg)
+    if checkpoint_every or checkpoint_dir is not None \
+            or resume_from is not None or checkpoint_cb is not None:
+        return _aa_kmeans_segmented(x, c0, cfg, bk, checkpoint_every,
+                                    checkpoint_dir, resume_from,
+                                    checkpoint_cb)
 
     def cond(state: _LoopState):
         return jnp.logical_and(~state.converged, state.t < cfg.max_iter)
@@ -242,12 +386,7 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
 
     state = _init_state(x, c0, cfg, bk)
     state = jax.lax.while_loop(cond, body, state)
-    # Iteration count convention of the paper's "a/b": b counts the initial
-    # C^1 = G(C^0) plus every fully-executed loop body; the body that merely
-    # *detects* convergence (line 4-5 early return) is not counted.
-    n_iter = state.t + jnp.where(state.converged, 0, 1)
-    return KMeansResult(state.c, state.labels, state.e_last,
-                        n_iter, state.n_acc, state.converged)
+    return _result_from_state(state)
 
 
 def aa_kmeans_jit(x, c0, cfg: KMeansConfig, ops: Optional[LloydOps] = None,
@@ -370,9 +509,57 @@ def _batched_body(x, bst: _BatchedState, cfg: KMeansConfig,
         in_axes=(0 if x_batched else None, 0, 0, 0))(x, res, carry, bst)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "x_batched"))
+def _run_batched_segment(x, bst: _BatchedState, max_trips, cfg: KMeansConfig,
+                         backend: Backend, x_batched: bool) -> _BatchedState:
+    """Run up to ``max_trips`` batched loop trips (one backend step each).
+
+    Restarts' iteration counters drift apart (a rejected iteration spans
+    two trips), so segments are bounded by the TRIP count, which is the
+    unit the shared while_loop actually executes: pausing at a trip
+    boundary partitions the uninterrupted trip sequence exactly, which is
+    what makes a resumed batched solve bit-identical."""
+    def cond(carry):
+        b, i = carry
+        return jnp.logical_and(jnp.any(_is_active(b.inner, cfg.max_iter)),
+                               i < max_trips)
+
+    def body(carry):
+        b, i = carry
+        new_b = _batched_body(x, b, cfg, backend, x_batched=x_batched)
+        new_b = _tree_select_rows(_is_active(b.inner, cfg.max_iter),
+                                  new_b, b)
+        return new_b, i + 1
+
+    bst, _ = jax.lax.while_loop(cond, body,
+                                (bst, jnp.array(0, jnp.int32)))
+    return bst
+
+
+def batched_state_like(x, c0s, cfg: KMeansConfig,
+                       backend: BackendLike = None):
+    """ShapeDtypeStruct tree of `_BatchedState` for this problem — the
+    restore target for a batched-solver snapshot."""
+    bk = resolve_backend(backend, cfg=cfg)
+    x_axis = 0 if x.ndim == 3 else None
+
+    def build(xx, cc):
+        inner = jax.vmap(lambda xr, cr: _init_state(xr, cr, cfg, bk),
+                         in_axes=(x_axis, 0))(xx, cc)
+        return _BatchedState(inner, jnp.zeros((cc.shape[0],), bool))
+
+    return jax.eval_shape(build, jax.ShapeDtypeStruct(x.shape, x.dtype),
+                          jax.ShapeDtypeStruct(c0s.shape, c0s.dtype))
+
+
 def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
                       ops: Optional[LloydOps] = None,
-                      backend: BackendLike = None) -> KMeansResult:
+                      backend: BackendLike = None, *,
+                      checkpoint_every: int = 0,
+                      checkpoint_dir=None,
+                      resume_from=None,
+                      checkpoint_cb: Optional[Callable] = None
+                      ) -> KMeansResult:
     """Batched Algorithm 1: R independent solves in one device program.
 
     ``c0s`` is (R, K, d) — one seed set per restart/problem.  ``x`` is
@@ -392,6 +579,11 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
 
     Returns a ``KMeansResult`` whose every leaf carries a leading R axis.
     Use ``select_best`` for on-device best-of-R selection.
+
+    ``checkpoint_every=s`` segments the solve every s loop TRIPS (one
+    batched backend step each; a rejected iteration spans two trips) and
+    snapshots the whole per-restart state — see ``aa_kmeans`` for the
+    checkpoint/resume contract, which carries over verbatim.
     """
     if c0s.ndim != 3:
         raise ValueError(f"c0s must be (R, K, d); got shape {c0s.shape}")
@@ -403,6 +595,12 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
             f"{c0s.shape[0]} seed sets")
     bk = resolve_backend(backend, ops, cfg)
     x_axis = 0 if x.ndim == 3 else None
+
+    if checkpoint_every or checkpoint_dir is not None \
+            or resume_from is not None or checkpoint_cb is not None:
+        return _aa_kmeans_batched_segmented(
+            x, c0s, cfg, bk, x_axis, checkpoint_every, checkpoint_dir,
+            resume_from, checkpoint_cb)
 
     inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, bk),
                       in_axes=(x_axis, 0))(x, c0s)
@@ -424,16 +622,62 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
         return _tree_select_rows(active(bst), new_bst, bst)
 
     states = jax.lax.while_loop(cond, body, states).inner
-    n_iter = states.t + jnp.where(states.converged, 0, 1)
-    return KMeansResult(states.c, states.labels, states.e_last,
-                        n_iter, states.n_acc, states.converged)
+    return _result_from_state(states)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend", "x_axis"))
+def _init_batched_state(x, c0s, cfg: KMeansConfig, backend: Backend,
+                        x_axis) -> _BatchedState:
+    inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, backend),
+                      in_axes=(x_axis, 0))(x, c0s)
+    return _BatchedState(inner0, jnp.zeros((c0s.shape[0],), bool))
+
+
+def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
+                                 x_axis, checkpoint_every, checkpoint_dir,
+                                 resume_from, checkpoint_cb) -> KMeansResult:
+    _no_trace(x, "aa_kmeans_batched")
+    # Worst case every Algorithm-1 iteration rejects, costing two trips.
+    every = int(checkpoint_every) if checkpoint_every \
+        else 2 * cfg.max_iter + 1
+    like = batched_state_like(x, c0s, cfg, bk)
+    trips = 0
+    if isinstance(resume_from, (str, os.PathLike)):
+        bst, meta = serialize.restore(resume_from, like,
+                                      expect_kind=serialize.KIND_BATCHED)
+        _check_resume_meta(meta, cfg, bk, str(resume_from))
+        trips = int(meta.get("t", 0))
+    elif resume_from is not None:
+        bst = resume_from
+        trips = int(jnp.max(resume_from.inner.t))   # snapshot naming only
+    else:
+        bst = _init_batched_state(x, c0s, cfg, bk, x_axis)
+    while bool(jnp.any(_is_active(bst.inner, cfg.max_iter))):
+        bst = _run_batched_segment(x, bst, jnp.asarray(every, jnp.int32),
+                                   cfg, bk, x_batched=(x_axis == 0))
+        trips += every   # upper bound on the final segment; monotone
+        if checkpoint_dir is not None:
+            _snapshot(checkpoint_dir, bst, serialize.KIND_BATCHED, trips,
+                      cfg, bk)
+        if checkpoint_cb is not None:
+            checkpoint_cb(bst, trips)
+    return _result_from_state(bst.inner)
 
 
 def select_best(results: KMeansResult) -> KMeansResult:
     """On-device best-of-R selection: the restart with the lowest final
     energy, as an unbatched KMeansResult.  Ties break toward the lower
-    index — the same winner the sequential strict-< loop keeps."""
-    best = jnp.argmin(results.energy)
+    index — the same winner the sequential strict-< loop keeps.
+
+    A NaN final energy (degenerate restart: NaN rows in X, numerically
+    exploded iterate) never wins: `argmin` alone returns index 0 as soon
+    as ANY energy is NaN, silently crowning a broken restart.  Non-finite
+    energies are excluded from the comparison; if every restart is
+    non-finite, the returned result keeps its NaN energy so the failure
+    surfaces at the caller (the estimator raises on it) instead of being
+    masked by a plausible-looking winner."""
+    e = results.energy
+    best = jnp.argmin(jnp.where(jnp.isfinite(e), e, jnp.inf))
     return jax.tree_util.tree_map(lambda a: a[best], results)
 
 
@@ -441,12 +685,91 @@ def select_best(results: KMeansResult) -> KMeansResult:
 # Streaming mini-batch driver (chunked X; DESIGN.md §Streaming)
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _run_minibatch_epoch(chunks, weights, x_val, state, key,
+                         cfg: MiniBatchConfig, backend: Backend):
+    """One epoch as a standalone program: the exact body of the scan-path
+    ``epoch_step`` (same key-split order), so epoch-granular segmentation
+    partitions the scan's computation without changing a bit of it."""
+    key, sub = jax.random.split(key)
+    state, trace = run_epoch(chunks, weights, x_val, state, cfg, backend,
+                             sub)
+    return state, key, trace
+
+
+def minibatch_stream_like(c0, cfg: MiniBatchConfig,
+                          backend: BackendLike = None, key=None):
+    """ShapeDtypeStruct tree of a streaming-solver snapshot: the
+    `MiniBatchState` plus the epoch-shuffle key (trajectory state the
+    `lax.scan` carry holds alongside the solver state)."""
+    bk = resolve_backend(backend)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32) if key is None else \
+        jax.ShapeDtypeStruct(key.shape, key.dtype)
+    state_sds = jax.eval_shape(
+        lambda cc: minibatch_init(cc, cfg, bk),
+        jax.ShapeDtypeStruct(c0.shape, c0.dtype))
+    return {"state": state_sds, "key": key_sds}
+
+
+def _aa_kmeans_minibatch_segmented(chunks, weights, x_val, c0,
+                                   cfg: MiniBatchConfig, bk: Backend, key,
+                                   checkpoint_every, checkpoint_dir,
+                                   resume_from, checkpoint_cb,
+                                   return_trace: bool):
+    _no_trace(chunks, "aa_kmeans_minibatch")
+    every = max(1, int(checkpoint_every)) if checkpoint_every else 1
+    like = minibatch_stream_like(c0, cfg, bk, key)
+    epoch = 0
+    if isinstance(resume_from, (str, os.PathLike)):
+        tree, meta = serialize.restore(resume_from, like,
+                                       expect_kind=serialize.KIND_MINIBATCH)
+        _check_resume_meta(meta, cfg, bk, str(resume_from))
+        state, key = tree["state"], jnp.asarray(tree["key"])
+        epoch = int(meta.get("epoch", 0))
+    elif resume_from is not None:
+        state, key = resume_from["state"], resume_from["key"]
+        epoch = int(resume_from.get("epoch", 0))
+    else:
+        state = minibatch_init(c0, cfg, bk)
+    traces = []
+    while epoch < cfg.epochs:
+        state, key, trace = _run_minibatch_epoch(chunks, weights, x_val,
+                                                 state, key, cfg, bk)
+        epoch += 1
+        if return_trace:
+            traces.append(trace)
+        if checkpoint_dir is not None and \
+                (epoch % every == 0 or epoch == cfg.epochs):
+            _snapshot(checkpoint_dir, {"state": state, "key": key},
+                      serialize.KIND_MINIBATCH, epoch, cfg, bk,
+                      extra={"epoch": epoch})
+        if checkpoint_cb is not None:
+            # "epoch" rides in the payload so the dict round-trips through
+            # resume_from= without losing the counter (a path-based resume
+            # reads it from the artifact's meta instead)
+            checkpoint_cb({"state": state, "key": key, "epoch": epoch},
+                          epoch)
+    c_fin, e_fin, _, _ = guard_pick(x_val, state, cfg, bk)
+    result = MiniBatchResult(c_fin, e_fin, state.t, state.n_acc)
+    if not return_trace:
+        return result
+    # epochs run in THIS process only — a resumed run's trace covers the
+    # epochs since the snapshot, like any log that restarts with a process
+    trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *traces) \
+        if traces else None
+    return result, trace
+
+
 def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
                         x_val: jax.Array, c0: jax.Array,
                         cfg: MiniBatchConfig,
                         backend: BackendLike = None,
                         key: Optional[jax.Array] = None,
-                        return_trace: bool = False):
+                        return_trace: bool = False, *,
+                        checkpoint_every: int = 0,
+                        checkpoint_dir=None,
+                        resume_from=None,
+                        checkpoint_cb: Optional[Callable] = None):
     """Streaming Algorithm 1 over chunked data — fully jit-able.
 
     ``chunks`` is (n_chunks, B, d) with row-weight mask ``weights``
@@ -466,6 +789,10 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
     Returns a `MiniBatchResult` whose centroids are the final
     guard-picked iterate; with ``return_trace=True`` also returns a
     `MiniBatchTrace` with leaves of shape (epochs, n_chunks).
+
+    ``checkpoint_every=e`` segments the run at EPOCH granularity (a host
+    loop over the jit'd epoch program, snapshotting state + shuffle key
+    every e epochs); see ``aa_kmeans`` for the checkpoint/resume contract.
     """
     if chunks.ndim != 3:
         raise ValueError(f"chunks must be (n_chunks, B, d); got "
@@ -476,6 +803,11 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
     bk = resolve_backend(backend)
     if key is None:
         key = jax.random.PRNGKey(0)
+    if checkpoint_every or checkpoint_dir is not None \
+            or resume_from is not None or checkpoint_cb is not None:
+        return _aa_kmeans_minibatch_segmented(
+            chunks, weights, x_val, c0, cfg, bk, key, checkpoint_every,
+            checkpoint_dir, resume_from, checkpoint_cb, return_trace)
     state = minibatch_init(c0, cfg, bk)
 
     def epoch_step(carry, _):

@@ -88,10 +88,24 @@ def assign(x: jax.Array, c: jax.Array, *, block_n: int = 0,
 # Update step
 # ---------------------------------------------------------------------------
 
+def _accum_dtype(*dtypes):
+    """Statistics accumulate in AT LEAST f32 (§Kernels-v2 precision
+    policy: compute-dtype distances, f32 accumulation).  Accumulating in
+    the compute dtype is a correctness bug, not a precision trade-off: a
+    bf16 count (8 mantissa bits) stops incrementing at 256 — `256 + 1`
+    rounds back to 256 — so any cluster beyond 256 members silently
+    freezes its count and drifts its centroid.  f64 inputs keep f64."""
+    return jnp.promote_types(jnp.result_type(*dtypes), jnp.float32)
+
+
 def cluster_sums(x: jax.Array, labels: jax.Array, k: int):
-    """Per-cluster sums (K,d) and counts (K,) via segment-sum."""
-    sums = jax.ops.segment_sum(x, labels, num_segments=k)
-    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), labels,
+    """Per-cluster sums (K,d) and counts (K,) via segment-sum.
+
+    Accumulates in `_accum_dtype(x.dtype)` (>= f32) regardless of the
+    compute dtype; cast at the boundary if a narrower dtype is needed."""
+    acc = _accum_dtype(x.dtype)
+    sums = jax.ops.segment_sum(x.astype(acc), labels, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), acc), labels,
                                  num_segments=k)
     return sums, counts
 
@@ -102,9 +116,13 @@ def weighted_cluster_sums(x: jax.Array, labels: jax.Array, w: jax.Array,
 
     The masked/mini-batch generalisation of `cluster_sums`: each row
     contributes `w` times (w = 0 drops a padding row entirely; w = 1 for
-    every row recovers `cluster_sums` exactly)."""
-    sums = jax.ops.segment_sum(x * w[:, None], labels, num_segments=k)
-    counts = jax.ops.segment_sum(w, labels, num_segments=k)
+    every row recovers `cluster_sums` exactly).  Accumulates >= f32 like
+    `cluster_sums` — decayed streaming counts hit the same bf16 ceiling."""
+    acc = _accum_dtype(x.dtype, w.dtype)
+    wa = w.astype(acc)
+    sums = jax.ops.segment_sum(x.astype(acc) * wa[:, None], labels,
+                               num_segments=k)
+    counts = jax.ops.segment_sum(wa, labels, num_segments=k)
     return sums, counts
 
 
@@ -120,9 +138,12 @@ def update_from_sums(sums: jax.Array, counts: jax.Array,
 
 def update(x: jax.Array, labels: jax.Array, k: int,
            c_prev: jax.Array) -> jax.Array:
-    """Update step (Eq. 4): each centroid becomes the mean of its samples."""
+    """Update step (Eq. 4): each centroid becomes the mean of its samples.
+    The mean is formed in the >= f32 accumulation dtype and cast back to
+    the centroid dtype at the boundary."""
     sums, counts = cluster_sums(x, labels, k)
-    return update_from_sums(sums, counts, c_prev)
+    return update_from_sums(sums, counts,
+                            c_prev.astype(sums.dtype)).astype(c_prev.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -97,6 +97,8 @@ class MiniBatchResult(NamedTuple):
 def minibatch_init(c0: jax.Array, cfg: MiniBatchConfig,
                    backend: Backend) -> MiniBatchState:
     k, d = c0.shape
+    # accum_dtype is floored at f32 by the Precision policy (a bf16
+    # running count freezes at 256 — see lloyd._accum_dtype)
     acc = backend.precision.accum_dtype
     inf = jnp.array(jnp.inf, acc)
     return MiniBatchState(

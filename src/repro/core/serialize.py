@@ -1,0 +1,174 @@
+"""Versioned solver-state serialisation (DESIGN.md §Persistence).
+
+Every solver in this repo keeps its whole trajectory-defining state in a
+pytree of fixed-shape arrays (`_LoopState`/`AAState`, `_BatchedState`,
+`MiniBatchState`) precisely so it can live inside `lax.while_loop`/`scan`.
+This module is the other payoff of that discipline: any such state tree
+snapshots to ONE host-side artifact and restores bit-exactly, so a solve
+can outlive a device lease.
+
+Artifact format — a single ``.npz`` file, no pickle anywhere:
+
+  * each leaf is stored as an ``npy`` member ``a<i>`` (ml_dtypes leaves
+    such as bfloat16 round-trip through a same-width view; the true dtype
+    is recorded in the metadata and re-viewed on load);
+  * member ``__meta__`` is a msgpack blob: ``schema`` (format version),
+    ``kind`` (which state tree this is), per-leaf ``path/shape/dtype``,
+    plus caller metadata (iteration count, k, backend name, ...).
+
+Restores go *into* a caller-provided "like" tree (normally built with
+``jax.eval_shape`` over the solver's own init function, so the structure
+can never drift from the code), with shape checking per leaf.  Arrays are
+stored UNSHARDED — ``jax.device_get`` gathers across any mesh — so a
+checkpoint taken under one mesh layout restores onto any other: elastic
+resume is a ``device_put`` with the new shardings (core/distributed.py).
+
+Schema evolution contract: ``SCHEMA_VERSION`` bumps whenever a state
+tree's meaning changes (not merely its nesting — structure is checked
+against the like tree anyway); ``load`` refuses artifacts from a NEWER
+schema and leaves older-schema migration hooks to the kind owner.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+import msgpack
+
+SCHEMA_VERSION = 1
+
+# Registered state kinds (informational; `load` checks the caller's
+# expectation, not membership, so downstream layers can add kinds).
+KIND_LOOP = "loop_state"             # kmeans._LoopState
+KIND_BATCHED = "batched_state"       # kmeans._BatchedState
+KIND_MINIBATCH = "minibatch_stream"  # {"state": MiniBatchState, "key",...}
+KIND_ESTIMATOR_AA = "estimator/aa_kmeans"
+KIND_ESTIMATOR_MB = "estimator/minibatch_aa_kmeans"
+
+PyTree = Any
+
+
+def _key_name(k) -> str:
+    for attr in ("key", "name", "idx"):
+        v = getattr(k, attr, None)
+        if v is not None:
+            return str(v)
+    return str(k)
+
+
+def flatten_with_paths(tree: PyTree):
+    """Flatten a pytree to (slash-joined path strings, leaves, treedef)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(_key_name(k) for k in path) for path, _ in flat]
+    return paths, [leaf for _, leaf in flat], treedef
+
+
+def _to_storable(a: np.ndarray) -> Tuple[np.ndarray, str]:
+    """(array numpy can round-trip without pickle, true dtype string).
+
+    npy files preserve standard dtypes; extension dtypes (bfloat16 &
+    friends from ml_dtypes) come back as void — store them as-is (the
+    bytes survive) and record the dtype string so `load` can re-view."""
+    if a.dtype.hasobject:
+        raise TypeError(
+            f"refusing to serialise object-dtype leaf (shape {a.shape}); "
+            f"snapshot trees must contain only numeric arrays")
+    return a, str(a.dtype)
+
+
+def _from_storable(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    want = np.dtype(dtype_str)
+    if a.dtype == want:
+        return a
+    # extension dtype stored as void of the same width: re-view the bits
+    if a.dtype.kind == "V" and a.dtype.itemsize == want.itemsize:
+        return a.view(want)
+    return a.astype(want)
+
+
+def save(path: str | os.PathLike, tree: PyTree, *, kind: str,
+         extra: Optional[dict] = None) -> Path:
+    """Atomically write ``tree`` to ``path`` as a version-tagged npz.
+
+    Leaves are gathered to host (`jax.device_get` — works for sharded
+    arrays on any mesh).  ``extra`` is msgpack-serialisable caller
+    metadata merged into the artifact's meta block.  Returns the final
+    path (``.npz`` appended if missing)."""
+    path = Path(path)
+    if path.suffix != ".npz":
+        path = path.with_suffix(path.suffix + ".npz")
+    paths, leaves, _ = flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    stored, meta_leaves = [], []
+    for p, a in zip(paths, host):
+        s, dt = _to_storable(a)
+        stored.append(s)
+        meta_leaves.append({"path": p, "shape": list(a.shape), "dtype": dt})
+    meta = {"schema": SCHEMA_VERSION, "kind": kind,
+            "leaves": meta_leaves, **(extra or {})}
+    blob = np.frombuffer(msgpack.packb(meta), dtype=np.uint8)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=blob,
+                 **{f"a{i}": a for i, a in enumerate(stored)})
+    os.replace(tmp, path)   # a crash mid-write never corrupts an artifact
+    return path
+
+
+def load(path: str | os.PathLike, *, expect_kind: Optional[str] = None):
+    """Read an artifact -> (meta dict, {leaf path: host array}).
+
+    Validates the schema version (a NEWER schema than this code knows is
+    refused — forward compatibility is never silent) and, when
+    ``expect_kind`` is given, that the artifact holds that state kind."""
+    path = Path(path)
+    with np.load(path, allow_pickle=False) as z:
+        meta = msgpack.unpackb(bytes(z["__meta__"].tobytes()))
+        arrays = [z[f"a{i}"] for i in range(len(meta["leaves"]))]
+    schema = meta.get("schema")
+    if not isinstance(schema, int) or schema > SCHEMA_VERSION:
+        raise ValueError(
+            f"{path}: artifact schema {schema!r} is newer than this "
+            f"code's {SCHEMA_VERSION}; upgrade before restoring")
+    if expect_kind is not None and meta.get("kind") != expect_kind:
+        raise ValueError(
+            f"{path}: artifact holds {meta.get('kind')!r} state, "
+            f"expected {expect_kind!r}")
+    by_path = {m["path"]: _from_storable(a, m["dtype"])
+               for m, a in zip(meta["leaves"], arrays)}
+    return meta, by_path
+
+
+def restore(path: str | os.PathLike, like: PyTree, *,
+            expect_kind: Optional[str] = None):
+    """Restore an artifact into the structure of ``like``.
+
+    ``like`` is a pytree of arrays or ShapeDtypeStructs — build it with
+    ``jax.eval_shape`` over the solver's init so the expected structure
+    is derived from the code, never hand-maintained.  Every leaf is
+    shape-checked and cast to the like leaf's dtype (a no-op on a
+    faithful round-trip).  Returns (tree of host numpy arrays, meta)."""
+    meta, by_path = load(path, expect_kind=expect_kind)
+    want_paths, want_leaves, treedef = flatten_with_paths(like)
+    missing = [p for p in want_paths if p not in by_path]
+    if missing:
+        raise ValueError(
+            f"{path}: artifact is missing leaves {missing[:5]} "
+            f"({len(missing)} of {len(want_paths)}) — was it saved from a "
+            f"different backend or solver configuration?")
+    out = []
+    for p, w in zip(want_paths, want_leaves):
+        a = by_path[p]
+        if tuple(a.shape) != tuple(w.shape):
+            raise ValueError(
+                f"{path}: shape mismatch at {p}: artifact {a.shape} vs "
+                f"expected {tuple(w.shape)} — restore must target the "
+                f"same (N, K, d) problem the snapshot came from")
+        out.append(np.asarray(a, dtype=w.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), meta

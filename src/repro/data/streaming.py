@@ -98,7 +98,7 @@ def split_validation(x, val_size: int, key) -> Tuple[jax.Array, jax.Array]:
 
 
 def host_chunk_stream(x, chunk_size: int, epochs: int = 1, seed: int = 0,
-                      drop_remainder: bool = False):
+                      drop_remainder: bool = False, start_chunk: int = 0):
     """Generator over host-memory chunks, reshuffled per epoch.
 
     ``x`` stays a host (numpy) array; each yield materialises only one
@@ -107,14 +107,26 @@ def host_chunk_stream(x, chunk_size: int, epochs: int = 1, seed: int = 0,
     chunk of each epoch is shorter than ``chunk_size`` unless
     ``drop_remainder``; pair with `partial_fit`, which accepts any chunk
     length (uniform lengths avoid re-jitting the step).
+
+    The stream is a pure function of (x, chunk_size, epochs, seed): chunk
+    ``i`` is identical on every construction.  ``start_chunk`` skips the
+    first ``i`` chunks without touching X's rows, so a restarted process
+    resumes a persisted ``partial_fit`` stream (the estimator's
+    ``n_steps_`` counts consumed chunks) on exactly the chunk the dead
+    process would have seen next — the data half of the resume guarantee
+    (DESIGN.md §Persistence).
     """
     x = np.asarray(x)
     n = x.shape[0]
     rng = np.random.default_rng(seed)
+    skip = int(start_chunk)
     for _ in range(epochs):
         order = rng.permutation(n)
         for i in range(0, n, chunk_size):
             idx = order[i:i + chunk_size]
             if drop_remainder and idx.shape[0] < chunk_size:
                 break
+            if skip > 0:
+                skip -= 1
+                continue
             yield x[idx]

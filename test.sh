@@ -4,13 +4,18 @@
 # locally run the fast tier while iterating and the slow tier before
 # shipping — together they are exactly CI's coverage.
 #
-#   ./test.sh              # fast tier: slow marker excluded
-#   ./test.sh --slow       # slow tier: multi-device subprocesses,
-#                          #   launchers, streaming smoke, and the perf
-#                          #   smoke (kernels_bench --smoke in interpret
-#                          #   mode, emitting BENCH_kernels.json)
+#   ./test.sh              # fast tier: slow marker excluded; includes
+#                          #   the checkpoint/resume roundtrip suite
+#                          #   (tests/test_persistence.py: golden resume
+#                          #   parity, estimator save/load)
+#   ./test.sh --slow       # slow tier: multi-device subprocesses
+#                          #   (incl. elastic re-mesh resume), launchers,
+#                          #   streaming smoke, and the perf smokes
+#                          #   (kernels_bench/checkpoint_bench --smoke,
+#                          #   emitting BENCH_*.json)
 #   ./test.sh -m 'conformance'   # any extra pytest args pass through
-#   ./test.sh -m 'perf'          # just the benchmark-harness smoke
+#   ./test.sh -m 'perf'          # just the benchmark-harness smokes
+#   ./test.sh tests/test_persistence.py   # just the persistence suite
 #
 # Notes:
 #   * PYTHONPATH=src — the package is not installed in the container.

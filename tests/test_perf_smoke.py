@@ -42,3 +42,23 @@ def test_kernels_bench_emits_json(tmp_path):
     # interpret-mode Pallas rows actually measured a wall time
     assert all(r["wall_us"] is not None for r in records
                if r["wall_path"] == "pallas_interpret")
+
+
+def test_checkpoint_bench_emits_json(tmp_path):
+    """`benchmarks/run.py --checkpoint-every` block: the segmentation-
+    overhead benchmark runs (with a real snapshot + resume roundtrip
+    inside) and reports the overheads in BENCH_checkpoint.json."""
+    sys.path.insert(0, str(BENCH_DIR.parent))
+    try:
+        from benchmarks import checkpoint_bench
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_checkpoint.json"
+    rec = checkpoint_bench.main(
+        ["--smoke", "--checkpoint-every", "5", "--json", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "checkpoint_bench/v1"
+    assert payload["record"] == rec
+    assert rec["checkpoint_every"] == 5 and rec["snapshots"] >= 1
+    for key in ("t_monolithic_s", "t_segmented_s", "t_checkpointed_s"):
+        assert rec[key] > 0
