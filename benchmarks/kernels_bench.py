@@ -15,6 +15,18 @@ variant x shape: x_passes_per_iter, bytes_per_iter, flops_per_iter, wall
 time where measured).  ``--smoke`` shrinks the shapes and additionally
 drives the real Pallas kernels in interpret mode, so CI can assert the
 benchmark harness end-to-end without a TPU (test.sh --slow).
+
+Schema v3 adds the tile-skip dimension (DESIGN.md §Bounds): every record
+carries ``skipped_tile_frac`` (None for the bound-free kernels) and
+``phase``, and `bounds_records` drives the ``fused_bounds`` engine on a
+cluster-ordered workload through an "early" (first step — no valid
+bounds, zero skip, the worst case) and a "converged" (post-refinement —
+the plateau the solver spends most iterations in) phase, reporting the
+measured skipped-tile fraction and the traffic model it implies.  X
+passes stay at 1.0: skipping removes C re-streams and distance flops,
+never the single X read.  Records are emitted in a deterministic order
+with fixed seeds and sorted JSON keys, so two runs differ only in wall
+times.
 """
 
 from __future__ import annotations
@@ -42,7 +54,7 @@ SMOKE_SHAPES = [(512, 9, 10), (384, 17, 33)]
 # Deliberately a curated subset of backends.backend_names(): the backends
 # whose CPU wall clock is meaningful (Pallas engines join on real TPUs —
 # see step_bench).
-STEP_BACKENDS = ("dense", "blocked", "hamerly")
+STEP_BACKENDS = ("dense", "blocked", "hamerly", "elkan", "yinyang")
 
 
 def analyze(n, d, k, variant: str):
@@ -119,6 +131,7 @@ def kernel_records(shapes, smoke: bool = False):
             rec = {"variant": variant, "n": n, "d": d, "k": k,
                    "wall_us": None if t is None else t * 1e6,
                    "wall_path": None if t is None else "xla_ref",
+                   "skipped_tile_frac": None, "phase": None,
                    **analyze(n, d, k, variant)}
             records.append(rec)
 
@@ -143,7 +156,85 @@ def kernel_records(shapes, smoke: bool = False):
                 records.append({"variant": variant, "n": n, "d": d, "k": k,
                                 "wall_us": t * 1e6,
                                 "wall_path": "pallas_interpret",
+                                "skipped_tile_frac": None, "phase": None,
                                 **analyze(n, d, k, base)})
+    return records
+
+
+def bounds_workload(k=32, d=16, per=64, seed=7):
+    """A cluster-ordered synthetic problem for the tile-skip benchmark.
+
+    `make_blobs` draws each row's component at random, so consecutive
+    rows land in unrelated clusters and an X row *tile* always spans many
+    groups — the tile-level predicate (ANY row needs the k tile) then
+    never fires even when per-row elimination is near total.  This
+    workload instead lays rows out cluster by cluster (the favourable
+    locality a sorted / sharded ingest provides), with the centroid order
+    matching, so a converged row tile needs only the k tiles its own
+    clusters live in."""
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((k, d)).astype(np.float32) * 20.0
+    x = np.concatenate([centers[j] + rng.standard_normal((per, d))
+                        .astype(np.float32) for j in range(k)])
+    c0 = centers + 0.5 * rng.standard_normal((k, d)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(c0)
+
+
+def bounds_records(group_size=8, refine_steps=4):
+    """Early- vs converged-phase records for the ``fused_bounds`` engine.
+
+    Drives real steps (interpret mode off-TPU) on the cluster-ordered
+    workload and reports the MEASURED skipped-tile fraction per phase:
+    "early" is the first step from the init carry (upper = +inf — no
+    valid bounds, full scan, skip 0 by construction), "converged" is the
+    step after ``refine_steps`` Lloyd refinements, where the bounds have
+    tightened onto the stable assignment.  The analytic columns price the
+    skip against the fused kernel's traffic model: the skipped fraction
+    removes C re-streams and distance flops but never the single X read,
+    so x_passes stays 1.0 and AI *drops* as bytes shrink slower than
+    flops."""
+    from repro.core.backends.bounds import extract_stats
+
+    x, c = bounds_workload()
+    n, d = x.shape
+    k = c.shape[0]
+    bk = get_backend("fused_bounds", group_size=group_size)
+
+    skips, walls = {}, {}
+    carry = bk.init_carry(x, c, k)
+    step = jax.jit(lambda a, b, cr, bk=bk: bk.step(a, b, k, cr))
+    for i in range(refine_steps + 1):
+        (res, carry), t = timed(step, x, c, carry, warmup=0, reps=1)
+        skip = float(extract_stats(carry).skipped_frac)
+        if i == 0:
+            skips["early"], walls["early"] = skip, t
+        c = bk.centroids_from_step(x, res, k, c)
+    skips["converged"], walls["converged"] = skip, t
+
+    records = []
+    for phase in sorted(skips):
+        skip = skips[phase]
+        base = analyze(n, d, k, "fused")
+        itemsize = 2
+        tn, _ = tiles.choose_tiles(n, k, d, itemsize, kind="fused_bounds")
+        n_tiles = max(1, -(-n // tn))
+        c_stream = n_tiles * k * d * itemsize
+        base["bytes_per_iter"] = int(
+            base["bytes_per_iter"] - skip * c_stream)
+        base["flops_per_iter"] = int(base["flops_per_iter"]
+                                     - skip * 2 * n * k * d)
+        base["ai"] = base["flops_per_iter"] / base["bytes_per_iter"]
+        base["t_mem_us"] = base["bytes_per_iter"] / HBM_BW * 1e6
+        base["t_comp_us"] = base["flops_per_iter"] / PEAK * 1e6
+        base["bound"] = ("compute" if base["t_comp_us"] > base["t_mem_us"]
+                         else "memory")
+        records.append({"variant": "pallas.fused_bounds",
+                        "n": n, "d": d, "k": k,
+                        "wall_us": walls[phase] * 1e6,
+                        "wall_path": "pallas_interpret"
+                        if jax.default_backend() != "tpu" else "pallas_tpu",
+                        "skipped_tile_frac": skip, "phase": phase,
+                        **base})
     return records
 
 
@@ -186,14 +277,20 @@ def main(argv=None):
 
     shapes = SMOKE_SHAPES if args.smoke else SHAPES
     records = kernel_records(shapes, smoke=args.smoke)
+    records += bounds_records()
+    records.sort(key=lambda r: (r["variant"], r["n"], r["d"], r["k"],
+                                r["phase"] or ""))
     for r in records:
+        phase = f".{r['phase']}" if r["phase"] else ""
+        skip = "" if r["skipped_tile_frac"] is None else \
+            f";skip={r['skipped_tile_frac']:.3f}"
         print(csv_row(
-            f"kernel.{r['variant']}.n{r['n']}_d{r['d']}_k{r['k']}",
+            f"kernel.{r['variant']}.n{r['n']}_d{r['d']}_k{r['k']}{phase}",
             r["wall_us"] or 0.0,
             f"x_passes={r['x_passes_per_iter']:g};"
             f"tpu_bytes={r['bytes_per_iter']:.2e};ai={r['ai']:.1f};"
             f"tpu_{r['bound']}_us="
-            f"{max(r['t_mem_us'], r['t_comp_us']):.1f}"))
+            f"{max(r['t_mem_us'], r['t_comp_us']):.1f}{skip}"))
     if not args.smoke:
         for row in step_bench():
             print(row)
@@ -203,9 +300,10 @@ def main(argv=None):
         if not path.is_absolute():
             path = Path(__file__).resolve().parents[1] / path
         path.write_text(json.dumps(
-            {"schema": "kernels_bench/v2",
+            {"schema": "kernels_bench/v3",
              "backend": jax.default_backend(),
-             "smoke": args.smoke, "records": records}, indent=2))
+             "smoke": args.smoke, "records": records},
+            indent=2, sort_keys=True))
         print(f"wrote {path}")
     return records
 

@@ -103,13 +103,18 @@ def kernels_table(json_path=None, out=sys.stdout):
     recs = json.loads(path.read_text()).get("records", [])
     print(f"\n=== kernel engine ({path.name}) ===", file=out)
     print(f"{'variant':24s} {'n':>8s} {'d':>5s} {'k':>7s} {'Xpass':>6s} "
-          f"{'bytes':>10s} {'ai':>7s} {'pred_us':>8s} {'bound':>7s}",
-          file=out)
+          f"{'bytes':>10s} {'ai':>7s} {'pred_us':>8s} {'bound':>7s} "
+          f"{'skip':>6s} {'phase':>10s}", file=out)
     for r in recs:
         pred = max(r["t_mem_us"], r["t_comp_us"])
+        # pre-v3 records carry no tile-skip columns; print them as absent
+        skip = r.get("skipped_tile_frac")
+        skip_s = "-" if skip is None else f"{skip:.3f}"
+        phase_s = r.get("phase") or "-"
         print(f"{r['variant']:24s} {r['n']:8d} {r['d']:5d} {r['k']:7d} "
               f"{r['x_passes_per_iter']:6g} {r['bytes_per_iter']:10.2e} "
-              f"{r['ai']:7.1f} {pred:8.1f} {r['bound']:>7s}", file=out)
+              f"{r['ai']:7.1f} {pred:8.1f} {r['bound']:>7s} "
+              f"{skip_s:>6s} {phase_s:>10s}", file=out)
     return recs
 
 

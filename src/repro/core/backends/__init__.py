@@ -15,16 +15,24 @@ oracle.
 
 Registered backends:
 
-    dense    — jnp reference semantics (the oracle; legacy DENSE_OPS math)
-    blocked  — row-blocked distances, bounded (block_n, K) intermediate
-    pallas   — separate tiled assignment/update kernels (decomposed engine)
-    fused    — single-pass Pallas kernel: one X read per accepted
-               iteration at arbitrary K (k-tiled; DESIGN.md §Kernels-v2)
-    hamerly  — bound-based assignment carried across iterations
+    dense        — jnp reference semantics (the oracle; legacy DENSE_OPS)
+    blocked      — row-blocked distances, bounded (block_n, K) intermediate
+    pallas       — separate tiled assignment/update kernels (decomposed)
+    fused        — single-pass Pallas kernel: one X read per accepted
+                   iteration at arbitrary K (k-tiled; DESIGN.md §Kernels-v2)
+    hamerly      — scalar second-closest bound carried across iterations
+    elkan        — per-(row, k-group) lower bounds + centre-centre gate
+                   (groups sized like the fused kernel's k-tiles)
+    yinyang      — pure group filtering, no K x K term (t = K/10 groups)
+    fused_bounds — the fused kernel consuming the group bounds to SKIP
+                   whole centroid tiles via a tile-level predicate
+                   (DESIGN.md §Bounds)
 
-Both Pallas engines fill every step slot natively: batched steps run R
-restarts as the kernels' leading grid axis, minibatch steps fold row
-weights into the stats in-pass.
+All three Pallas engines fill every step slot natively: batched steps
+run R restarts as the kernels' leading grid axis, minibatch steps fold
+row weights into the stats in-pass.  The bound family threads its carry
+— (labels, upper, lower, c_last, BoundStats) — through the solver loop;
+`distribute()` keeps the bounds shard-local and pmean's the stats.
 """
 
 from repro.core.backends.base import (Backend, Precision,        # noqa: F401
@@ -32,14 +40,21 @@ from repro.core.backends.base import (Backend, Precision,        # noqa: F401
                                       distribute, from_lloyd_ops,
                                       get_backend, instrument,
                                       register_backend)
+from repro.core.backends.bounds import BoundStats                # noqa: F401
 from repro.core.backends.dense import (blocked_backend,          # noqa: F401
                                        dense_backend)
+from repro.core.backends.elkan import elkan_backend              # noqa: F401
 from repro.core.backends.hamerly import hamerly_backend          # noqa: F401
 from repro.core.backends.pallas import (fused_backend,           # noqa: F401
+                                        fused_bounds_backend,
                                         pallas_backend)
+from repro.core.backends.yinyang import yinyang_backend          # noqa: F401
 
 register_backend("dense", dense_backend)
 register_backend("blocked", blocked_backend)
 register_backend("pallas", pallas_backend)
 register_backend("fused", fused_backend)
 register_backend("hamerly", hamerly_backend)
+register_backend("elkan", elkan_backend)
+register_backend("yinyang", yinyang_backend)
+register_backend("fused_bounds", fused_bounds_backend)

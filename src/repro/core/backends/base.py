@@ -294,6 +294,25 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
             f"stats and inflate the reported energy")
     axes = tuple(axes)
 
+    def reduce_carry(carry):
+        """Per-row bounds stay shard-local, but the BoundStats scalars a
+        bound backend reports are per-shard fractions — pmean them so
+        every shard carries the GLOBAL elimination fractions (and so the
+        carry leaves really are replicated where `loop_state_specs`
+        classifies them as such).  The group drift itself needs no
+        collective: C is replicated, so every shard derives identical
+        drifts."""
+        from repro.core.backends.bounds import BoundStats
+
+        def fix(node):
+            if isinstance(node, BoundStats):
+                return jax.tree_util.tree_map(
+                    lambda a: jax.lax.pmean(a, axes), node)
+            return node
+
+        return jax.tree_util.tree_map(
+            fix, carry, is_leaf=lambda n: isinstance(n, BoundStats))
+
     def step_fn(x, c, k, carry):
         res, carry = backend.step_fn(x, c, k, carry)
         return StepResult(
@@ -301,7 +320,7 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
             min_sqdist=res.min_sqdist,
             sums=jax.lax.psum(res.sums, axes),
             counts=jax.lax.psum(res.counts, axes),
-            energy=jax.lax.psum(res.energy, axes)), carry
+            energy=jax.lax.psum(res.energy, axes)), reduce_carry(carry)
 
     # The local batched step (when present) must be re-wrapped so its
     # (R, K, d+1)-stats psum too — one collective covers all R restarts.
@@ -316,7 +335,7 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
                 min_sqdist=res.min_sqdist,
                 sums=jax.lax.psum(res.sums, axes),
                 counts=jax.lax.psum(res.counts, axes),
-                energy=jax.lax.psum(res.energy, axes)), carries
+                energy=jax.lax.psum(res.energy, axes)), reduce_carry(carries)
     else:
         batched_step_fn = None
 
@@ -333,7 +352,7 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
             min_sqdist=res.min_sqdist,
             sums=jax.lax.psum(res.sums, axes),
             counts=jax.lax.psum(res.counts, axes),
-            energy=jax.lax.psum(res.energy, axes)), carry
+            energy=jax.lax.psum(res.energy, axes)), reduce_carry(carry)
 
     def stats_fn(x, labels, k):
         sums, counts = backend.stats_fn(x, labels, k)

@@ -1,0 +1,259 @@
+"""Shared carry contract for the bound-based distance-elimination backends
+(DESIGN.md §Bounds).
+
+Three backends maintain triangle-inequality bounds across step calls —
+``hamerly`` (scalar second-closest bound), ``elkan`` (per-row x per-group
+lower bounds plus the centre-centre gate) and ``yinyang`` (pure group
+filtering) — and the ``fused_bounds`` Pallas engine consumes the same
+bounds to skip whole centroid tiles inside the kernel.  This module is the
+one place the bound algebra lives:
+
+    carry = (labels, upper, lower, c_last, BoundStats)
+
+    labels : (N,)    int32  assignment the bounds are valid for
+    upper  : (N,)    f32    u_i >= d(x_i, c_{labels_i})       (Euclidean)
+    lower  : (N, G)  f32    l_{i,g} <= min_{j in group g} d(x_i, c_j)
+             — or (N,) for hamerly, where l_i bounds the SECOND-closest
+    c_last : (K, d)  f32    centroids the step last saw (drift anchor)
+    stats  : BoundStats     work-elimination observability (below)
+
+The lower bounds here are *inclusive*: l_{i,g} bounds the min over ALL
+centroids of group g, including the assigned one.  The owner group then
+always satisfies l_g <= d(x, c_a) <= u, so the scan/tile-skip predicate
+``l_g <= u`` can never skip a row's own group — which is what makes the
+masked scan (and the kernel's tile skip) *exact*: every centroid in a
+skipped group has d(x, c_j) >= l_g > u >= d(x, c_a), strictly above the
+running min, so it can neither win nor tie the argmin.
+
+Drift maintenance (valid for ARBITRARY centroid moves — Lloyd updates,
+accepted Anderson jumps, and fallback reverts alike, by the triangle
+inequality against the move c_last -> c):
+
+    u_i  += |c_new[a_i] - c_old[a_i]|
+    l_g  -= max_{j in g} |c_new[j] - c_old[j]|
+
+Groups are contiguous index ranges of ``gs`` centroids — group g covers
+[g*gs, (g+1)*gs) — so a group IS a k-tile of the fused kernel when
+gs == tk, and the kernel's per-(row-tile, k-tile) skip predicate consumes
+these bounds directly.
+
+Under ``distribute()`` the carry stays shard-local except the BoundStats
+scalars, which are pmean'd so every shard reports the global elimination
+fractions (the drift itself is shard-invariant: C is replicated).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lloyd
+from repro.core.backends.base import (Backend, Precision, StepResult,
+                                      DEFAULT_PRECISION)
+from repro.core.lloyd import pairwise_sqdist
+from repro.kernels import tiles
+
+
+class BoundStats(NamedTuple):
+    """Per-step work-elimination fractions, carried so the traced driver
+    (and `distribute()`) can observe bound efficacy without extra passes.
+
+    eliminated_frac : () f32 — fraction of rows whose assignment was
+        settled without scanning any group beyond the owner's (for the
+        kernel engine, where row granularity is lost, this equals
+        skipped_frac).
+    skipped_frac    : () f32 — fraction of (row, group) scan units —
+        (row-tile, k-tile) cells for the kernel — that were skipped.
+    """
+    eliminated_frac: jax.Array
+    skipped_frac: jax.Array
+
+    @classmethod
+    def zeros(cls) -> "BoundStats":
+        z = jnp.zeros((), jnp.float32)
+        return cls(z, z)
+
+
+def extract_stats(carry) -> Optional[BoundStats]:
+    """The BoundStats node of a backend carry, or None for stateless /
+    non-bound backends.  Works on any pytree nesting of the carry."""
+    found = []
+
+    def visit(node):
+        if isinstance(node, BoundStats):
+            found.append(node)
+        return node
+
+    jax.tree_util.tree_map(visit, carry,
+                           is_leaf=lambda n: isinstance(n, BoundStats))
+    return found[0] if found else None
+
+
+# ---------------------------------------------------------------------------
+# Group layout
+# ---------------------------------------------------------------------------
+
+def resolve_group_size(k: int, group_size: Optional[int],
+                       policy: str = "tile") -> int:
+    """Centroids per group.  An explicit ``group_size`` wins; otherwise
+    "tile" sizes groups like the fused kernel's default k-tile (so CPU
+    bounds and kernel tiles agree — one group per k-tile), and "yinyang"
+    uses the classic t = ceil(K/10) groups."""
+    if group_size is not None:
+        return max(1, min(int(group_size), k))
+    if policy == "tile":
+        return min(tiles.MAX_TILE, tiles.round_up(k, tiles.sublane(4)))
+    if policy == "yinyang":
+        g = max(1, -(-k // 10))
+        return -(-k // g)
+    raise ValueError(f"unknown group-size policy {policy!r}")
+
+
+def group_layout(k: int, gs: int) -> Tuple[int, int]:
+    """(n_groups, group_size) for contiguous groups of ``gs`` centroids."""
+    return -(-k // gs), gs
+
+
+def group_ids(k: int, gs: int) -> jax.Array:
+    return (jnp.arange(k) // gs).astype(jnp.int32)
+
+
+def group_max(v: jax.Array, g: int, gs: int) -> jax.Array:
+    """(K,) -> (G,) max over each contiguous group (pad with 0: padding
+    never raises a drift max, since drifts are >= 0)."""
+    vp = jnp.pad(v, (0, g * gs - v.shape[0]))
+    return jnp.max(vp.reshape(g, gs), axis=1)
+
+
+def group_min(d: jax.Array, g: int, gs: int) -> jax.Array:
+    """(N, K) -> (N, G) min over each contiguous group (pad with +inf)."""
+    n, k = d.shape
+    dp = jnp.pad(d, ((0, 0), (0, g * gs - k)), constant_values=jnp.inf)
+    return jnp.min(dp.reshape(n, g, gs), axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Bound maintenance
+# ---------------------------------------------------------------------------
+
+def centroid_drift(c_new: jax.Array, c_old: jax.Array) -> jax.Array:
+    """Per-centroid Euclidean move |c_new[j] - c_old[j]| — the only input
+    the bound update needs, so it is agnostic to HOW C moved (Lloyd,
+    accepted AA jump, or revert)."""
+    return jnp.sqrt(jnp.sum((c_new - c_old) ** 2, axis=-1))
+
+
+def drift_update(labels, upper, lower, drift, g: int, gs: int):
+    """Triangle-inequality bound update for an arbitrary centroid move."""
+    upper = upper + drift[labels]
+    lower = lower - group_max(drift, g, gs)[None, :]
+    return upper, lower
+
+
+def init_carry(x, c, k: int, gs: int):
+    """upper = +inf forces a full scan on the first step (no valid bounds
+    yet); lower = 0 is trivially valid (distances are non-negative)."""
+    n = x.shape[0]
+    g, _ = group_layout(k, gs)
+    return (jnp.zeros((n,), jnp.int32),
+            jnp.full((n,), jnp.inf, jnp.float32),
+            jnp.zeros((n, g), jnp.float32),
+            c.astype(jnp.float32),
+            BoundStats.zeros())
+
+
+# ---------------------------------------------------------------------------
+# Shared group-filtered step (elkan / yinyang)
+# ---------------------------------------------------------------------------
+
+def make_group_bound_backend(name: str, precision: Precision,
+                             group_size: Optional[int], policy: str,
+                             center_gate: bool) -> Backend:
+    """The group-filtered bound step shared by elkan and yinyang.
+
+    Both maintain the carry above and scan only the groups whose lower
+    bound could beat the exact distance to the assigned centroid; elkan
+    additionally prices the K x K centre-centre matrix for the classic
+    global gate (u <= s(a) = half the distance from c_a to its nearest
+    other centroid => no centroid can beat a, skip everything), while
+    yinyang stays O(K d) per step outside the masked scan.
+
+    Like the hamerly backend this is a vectorised-masked formulation: the
+    distance matrix is computed densely and applied under the need mask —
+    but the carry/bound algebra is exactly what a sparse executor (or the
+    fused_bounds kernel, which shares this module) uses to *actually*
+    skip the work, and the per-group bounds written back for skipped
+    groups are the drift-updated ones, never the dense recomputation, so
+    trajectories match a genuinely skipping implementation bit-for-bit.
+    """
+
+    def gs_of(k):
+        return resolve_group_size(k, group_size, policy)
+
+    def init_carry_fn(x, c, k):
+        return init_carry(x, c, k, gs_of(k))
+
+    def step_fn(x, c, k, carry):
+        labels0, upper, lower, c_last, _ = carry
+        g, gs = group_layout(k, gs_of(k))
+        # Compute policy as in hamerly: inputs rounded to the compute
+        # dtype, bound/distance arithmetic in f32 (bounds must stay
+        # monotone under the drift updates).
+        xf = precision.compute_cast(x).astype(jnp.float32)
+        cf = precision.compute_cast(c).astype(jnp.float32)
+        n = xf.shape[0]
+
+        drift = centroid_drift(cf, c_last)
+        upper, lower = drift_update(labels0, upper, lower, drift, g, gs)
+
+        # Exact distance to the assigned centroid — O(N d), recomputed
+        # every step: it tightens u, decides the group filter, and keeps
+        # min_sqdist/energy exact for the driver's accept test.
+        d = jnp.sqrt(pairwise_sqdist(xf, cf))                 # (N, K)
+        d_a = jnp.take_along_axis(d, labels0[:, None], axis=1)[:, 0]
+
+        need_g = lower <= d_a[:, None]                        # (N, G)
+        if center_gate:
+            cc = jnp.sqrt(pairwise_sqdist(cf, cf))
+            cc = jnp.where(jnp.eye(k, dtype=bool), jnp.inf, cc)
+            s_half = 0.5 * jnp.min(cc, axis=1)                # (K,)
+            # u <= s(a): no other centroid can be closer — skip even the
+            # owner group (the assignment provably stands).
+            safe = d_a <= s_half[labels0]
+            need_g = jnp.logical_and(need_g, ~safe[:, None])
+
+        gid = group_ids(k, gs)                                # (K,)
+        owner_col = jnp.arange(k)[None, :] == labels0[:, None]
+        cand = jnp.logical_or(need_g[:, gid], owner_col)
+        dm = jnp.where(cand, d, jnp.inf)
+        labels = jnp.argmin(dm, axis=1).astype(jnp.int32)
+        u_new = jnp.min(dm, axis=1)                           # exact d(x, c_label)
+
+        # Scanned groups get the exact (inclusive) group min; skipped
+        # groups keep the drift-updated bound.
+        gmin = group_min(d, g, gs)
+        lower_new = jnp.where(need_g, gmin, lower)
+
+        owner_g = (labels0 // gs).astype(jnp.int32)
+        nonowner = jnp.arange(g)[None, :] != owner_g[:, None]
+        eliminated = ~jnp.any(jnp.logical_and(need_g, nonowner), axis=1)
+        stats = BoundStats(jnp.mean(eliminated.astype(jnp.float32)),
+                           1.0 - jnp.mean(need_g.astype(jnp.float32)))
+
+        mind = (u_new * u_new).astype(precision.accum_dtype)
+        sums, counts = lloyd.cluster_sums(x.astype(precision.accum_dtype),
+                                          labels, k)
+        res = StepResult(labels, mind, sums, counts, jnp.sum(mind))
+        return res, (labels, u_new, lower_new, cf, stats)
+
+    def stats_fn(x, labels, k):
+        return lloyd.cluster_sums(x.astype(precision.accum_dtype), labels, k)
+
+    return Backend(name=name,
+                   step_fn=step_fn,
+                   stats_fn=stats_fn,
+                   assign_fn=lloyd.assign,
+                   init_carry_fn=init_carry_fn,
+                   precision=precision)

@@ -1,0 +1,37 @@
+"""Elkan-style bound backend: per-row x per-k-group lower bounds plus the
+classic centre-centre gate (Elkan 2003, via the accurate-bound family of
+Newling & Fleuret 2016).
+
+Where hamerly keeps ONE lower bound per row (the second-closest centroid),
+elkan keeps one per (row, group of centroids) — groups are contiguous
+index ranges sized like the fused kernel's k-tiles by default
+(`bounds.resolve_group_size`), so the same carry drives the
+``fused_bounds`` Pallas engine's tile-skip predicate.  On top of the group
+filter, elkan prices the K x K centre-centre distance matrix each step for
+the global gate: a row with u <= s(a) — half the distance from its
+assigned centroid to that centroid's nearest neighbour — provably keeps
+its assignment and skips every group, owner included.
+
+The group filter degrades gracefully: at K below one k-tile (the default
+group size) there is a single group, elimination comes only from the
+centre gate, and the step is still exact — pass ``group_size=`` to carve
+finer groups when K is small but elimination matters (see DESIGN.md
+§Bounds).
+
+Carry contract, drift maintenance across AA jumps/reverts, and the
+exactness argument for the inclusive group bounds live in
+`backends/bounds.py`; this module just binds the policy.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.backends.base import Backend, Precision, DEFAULT_PRECISION
+from repro.core.backends.bounds import make_group_bound_backend
+
+
+def elkan_backend(precision: Precision = DEFAULT_PRECISION,
+                  group_size: Optional[int] = None) -> Backend:
+    return make_group_bound_backend("elkan", precision, group_size,
+                                    policy="tile", center_gate=True)

@@ -4,14 +4,18 @@ The paper implements the Assignment-Step with Hamerly's bounds (in the
 spirit of Newling & Fleuret 2016's accurate-bound family): an upper bound
 u_i on the distance to the assigned centroid and a lower bound l_i on the
 second-closest let most samples skip the O(K) scan after a centroid move.
-`core/hamerly.py` kept this as an island with its own driver; here the same
-bounds live in the backend's ``carry``, so Hamerly assignment composes with
-the Anderson-accelerated driver, the distribute combinator, and every other
-orthogonal axis of the engine.
+`core/hamerly.py` keeps the legacy island driver as a thin delegate; the
+bounds themselves live in the backend's ``carry``, so Hamerly assignment
+composes with the Anderson-accelerated driver, the distribute combinator,
+and every other orthogonal axis of the engine.
 
-The bound update only needs the per-centroid drift between *consecutive
-step calls* — not a Lloyd move — so it remains valid when the driver jumps
-to an accelerated iterate or reverts to the fallback:
+The carry follows the shared contract of `backends/bounds.py` — with the
+hamerly-specific twist that ``lower`` is (N,), a single bound on the
+SECOND-closest centroid (exclusive of the assigned one), rather than the
+group family's (N, G) inclusive bounds.  The drift maintenance is the
+same module's and only needs the per-centroid move between *consecutive
+step calls* — not a Lloyd move — so it remains valid when the driver
+jumps to an accelerated iterate or reverts to the fallback:
 
     u_i += |c_new[a_i] - c_old[a_i]|,   l_i -= max_j |c_new[j] - c_old[j]|
 
@@ -21,8 +25,12 @@ the energy the accept test consumes), so u is always tight and min_sqdist
 is exact for every row.
 
 As in `core/hamerly.py`, this is a *vectorised-masked* formulation: the
-full scan is computed densely and applied under the mask (TPU-friendly; on
-CPU/sparse executors the mask is where the skip-work win lives).
+full scan is computed densely and applied under the mask.  The mask is
+where the skip-work win lives on CPU/sparse executors; on TPU the same
+elimination is realised for real by the ``fused_bounds`` engine, whose
+kernel skips whole centroid *tiles* on the group-bound variant of this
+carry (`kernels/fused_lloyd.py`) — the per-step ``BoundStats`` in the
+carry report the eliminated fraction either way.
 """
 
 from __future__ import annotations
@@ -33,6 +41,7 @@ import jax.numpy as jnp
 from repro.core import lloyd
 from repro.core.backends.base import (Backend, Precision, StepResult,
                                       DEFAULT_PRECISION)
+from repro.core.backends.bounds import BoundStats, centroid_drift
 from repro.core.lloyd import pairwise_sqdist
 
 
@@ -53,6 +62,13 @@ def _full_scan(x, c):
     return lab, d1, d2
 
 
+def hamerly_drift(labels, upper, lower, c_new, c_old):
+    """Post-move bound update (u += |dc_a|, l -= max|dc|), shared with the
+    legacy `core/hamerly.py` driver so there is one drift implementation."""
+    drift = centroid_drift(c_new, c_old)
+    return upper + drift[labels], lower - jnp.max(drift)
+
+
 def hamerly_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
     def init_carry_fn(x, c, k):
         n = x.shape[0]
@@ -60,10 +76,11 @@ def hamerly_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
         # upper = +inf forces a full scan on the first step (no valid bounds
         # yet); drift against c_last = c is zero so the bounds stay +inf/0.
         return (jnp.zeros((n,), jnp.int32), inf,
-                jnp.zeros((n,), jnp.float32), c.astype(jnp.float32))
+                jnp.zeros((n,), jnp.float32), c.astype(jnp.float32),
+                BoundStats.zeros())
 
     def step_fn(x, c, k, carry):
-        labels0, upper, lower, c_last = carry
+        labels0, upper, lower, c_last, _ = carry
         # Honour the compute policy by rounding the inputs to the compute
         # dtype first; the bound/distance arithmetic itself then runs in
         # f32 — bounds must stay monotone under the drift updates, which
@@ -71,9 +88,7 @@ def hamerly_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
         xf = precision.compute_cast(x).astype(jnp.float32)
         cf = precision.compute_cast(c).astype(jnp.float32)
 
-        drift = jnp.sqrt(jnp.sum((cf - c_last) ** 2, axis=-1))     # (K,)
-        upper = upper + drift[labels0]
-        lower = lower - jnp.max(drift)
+        upper, lower = hamerly_drift(labels0, upper, lower, cf, c_last)
 
         cc = jnp.sqrt(pairwise_sqdist(cf, cf))
         cc = jnp.where(jnp.eye(k, dtype=bool), jnp.inf, cc)
@@ -90,11 +105,14 @@ def hamerly_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
         upper_n = jnp.where(needs, u_f, d_assigned)
         lower_n = jnp.where(needs, l_f, lower)
 
+        elim = 1.0 - jnp.mean(needs.astype(jnp.float32))
+        stats = BoundStats(elim, elim)   # one group: row == scan unit
+
         mind = (upper_n * upper_n).astype(precision.accum_dtype)
         sums, counts = lloyd.cluster_sums(x.astype(precision.accum_dtype),
                                           labels, k)
         res = StepResult(labels, mind, sums, counts, jnp.sum(mind))
-        return res, (labels, upper_n, lower_n, cf)
+        return res, (labels, upper_n, lower_n, cf, stats)
 
     def stats_fn(x, labels, k):
         return lloyd.cluster_sums(x.astype(precision.accum_dtype), labels, k)

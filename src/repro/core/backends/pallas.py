@@ -31,17 +31,32 @@ in the policy's accum dtype.  (v1 split the difference: assignment saw
 the compute-cast X but the update kernel re-read the uncast original,
 so the two engines' stats disagreed at bf16.)
 
+`fused_bounds` is the fused engine carrying the shared bound contract of
+`backends/bounds.py` (DESIGN.md §Bounds): squared per-(row, k-group)
+lower bounds — one group per k-tile — and a squared upper bound ride into
+VMEM next to each X row tile, and the kernel SKIPS whole centroid tiles
+whose bound says no row can improve.  The drift maintenance between step
+calls is the same triangle-inequality algebra as the elkan/yinyang CPU
+backends, so it stays valid across accepted Anderson jumps and reverts.
+
 On non-TPU hosts the kernels execute in interpret mode (correctness
 path); the TPU lowering is exercised by the dry-run entrypoints.
+``REPRO_PALLAS_INTERPRET=1`` forces interpret mode everywhere — the
+``test.sh --interpret`` tier uses it to run the kernel suite through
+`pallas_call(interpret=True)` on any host.
 """
 
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends import bounds as _bounds
 from repro.core.backends.base import (Backend, Precision, StepResult,
                                       DEFAULT_PRECISION)
+from repro.core.backends.bounds import BoundStats
 from repro.core.lloyd import AssignResult
 from repro.kernels import tiles
 from repro.kernels.assignment import assignment_pallas
@@ -55,6 +70,8 @@ FUSED_MAX_KD = FUSED_VMEM_BYTES // 4
 
 
 def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "") not in ("", "0"):
+        return True
     return jax.default_backend() != "tpu"
 
 
@@ -168,4 +185,79 @@ def fused_backend(precision: Precision = DEFAULT_PRECISION) -> Backend:
                    minibatch_step_fn=_fused_minibatch(precision),
                    stats_fn=_stats_fn,
                    assign_fn=_assign_fn,
+                   precision=precision)
+
+
+# ---------------------------------------------------------------------------
+# Tile-skipping single-pass engine ("fused_bounds")
+# ---------------------------------------------------------------------------
+
+def fused_bounds_backend(precision: Precision = DEFAULT_PRECISION,
+                         group_size=None) -> Backend:
+    """The fused kernel consuming group lower bounds to skip k tiles.
+
+    The carry is the shared contract of `backends/bounds.py` with groups
+    sized to the kernel's k tile (one group per tile, gs == tk), so the
+    drift-maintained (N, G) lower bounds land in VMEM as exactly the
+    per-(row-tile, k-tile) skip predicate.  The bound algebra runs in
+    Euclidean space outside the kernel; the kernel works in squared
+    space (lb² / ub², with inf² = inf on the first, bound-free step).
+
+    An explicit ``group_size`` is rounded up to the f32 sublane so the
+    k tile stays Mosaic-tileable.  Default sizing follows the "tile"
+    policy — for K <= MAX_TILE that is ONE group (graceful degradation
+    to the plain fused kernel plus bound upkeep); pass a smaller
+    ``group_size`` to get real skipping at small K.
+    """
+
+    def gs_of(k):
+        gs = _bounds.resolve_group_size(k, group_size, "tile")
+        return tiles.round_up(gs, tiles.sublane(4))
+
+    def init_carry_fn(x, c, k):
+        return _bounds.init_carry(x, c, k, gs_of(k))
+
+    def _prep(labels0, upper, lower, c_last, cf, g, gs):
+        drift = _bounds.centroid_drift(cf, c_last)
+        upper, lower = _bounds.drift_update(labels0, upper, lower,
+                                            drift, g, gs)
+        lb_sq = jnp.square(jnp.maximum(lower, 0.0))
+        ub_sq = jnp.square(upper)
+        return lb_sq, ub_sq
+
+    def _run(x, c, k, carry, w=None, batched=False):
+        labels0, upper, lower, c_last, _ = carry
+        g, gs = _bounds.group_layout(k, gs_of(k))
+        xc = precision.compute_cast(x)
+        cc = precision.compute_cast(c)
+        cf = cc.astype(jnp.float32)
+        prep = jax.vmap(_prep, in_axes=(0, 0, 0, 0, 0, None, None)) \
+            if batched else _prep
+        lb_sq, ub_sq = prep(labels0, upper, lower, c_last, cf, g, gs)
+        labels, mind, sums, counts, energy, gmin_sq, skipped = \
+            fused_lloyd_pallas(xc, cc, w, tk=gs, interpret=_interpret(),
+                               bounds=(labels0, lb_sq, ub_sq))
+        u_new = jnp.sqrt(mind)
+        lower_new = jnp.sqrt(gmin_sq)
+        stats = BoundStats(skipped, skipped)
+        new_carry = (labels, u_new, lower_new, cf, stats)
+        return _pack(precision, labels, mind, sums, counts, energy), \
+            new_carry
+
+    def step_fn(x, c, k, carry):
+        return _run(x, c, k, carry)
+
+    def batched_step_fn(x, cs, k, carries):
+        return _run(x, cs, k, carries, batched=True)
+
+    def minibatch_step_fn(x, c, k, w, carry):
+        return _run(x, c, k, carry, w=w)
+
+    return Backend(name="fused_bounds",
+                   step_fn=step_fn,
+                   batched_step_fn=batched_step_fn,
+                   minibatch_step_fn=minibatch_step_fn,
+                   stats_fn=_stats_fn,
+                   assign_fn=_assign_fn,
+                   init_carry_fn=init_carry_fn,
                    precision=precision)

@@ -1,0 +1,31 @@
+"""Yinyang-style bound backend: pure group filtering, no K x K matrix
+(Ding et al. 2015, in the spirit of Khandelwal & Awekar's cluster-group
+pruning).
+
+Per step each row pays one exact distance to its assigned centroid plus
+one comparison per centroid *group*; only groups whose (drift-maintained,
+inclusive) lower bound could beat that exact distance are scanned.
+Default grouping is the classic t = ceil(K/10) groups, independent of the
+kernel tile size — yinyang is the CPU-flavoured group filter, elkan the
+kernel-tile-aligned one; pass ``group_size=`` to align them.
+
+Unlike elkan there is no centre-centre gate, so the per-step fixed cost
+stays O(K d) (the drift norms) + O(N G) (the filter) — the trade the
+yinyang paper makes to scale past the K^2 term.
+
+Carry contract, drift maintenance across AA jumps/reverts, and the
+exactness argument live in `backends/bounds.py`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.backends.base import Backend, Precision, DEFAULT_PRECISION
+from repro.core.backends.bounds import make_group_bound_backend
+
+
+def yinyang_backend(precision: Precision = DEFAULT_PRECISION,
+                    group_size: Optional[int] = None) -> Backend:
+    return make_group_bound_backend("yinyang", precision, group_size,
+                                    policy="yinyang", center_gate=False)

@@ -1,22 +1,30 @@
-"""Hamerly-bound Lloyd baseline (Hamerly 2010), vectorised for JAX.
+"""Hamerly-bound Lloyd baseline (Hamerly 2010) — thin legacy driver over
+the `backends/hamerly.py` bound implementation.
 
-The paper's experiments implement the Assignment-Step with Hamerly's
-algorithm: per sample keep an upper bound u_i on the distance to the
-assigned centroid and a lower bound l_i on the second-closest; after the
-centroids move, bounds are updated by the centroid drift and most samples
-skip the O(K) distance scan.
+This module predates the backend protocol and used to carry its own copy
+of the full-scan/step logic; the two copies drifted once (the PR-5 argsort
+fix had to land twice), so the bound math now lives in ONE place —
+`repro.core.backends.hamerly` (scan) and `repro.core.backends.bounds`
+(drift algebra) — and this file only keeps the historical standalone API:
+``hamerly_init`` / ``hamerly_step`` / ``hamerly_kmeans`` returning the
+per-iteration ``scan_fraction`` the paper's premise is quoted on.
 
-TPU adaptation (DESIGN.md §Hardware-adaptation): bound checks are
-data-dependent branches, so a literal port would idle the MXU.  This
-implementation is *vectorised-masked*: bounds are maintained exactly and
-the full distance row is computed only logically for the failing mask (on
-CPU this is where the win lives; on TPU the dense Pallas path is faster and
-is the production choice).  We report `scan_fraction` — the fraction of
-samples that needed a full scan — which reproduces the paper's premise that
-bounds eliminate most distance work, independent of backend.
+Equivalence notes:
+
+  * ``hamerly_step`` delegates to the backend's step with a zero-drift
+    carry (c_last = the current centroids: this driver applies the drift
+    update itself, post-update, exactly as Hamerly's original loop does),
+    then updates the centroids and re-drifts the bounds via the shared
+    `hamerly_drift` helper.
+  * The backend's single-stage scan mask (exact d(x, c_a) > max(s(a), l))
+    is exactly the legacy two-stage needs1/needs2 mask: d_a <= u always,
+    so "u > m and then the d_a-tightened u > m" collapses to "d_a > m".
+    Labels, scan fractions and trajectories are unchanged.
 
 Equivalence to plain Lloyd is exact (same assignments every iteration);
-tests/test_kmeans.py asserts it.
+tests/test_kmeans.py asserts it.  For the composable engine — AA driver,
+distribution, batching — use ``backend="hamerly"`` (or the group-bound
+``elkan``/``yinyang``/``fused_bounds`` engines) instead of this driver.
 """
 
 from __future__ import annotations
@@ -27,7 +35,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.lloyd import pairwise_sqdist, update
+from repro.core.backends.bounds import BoundStats
+from repro.core.backends.hamerly import (_full_scan, hamerly_backend,
+                                         hamerly_drift)
+from repro.core.lloyd import update
+
+_BACKEND = hamerly_backend()
 
 
 class HamerlyState(NamedTuple):
@@ -35,20 +48,6 @@ class HamerlyState(NamedTuple):
     upper: jax.Array      # (N,)  upper bound on dist(x, c_label)
     lower: jax.Array      # (N,)  lower bound on dist(x, second closest)
     c: jax.Array          # (K, d)
-
-
-def _full_scan(x, c):
-    """(argmin, min, second-min) of each distance row via two O(K) masked
-    min reductions — a full argsort is O(K log K) plus an (N, K) index
-    materialisation for three columns of output (same tie convention:
-    first index wins, exactly like argmin)."""
-    d = jnp.sqrt(pairwise_sqdist(x, c))
-    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
-    u = jnp.min(d, axis=1)
-    k = c.shape[0]
-    others = jnp.where(jnp.arange(k)[None, :] == lab[:, None], jnp.inf, d)
-    l2 = jnp.min(others, axis=1)
-    return lab, u, l2
 
 
 def hamerly_init(x, c0) -> HamerlyState:
@@ -60,31 +59,18 @@ def hamerly_step(x, state: HamerlyState, k: int):
     """One Lloyd iteration with Hamerly bounds.
 
     Returns (new_state, changed, scan_fraction)."""
-    # s(j): half distance from centroid j to its nearest other centroid
-    cc = jnp.sqrt(pairwise_sqdist(state.c, state.c))
-    cc = jnp.where(jnp.eye(k, dtype=bool), jnp.inf, cc)
-    s_half = 0.5 * jnp.min(cc, axis=1)                       # (K,)
-
-    m = jnp.maximum(s_half[state.labels], state.lower)       # (N,)
-    needs1 = state.upper > m
-    # tighten u for the candidates: exact distance to assigned centroid
-    d_assigned = jnp.sqrt(jnp.sum(
-        (x - state.c[state.labels]) ** 2, axis=-1))
-    upper_t = jnp.where(needs1, d_assigned, state.upper)
-    needs2 = upper_t > m                                     # full scan mask
-
-    lab_f, u_f, l_f = _full_scan(x, state.c)                 # masked result
-    labels = jnp.where(needs2, lab_f, state.labels)
-    upper = jnp.where(needs2, u_f, upper_t)
-    lower = jnp.where(needs2, l_f, state.lower)
+    # The state's bounds are already post-drift (this driver drifts after
+    # the update below), so hand the backend a zero-drift carry.
+    carry = (state.labels, state.upper, state.lower,
+             state.c.astype(jnp.float32), BoundStats.zeros())
+    _, carry = _BACKEND.step(x, state.c, k, carry)
+    labels, upper, lower, _, stats = carry
 
     changed = jnp.sum((labels != state.labels).astype(jnp.int32))
-    scan_fraction = jnp.mean(needs2.astype(jnp.float32))
+    scan_fraction = 1.0 - stats.eliminated_frac
 
     c_new = update(x, labels, k, state.c)
-    drift = jnp.sqrt(jnp.sum((c_new - state.c) ** 2, axis=-1))  # (K,)
-    upper = upper + drift[labels]
-    lower = lower - jnp.max(drift)
+    upper, lower = hamerly_drift(labels, upper, lower, c_new, state.c)
     return HamerlyState(labels, upper, lower, c_new), changed, scan_fraction
 
 

@@ -356,9 +356,12 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
     """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d).
 
     ``backend`` selects the engine ("dense" | "blocked" | "pallas" |
-    "fused" | "hamerly", a Backend instance, or a distribute()-wrapped
-    one).  ``ops`` is the deprecated LloydOps injection point, adapted via
-    the shim when passed.
+    "fused" | "hamerly" | "elkan" | "yinyang" | "fused_bounds", a Backend
+    instance, or a distribute()-wrapped one).  ``ops`` is the deprecated
+    LloydOps injection point, adapted via the shim when passed.  The
+    bound family (the last four) threads triangle-inequality bounds
+    through the loop carry — valid across accepted AA jumps and reverts
+    (DESIGN.md §Bounds).
 
     Persistence (DESIGN.md §Persistence): ``checkpoint_every=s`` runs the
     solve as a host loop over jit'd s-iteration segments, snapshotting the
@@ -834,6 +837,11 @@ class KMeansTrace(NamedTuple):
     accepted: list          # bool per iteration
     wall_time_s: float
     mse: float              # final E / N — the paper's reported MSE
+    # per-iteration {"eliminated_frac", "skipped_frac"} dicts for bound
+    # backends (hamerly/elkan/yinyang/fused_bounds), read off the carry's
+    # BoundStats; [] for stateless backends.  Shows how the elimination
+    # ramps from 0 (first full scan) toward the converged-phase plateau.
+    bound_stats: tuple = ()
 
 
 def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
@@ -862,9 +870,11 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
         ws, _, _, _ = iter_fn(x, ws, cfg, bk)
         jax.block_until_ready(ws.c)
 
+    from repro.core.backends.bounds import extract_stats
+
     t0 = time.perf_counter()
     state = init_fn(x, c0, cfg, bk)
-    energies, m_vals, acc = [], [], []
+    energies, m_vals, acc, bstats = [], [], [], []
     converged = False
     while not converged and int(state.t) < cfg.max_iter:
         state, conv, accepted, e_t = iter_fn(x, state, cfg, bk)
@@ -874,6 +884,10 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
         energies.append(float(e_t))
         m_vals.append(int(state.aa.m))
         acc.append(bool(accepted))
+        bs = extract_stats(state.carry)
+        if bs is not None:
+            bstats.append({"eliminated_frac": float(bs.eliminated_frac),
+                           "skipped_frac": float(bs.skipped_frac)})
     jax.block_until_ready(state.c)
     wall = time.perf_counter() - t0
 
@@ -883,4 +897,4 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
                           jnp.array(n_iter), jnp.array(n_accepted),
                           jnp.array(converged))
     mse = float(state.e_last) / x.shape[0]
-    return KMeansTrace(result, energies, m_vals, acc, wall, mse)
+    return KMeansTrace(result, energies, m_vals, acc, wall, mse, bstats)

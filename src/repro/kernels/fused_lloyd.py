@@ -120,6 +120,179 @@ def _fused_kernel(x_ref, c_ref, csq_ref, w_ref,
         energy_ref[0, 0] += jnp.sum(mind * w)
 
 
+def _fused_bounds_kernel(x_ref, c_ref, csq_ref, w_ref, lb_ref, ub_ref,
+                         lab0_ref, labels_ref, mind_ref, sums_ref,
+                         counts_ref, energy_ref, gmin_ref, skip_ref,
+                         mind_s, amin_s, *, tk: int):
+    """The fused kernel with a per-(row-tile, k-tile) skip predicate.
+
+    Extra inputs per X row tile: the squared inclusive group lower bounds
+    lb (TN, G) — one lane per k-tile, G = num k tiles — the squared upper
+    bound ub (TN,), and the previous labels (TN,).  A k tile j is
+    computed only when ANY row of the tile has lb[:, j] <= ub (the
+    non-strict predicate is what guarantees a row's owner tile is always
+    computed: lb_owner <= d(x, c_a)^2 <= ub); otherwise the whole
+    distance block, and the C tile's use, are skipped under `pl.when`
+    and the drift-maintained bound is passed through as the new group
+    min.  The running min is *seeded* with (ub, previous label), so a
+    row all of whose non-owner tiles are skipped still emits its exact
+    min-dist: the computed owner tile can only tighten the seed, and if
+    it does not, ub was already exactly d(x, c_a)^2.
+
+    Emits the fused kernel's five outputs plus the updated squared group
+    mins (TN, G) and a skipped-tile counter (one per restart), which the
+    wrapper normalises to a fraction of the (row-tile x k-tile) grid.
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    lb = lb_ref[0, :, pl.ds(j, 1)].reshape(-1)                 # (TN,)
+    ub = ub_ref[...].reshape(-1)                               # (TN,)
+    pred = jnp.any(lb <= ub)
+
+    @pl.when(j == 0)
+    def _seed():
+        mind_s[...] = ub
+        amin_s[...] = lab0_ref[...].reshape(-1)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _zero_skip():
+        skip_ref[...] = jnp.zeros(skip_ref.shape, skip_ref.dtype)
+
+    @pl.when(pred)
+    def _compute():
+        x = x_ref[...]
+        x = x.reshape(x.shape[-2], x.shape[-1])
+        c = c_ref[...].reshape(c_ref.shape[-2], c_ref.shape[-1])
+        csq = csq_ref[...].reshape(1, -1)
+        xf = x.astype(jnp.float32)
+        xsq = jnp.sum(xf * xf, axis=-1, keepdims=True)
+        cross = jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dist = jnp.maximum(xsq - 2.0 * cross + csq, 0.0)
+
+        local_min = jnp.min(dist, axis=-1)
+        local_arg = jnp.argmin(dist, axis=-1).astype(jnp.int32) + j * tk
+        # strict <: a tie keeps the seed (the row's standing assignment)
+        better = local_min < mind_s[...]
+        amin_s[...] = jnp.where(better, local_arg, amin_s[...])
+        mind_s[...] = jnp.where(better, local_min, mind_s[...])
+        gmin_ref[0, :, pl.ds(j, 1)] = local_min[:, None]
+
+    @pl.when(jnp.logical_not(pred))
+    def _skip():
+        skip_ref[0, 0] += 1.0
+        # the drift-maintained bound stays the best known group min
+        gmin_ref[0, :, pl.ds(j, 1)] = lb[:, None]
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        labels = amin_s[...]
+        mind = mind_s[...]
+        w = w_ref[...]
+        labels_ref[...] = labels.reshape(labels_ref.shape)
+        mind_ref[...] = mind.reshape(mind_ref.shape)
+
+        @pl.when(i == 0)
+        def _init():
+            sums_ref[...] = jnp.zeros(sums_ref.shape, sums_ref.dtype)
+            counts_ref[...] = jnp.zeros(counts_ref.shape, counts_ref.dtype)
+            energy_ref[...] = jnp.zeros(energy_ref.shape, energy_ref.dtype)
+
+        x = x_ref[...]
+        xf = x.reshape(x.shape[-2], x.shape[-1]).astype(jnp.float32)
+        tn = labels.shape[0]
+
+        def _accum_tile(jj, carry):
+            ks = jax.lax.broadcasted_iota(jnp.int32, (tn, tk), 1) + jj * tk
+            onehot = jnp.where(labels[:, None] == ks, w[:, None],
+                               jnp.float32(0.0))
+            psum = jax.lax.dot_general(
+                onehot, xf, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            sums_ref[0, pl.ds(jj * tk, tk), :] += psum
+            counts_ref[0, pl.ds(jj * tk, tk)] += jnp.sum(onehot, axis=0)
+            return carry
+
+        jax.lax.fori_loop(0, nk, _accum_tile, 0)
+        energy_ref[0, 0] += jnp.sum(mind * w)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tk", "interpret"))
+def _fused_bounds_call(x, cs, w, lab0, lb_sq, ub_sq, *, tn: int, tk: int,
+                       interpret: bool):
+    r, k, d = cs.shape
+    n = x.shape[-2]
+    x_batched = x.ndim == 3
+
+    xp = pad_to(pad_to(x, -2, tn), -1, tiles.LANE)
+    cp = pad_to(pad_to(cs, -2, tk), -1, tiles.LANE)
+    wp = pad_to(w, 0, tn)
+    fmax = jnp.float32(jnp.finfo(jnp.float32).max)
+    # padding rows must never force a tile's computation: their lower
+    # bound is +max and their upper bound 0, so lb <= ub is always false
+    lab0p = pad_to(lab0, -1, tn)
+    lbp = pad_to(lb_sq, -2, tn, value=fmax)
+    ubp = pad_to(ub_sq, -1, tn, value=0.0)
+
+    cpf = cp.astype(jnp.float32)
+    csq = jnp.sum(cpf * cpf, axis=-1)
+    if cp.shape[-2] != k:
+        mask = jnp.arange(cp.shape[-2]) >= k
+        csq = jnp.where(mask[None, :], fmax, csq)
+
+    np_, dp = xp.shape[-2], xp.shape[-1]
+    kp = cp.shape[-2]
+    g = kp // tk
+    assert lbp.shape[-1] == g, (lbp.shape, g)
+    grid = (r, np_ // tn, kp // tk)
+
+    if x_batched:
+        x_spec = pl.BlockSpec((1, tn, dp), lambda rr, i, j: (rr, i, 0))
+    else:
+        x_spec = pl.BlockSpec((tn, dp), lambda rr, i, j: (i, 0))
+
+    return pl.pallas_call(
+        functools.partial(_fused_bounds_kernel, tk=tk),
+        grid=grid,
+        in_specs=[
+            x_spec,
+            pl.BlockSpec((1, tk, dp), lambda rr, i, j: (rr, j, 0)),
+            pl.BlockSpec((1, tk), lambda rr, i, j: (rr, j)),
+            pl.BlockSpec((tn,), lambda rr, i, j: (i,)),
+            pl.BlockSpec((1, tn, g), lambda rr, i, j: (rr, i, 0)),
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+            pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
+            pl.BlockSpec((1, kp, dp), lambda rr, i, j: (rr, 0, 0)),
+            pl.BlockSpec((1, kp), lambda rr, i, j: (rr, 0)),
+            pl.BlockSpec((1, 1), lambda rr, i, j: (rr, 0)),
+            pl.BlockSpec((1, tn, g), lambda rr, i, j: (rr, i, 0)),
+            pl.BlockSpec((1, 1), lambda rr, i, j: (rr, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, np_), jnp.int32),
+            jax.ShapeDtypeStruct((r, np_), jnp.float32),
+            jax.ShapeDtypeStruct((r, kp, dp), jnp.float32),
+            jax.ShapeDtypeStruct((r, kp), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, np_, g), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tn,), jnp.float32),
+            pltpu.VMEM((tn,), jnp.int32),
+        ],
+        **tiles.dimension_semantics("parallel", "arbitrary", "arbitrary"),
+        interpret=interpret,
+    )(xp, cp, csq, wp, lbp, ubp, lab0p)
+
+
 @functools.partial(jax.jit, static_argnames=("tn", "tk", "interpret"))
 def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
     r, k, d = cs.shape
@@ -183,7 +356,7 @@ def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
 
 def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
                        tn=None, tk=None, interpret: bool = False,
-                       vmem_bytes=None):
+                       vmem_bytes=None, bounds=None):
     """Fused assignment+update+energy in ONE physical pass over x.
 
     x: (N, d) — or (R, N, d) for per-problem batches; c: (K, d) — or
@@ -196,6 +369,16 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
 
     Tile sizes default to `tiles.choose_tiles` (VMEM-budget-aware; k is
     tiled, so arbitrary K takes this path — there is no fallback).
+
+    ``bounds=(labels0, lb_sq, ub_sq)`` switches to the tile-skipping
+    variant (DESIGN.md §Bounds): labels0 (N,) i32 is the standing
+    assignment, lb_sq (N, G) the SQUARED inclusive group lower bounds
+    with one group per k-tile (G = ceil(K/tk) — pass a matching ``tk``),
+    and ub_sq (N,) the squared upper bound on the assigned distance.  A
+    whole centroid tile is skipped when no row of the X tile can beat
+    its bound; two extra outputs are appended: the updated squared group
+    mins (N, G) and the skipped-tile fraction () of the (row-tile x
+    k-tile) grid.  Each bound input gains a leading R axis when c does.
     """
     batched = c.ndim == 3
     if x.ndim == 3 and not batched:
@@ -209,16 +392,40 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
         w = jnp.ones((n,), jnp.float32)
     else:
         w = w.astype(jnp.float32)
+    kind = "fused" if bounds is None else "fused_bounds"
     if tn is None or tk is None:
         ct, ck = tiles.choose_tiles(n, k, d, jnp.dtype(x.dtype).itemsize,
-                                    kind="fused", vmem_bytes=vmem_bytes)
+                                    kind=kind, vmem_bytes=vmem_bytes)
         tn = ct if tn is None else tn
         tk = ck if tk is None else tk
 
-    labels, mind, sums, counts, energy = _fused_call(
-        x, cs, w, tn=tn, tk=tk, interpret=interpret)
+    if bounds is None:
+        labels, mind, sums, counts, energy = _fused_call(
+            x, cs, w, tn=tn, tk=tk, interpret=interpret)
+    else:
+        lab0, lb_sq, ub_sq = bounds
+        if not batched:
+            lab0, lb_sq, ub_sq = lab0[None], lb_sq[None], ub_sq[None]
+        g = -(-tiles.round_up(k, tk) // tk)
+        if lb_sq.shape[-1] != g:
+            raise ValueError(
+                f"lb_sq has {lb_sq.shape[-1]} groups but tk={tk} tiles "
+                f"K={k} into {g} — group size and k tile must agree")
+        labels, mind, sums, counts, energy, gmin, skipped = \
+            _fused_bounds_call(x, cs, w, lab0, lb_sq.astype(jnp.float32),
+                               ub_sq.astype(jnp.float32),
+                               tn=tn, tk=tk, interpret=interpret)
+        n_cells = (gmin.shape[-2] // tn) * g
+        skipped_frac = skipped[:, 0] / jnp.float32(n_cells)
+        gmin = gmin[:, :n, :]
+
     labels, mind = labels[:, :n], mind[:, :n]
     sums, counts, energy = sums[:, :k, :d], counts[:, :k], energy[:, 0]
+    if bounds is not None:
+        if not batched:
+            return (labels[0], mind[0], sums[0], counts[0], energy[0],
+                    gmin[0], skipped_frac[0])
+        return labels, mind, sums, counts, energy, gmin, skipped_frac
     if not batched:
         return labels[0], mind[0], sums[0], counts[0], energy[0]
     return labels, mind, sums, counts, energy

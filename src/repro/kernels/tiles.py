@@ -65,22 +65,36 @@ def pad_to(a: jax.Array, axis: int, multiple: int, value=0.0):
 
 def _resident(kind: str, kp: int, dp: int) -> int:
     """Grid-resident bytes that no tile size can shrink (the fused
-    kernel's f32 stats accumulators)."""
-    return kp * dp * 4 + kp * 4 + 8 if kind == "fused" else 0
+    kernels' f32 stats accumulators; fused_bounds adds its skipped-tile
+    counter)."""
+    if kind == "fused":
+        return kp * dp * 4 + kp * 4 + 8
+    if kind == "fused_bounds":
+        return kp * dp * 4 + kp * 4 + 8 + 8      # + skip counter block
+    return 0
 
 
-def _tile_cost(kind: str, tn: int, tk: int, dp: int, itemsize: int) -> int:
-    """Tile-dependent VMEM bytes of one grid cell's working set."""
+def _tile_cost(kind: str, tn: int, tk: int, dp: int, itemsize: int,
+               kp: int = 0) -> int:
+    """Tile-dependent VMEM bytes of one grid cell's working set.  ``kp``
+    (the padded K) only matters for fused_bounds, whose per-row-tile
+    bound buffers have one lane per k-tile group (G = kp / tk)."""
     x_tile = 2 * tn * dp * itemsize          # double-buffered X tile
     c_tile = 2 * tk * dp * itemsize          # double-buffered C tile
     csq_tile = 2 * tk * 4
     w_tile = 2 * tn * 4
     lab_tiles = 2 * tn * (4 + 4)             # labels + min-dist tiles
     dist = tn * tk * 4                       # distance / one-hot block
-    if kind == "fused":
+    if kind in ("fused", "fused_bounds"):
         scratch = tn * (4 + 4)               # running min / argmin
-        return (x_tile + c_tile + csq_tile + w_tile + lab_tiles
+        cost = (x_tile + c_tile + csq_tile + w_tile + lab_tiles
                 + 2 * dist + scratch)
+        if kind == "fused_bounds":
+            g = max(1, -(-max(kp, 1) // tk))
+            # lower-bound tile in + group-min tile out (f32, double-
+            # buffered) + squared-upper-bound and previous-label tiles
+            cost += 2 * 2 * tn * g * 4 + 2 * tn * 4 + 2 * tn * 4
+        return cost
     if kind == "assignment":
         return x_tile + c_tile + csq_tile + lab_tiles + dist
     if kind == "update":
@@ -92,7 +106,8 @@ def _tile_cost(kind: str, tn: int, tk: int, dp: int, itemsize: int) -> int:
 def _footprint(kind: str, tn: int, tk: int, kp: int, dp: int,
                itemsize: int) -> int:
     """Approximate VMEM bytes of one grid cell's working set."""
-    return _tile_cost(kind, tn, tk, dp, itemsize) + _resident(kind, kp, dp)
+    return _tile_cost(kind, tn, tk, dp, itemsize, kp) + \
+        _resident(kind, kp, dp)
 
 
 def choose_tiles(n: int, k: int, d: int, itemsize: int, *,
@@ -121,8 +136,9 @@ def choose_tiles(n: int, k: int, d: int, itemsize: int, *,
     tk = min(MAX_TILE, round_up(max(k, 1), sl))
 
     def cost(a, b):
-        resident = _resident(kind, round_up(max(k, 1), b), dp)
-        return _tile_cost(kind, a, b, dp, itemsize) + \
+        kp = round_up(max(k, 1), b)
+        resident = _resident(kind, kp, dp)
+        return _tile_cost(kind, a, b, dp, itemsize, kp) + \
             min(resident, budget // 2)
 
     while cost(tn, tk) > budget and (tn > sl or tk > sl):

@@ -13,6 +13,12 @@
 #                          #   streaming smoke, and the perf smokes
 #                          #   (kernels_bench/checkpoint_bench --smoke,
 #                          #   emitting BENCH_*.json)
+#   ./test.sh --interpret  # interpret tier: the kernel-facing suites
+#                          #   (kernels v1/v2, conformance, bounds) with
+#                          #   REPRO_PALLAS_INTERPRET=1, forcing every
+#                          #   pallas_call through interpret mode even
+#                          #   where a compiled path would be picked —
+#                          #   the off-TPU check of the kernel sources
 #   ./test.sh -m 'conformance'   # any extra pytest args pass through
 #   ./test.sh -m 'perf'          # just the benchmark-harness smokes
 #   ./test.sh tests/test_persistence.py   # just the persistence suite
@@ -31,6 +37,13 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 # metadata unless the platform is pinned; override for real-TPU runs.
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+if [[ "${1:-}" == "--interpret" ]]; then
+    shift
+    export REPRO_PALLAS_INTERPRET=1
+    exec python -m pytest -x -q -m 'not slow' \
+        tests/test_kernels.py tests/test_kernels_v2.py \
+        tests/test_conformance.py tests/test_bounds.py "$@"
+fi
 if [[ "${1:-}" == "--slow" ]]; then
     shift
     exec python -m pytest -x -q -m slow "$@"

@@ -1,0 +1,263 @@
+"""Bound-invariant tests for the distance-elimination engine
+(DESIGN.md §Bounds).
+
+The bound backends are exact BECAUSE two invariants hold on every carry
+the step hands back, no matter how the centroids moved in between:
+
+    upper:  u_i >= d(x_i, c_{labels_i})
+    lower:  l_{i,g} <= min_{j in group g} d(x_i, c_j)   (group family)
+            l_i <= second-closest distance              (hamerly)
+
+These tests drive step sequences through exactly the moves the AA solver
+makes — Lloyd refinements, a large accepted Anderson jump, and an exact
+revert to the pre-jump centroids — and after EVERY step assert (a) the
+invariants on the post-step carry against brute-force distances at the
+NEXT centroids (i.e. post-drift, where they must hold for the next step
+to be exact), and (b) labels/min_sqdist against the dense oracle.
+
+The fused_bounds kernel additionally gets direct kernel-level checks:
+with trivial bounds it must reproduce the plain fused kernel bit-for-bit
+with zero skipped tiles, and with carry-tightened bounds it must still
+match the oracle while actually skipping.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis_compat import given, settings, st
+from repro.core.backends import get_backend
+from repro.core.backends.bounds import (extract_stats, group_layout,
+                                        resolve_group_size)
+from repro.core.lloyd import pairwise_sqdist
+
+jax.config.update("jax_enable_x64", False)
+
+# carry slack for f32 sqrt/drift round-off in the invariant assertions
+ATOL = 1e-3
+
+BOUND_BACKENDS = [
+    ("hamerly", {}),
+    ("elkan", {"group_size": 4}),
+    ("yinyang", {}),
+    ("fused_bounds", {"group_size": 8}),
+]
+
+
+def _problem(seed=0, n=257, d=7, k=13):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 3.0)
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    return x, c
+
+
+def _oracle(x, c):
+    d2 = pairwise_sqdist(x, c)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)
+
+
+def _group_size_of(name, opts, k):
+    gs = resolve_group_size(k, opts.get("group_size"),
+                            "yinyang" if name == "yinyang" else "tile")
+    if name == "fused_bounds":   # kernel rounds to the f32 sublane
+        gs = gs + (-gs) % 8
+    return gs
+
+
+def _check_carry_invariants(name, opts, carry, x, c, k):
+    """The post-step carry's bounds must hold at the centroids of the
+    step that PRODUCED it (drift to any future centroids preserves them
+    by the triangle inequality, which is what the step applies)."""
+    labels, upper, lower = carry[0], carry[1], carry[2]
+    d = np.sqrt(np.asarray(pairwise_sqdist(x, c), np.float64))
+    lab = np.asarray(labels)
+    u = np.asarray(upper, np.float64)
+    d_a = d[np.arange(d.shape[0]), lab]
+    assert (u >= d_a - ATOL).all(), f"{name}: upper bound violated"
+
+    low = np.asarray(lower, np.float64)
+    if low.ndim == 1:            # hamerly: bound on the second-closest
+        masked = d.copy()
+        masked[np.arange(d.shape[0]), lab] = np.inf
+        d2nd = masked.min(axis=1)
+        assert (low <= d2nd + ATOL).all(), \
+            f"{name}: second-closest bound violated"
+    else:                        # group family: inclusive per-group mins
+        gs = _group_size_of(name, opts, k)
+        g, gs = group_layout(k, gs)
+        assert low.shape[1] == g
+        pad = np.full((d.shape[0], g * gs - k), np.inf)
+        gmin = np.concatenate([d, pad], axis=1) \
+            .reshape(d.shape[0], g, gs).min(axis=2)
+        assert (low <= gmin + ATOL).all(), \
+            f"{name}: group lower bound violated"
+
+
+def _aa_like_moves(x, c0, k, backend, rng):
+    """Yields (c_before_step, c_after_step) per step: two Lloyd updates,
+    an accepted-AA-like jump, an exact revert, then Lloyd to the end."""
+    c = c0
+    c_prejump = None
+    for step_i in range(7):
+        yield c
+        if step_i == 2:
+            c_prejump = c
+            c = c + jnp.asarray(
+                rng.normal(size=c.shape).astype(np.float32))   # AA jump
+        elif step_i == 3:
+            c = c_prejump                                      # revert
+        else:
+            lab, _ = _oracle(x, c)
+            sums, cnt = backend.stats_fn(x, lab, k)
+            c = jnp.where(cnt[:, None] > 0, sums / jnp.maximum(cnt, 1)[:, None],
+                          c.astype(sums.dtype)).astype(c.dtype)
+
+
+@pytest.mark.parametrize("name,opts",
+                         BOUND_BACKENDS, ids=[b[0] for b in BOUND_BACKENDS])
+def test_bound_invariants_across_jumps_and_reverts(name, opts):
+    x, c0 = _problem()
+    k = c0.shape[0]
+    rng = np.random.default_rng(42)
+    bk = get_backend(name, **opts)
+    carry = bk.init_carry(x, c0, k)
+    for c in _aa_like_moves(x, c0, k, bk, rng):
+        res, carry = bk.step(x, c, k, carry)
+        lab_o, mind_o = _oracle(x, c)
+        assert np.array_equal(np.asarray(res.labels), np.asarray(lab_o))
+        np.testing.assert_allclose(np.asarray(res.min_sqdist),
+                                   np.asarray(mind_o), rtol=3e-5, atol=3e-5)
+        _check_carry_invariants(name, opts, carry, x, c, k)
+
+
+@pytest.mark.parametrize("name,opts",
+                         BOUND_BACKENDS, ids=[b[0] for b in BOUND_BACKENDS])
+def test_bound_stats_populated(name, opts):
+    x, c0 = _problem(seed=5)
+    k = c0.shape[0]
+    bk = get_backend(name, **opts)
+    carry = bk.init_carry(x, c0, k)
+    st0 = extract_stats(carry)
+    assert st0 is not None and float(st0.eliminated_frac) == 0.0
+    _, carry = bk.step(x, c0, k, carry)
+    _, carry = bk.step(x, c0, k, carry)   # stationary C: bounds are tight
+    stats = extract_stats(carry)
+    assert 0.0 <= float(stats.skipped_frac) <= 1.0
+    assert 0.0 <= float(stats.eliminated_frac) <= 1.0
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_group_bound_labels_match_oracle_property(seed):
+    """Randomised shapes/inits: elkan labels equal the oracle's after a
+    step sequence that includes a jump and a revert."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(16, 200))
+    d = int(rng.integers(2, 12))
+    k = int(rng.integers(2, 24))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 2.0)
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    bk = get_backend("elkan", group_size=max(1, k // 3))
+    carry = bk.init_carry(x, c, k)
+    c_pre = c
+    for step_i in range(4):
+        res, carry = bk.step(x, c, k, carry)
+        lab_o, _ = _oracle(x, c)
+        assert np.array_equal(np.asarray(res.labels), np.asarray(lab_o))
+        if step_i == 0:
+            c_pre = c
+            c = c + 0.5 * jnp.asarray(rng.normal(size=c.shape)
+                                      .astype(np.float32))
+        elif step_i == 1:
+            c = c_pre
+        else:
+            c = bk.centroids_from_step(x, res, k, c)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level checks (fused_bounds vs fused)
+# ---------------------------------------------------------------------------
+
+def _kernel_problem(seed=3, n=300, d=5, k=20):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    return x, c
+
+
+def test_trivial_bounds_reproduce_fused_kernel():
+    """lower = 0 / upper = +inf (the init carry) must compute every tile:
+    identical outputs to the bound-free kernel and skip fraction 0."""
+    from repro.kernels.fused_lloyd import fused_lloyd_pallas
+
+    x, c = _kernel_problem()
+    n, k = x.shape[0], c.shape[0]
+    tk = 8
+    g = -(-k // tk)
+    lab0 = jnp.zeros((n,), jnp.int32)
+    lb = jnp.zeros((n, g), jnp.float32)
+    ub = jnp.full((n,), jnp.inf, jnp.float32)
+    base = fused_lloyd_pallas(x, c, tn=128, tk=tk, interpret=True)
+    out = fused_lloyd_pallas(x, c, tn=128, tk=tk, interpret=True,
+                             bounds=(lab0, lb, ub))
+    labels, mind, sums, counts, energy, gmin, skip = out
+    assert float(skip) == 0.0
+    assert np.array_equal(np.asarray(labels), np.asarray(base[0]))
+    for got, want in zip((mind, sums, counts, energy), base[1:]):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+    # the emitted group mins are exact when every tile was computed
+    d2 = np.asarray(pairwise_sqdist(x, c))
+    pad = np.full((n, g * tk - k), np.finfo(np.float32).max)
+    gmin_ref = np.concatenate([d2, pad], 1).reshape(n, g, tk).min(axis=2)
+    np.testing.assert_allclose(np.asarray(gmin), gmin_ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tight_bounds_skip_tiles_and_stay_exact():
+    """Carry-tightened bounds at unchanged C: exact labels/min-dist with
+    a strictly positive skipped-tile fraction on ordered data."""
+    from repro.kernels.fused_lloyd import fused_lloyd_pallas
+
+    rng = np.random.default_rng(11)
+    k, d, per, tk = 16, 8, 32, 8                 # n=512, 4 tiles of 128
+    centers = rng.normal(size=(k, d)).astype(np.float32) * 15.0
+    x = jnp.asarray(np.concatenate(
+        [centers[j] + rng.normal(size=(per, d)).astype(np.float32)
+         for j in range(k)]))
+    c = jnp.asarray(centers)
+    n, g = x.shape[0], -(-k // tk)
+
+    lab0, mind0 = _oracle(x, c)
+    d2 = np.asarray(pairwise_sqdist(x, c))
+    pad = np.full((n, g * tk - k), np.inf)
+    gmin = np.concatenate([d2, pad], 1).reshape(n, g, tk).min(axis=2)
+    out = fused_lloyd_pallas(
+        x, c, tn=128, tk=tk, interpret=True,
+        bounds=(lab0, jnp.asarray(gmin, jnp.float32), mind0))
+    labels, mind, _, _, _, _, skip = out
+    assert float(skip) > 0.0
+    assert np.array_equal(np.asarray(labels), np.asarray(lab0))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(mind0),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_traced_driver_reports_bound_stats():
+    from repro.core.kmeans import KMeansConfig, aa_kmeans_traced
+
+    x, c0 = _problem(seed=9, n=200, d=5, k=8)
+    cfg = KMeansConfig(k=8, max_iter=12)
+    tr = aa_kmeans_traced(x, c0, cfg, backend="hamerly")
+    assert len(tr.bound_stats) == len(tr.energies)
+    for rec in tr.bound_stats:
+        assert set(rec) == {"eliminated_frac", "skipped_frac"}
+        assert 0.0 <= rec["eliminated_frac"] <= 1.0
+    # elimination must ramp: the converged tail beats the cold start
+    assert tr.bound_stats[-1]["eliminated_frac"] >= \
+        tr.bound_stats[0]["eliminated_frac"]
+    tr_dense = aa_kmeans_traced(x, c0, cfg, backend="dense")
+    assert list(tr_dense.bound_stats) == []

@@ -23,25 +23,60 @@ def test_kernels_bench_emits_json(tmp_path):
     records = kernels_bench.main(["--smoke", "--json", str(out)])
     assert out.exists()
     payload = json.loads(out.read_text())
-    assert payload["schema"] == "kernels_bench/v2"
+    assert payload["schema"] == "kernels_bench/v3"
     assert payload["records"] == records and records
     variants = {r["variant"] for r in records}
     # analytic roofline rows for every variant + the real Pallas kernels
     # driven in interpret mode
     assert {"split", "fused", "fused_v1", "pallas.fused",
-            "pallas.assignment", "pallas.update"} <= variants
+            "pallas.assignment", "pallas.update",
+            "pallas.fused_bounds"} <= variants
     for r in records:
         assert r["x_passes_per_iter"] >= 1.0
         assert r["bytes_per_iter"] > 0 and r["flops_per_iter"] > 0
-    # the v2 fused kernel reads X once; the split path twice
+        # v3: the tile-skip columns exist on EVERY record (None outside
+        # the bounds engine)
+        assert "skipped_tile_frac" in r and "phase" in r
+    # the v2 fused kernel reads X once; the split path twice — and the
+    # bounds engine never adds an X pass (skipping removes C re-streams)
     by_var = {}
     for r in records:
         by_var.setdefault(r["variant"], r)
     assert by_var["fused"]["x_passes_per_iter"] == 1.0
     assert by_var["split"]["x_passes_per_iter"] == 2.0
+    assert by_var["pallas.fused_bounds"]["x_passes_per_iter"] == 1.0
+    # the bounds engine reports both phases: zero skip on the bound-free
+    # first step, majority skip once converged on the ordered workload
+    phases = {r["phase"]: r for r in records
+              if r["variant"] == "pallas.fused_bounds"}
+    assert set(phases) == {"early", "converged"}
+    assert phases["early"]["skipped_tile_frac"] == 0.0
+    assert phases["converged"]["skipped_tile_frac"] > 0.5
     # interpret-mode Pallas rows actually measured a wall time
     assert all(r["wall_us"] is not None for r in records
                if r["wall_path"] == "pallas_interpret")
+
+
+def test_kernels_bench_records_deterministic(tmp_path):
+    """Two --smoke runs agree on everything but wall clocks: fixed seeds,
+    deterministic record order, sorted JSON keys (ISSUE 6 acceptance)."""
+    sys.path.insert(0, str(BENCH_DIR.parent))
+    try:
+        from benchmarks import kernels_bench
+    finally:
+        sys.path.pop(0)
+    runs = [kernels_bench.main(["--smoke", "--json",
+                                str(tmp_path / f"b{i}.json")])
+            for i in range(2)]
+
+    def strip(recs):
+        return [{k: v for k, v in r.items() if k != "wall_us"}
+                for r in recs]
+
+    assert strip(runs[0]) == strip(runs[1])
+    texts = [(tmp_path / f"b{i}.json").read_text() for i in range(2)]
+    keys = [list(json.loads(t)["records"][0]) for t in texts]
+    assert keys[0] == sorted(keys[0])     # sort_keys=True in the emitter
 
 
 def test_checkpoint_bench_emits_json(tmp_path):
