@@ -3,12 +3,16 @@
 
 A checkpointed solve is a host loop over jit'd `while_loop` segments, so
 its cost over the monolithic solve decomposes into (a) host/dispatch
-overhead per segment boundary and (b) the `device_get` + atomic npz write
-per snapshot.  This module times the same fixed-seed solve three ways —
+overhead per segment boundary and (b) the `device_get` + npz write per
+snapshot.  This module times the same fixed-seed solve four ways —
 monolithic, segmented with no snapshot writes (``checkpoint_cb`` only),
-and segmented with real artifacts to a temp dir — and reports the
-per-boundary overheads, so the perf trajectory catches a regression that
-would make "resumable" cost more than it must.
+segmented with synchronous artifact writes (``sync_writes=True``), and
+segmented with the default background `repro.runtime.writer` — and
+reports the per-boundary overheads.  The async arm shows how much of the
+sync write cost the writer thread hides (the remaining overhead is the
+unavoidable ``device_get`` snapshot plus queue handoff); the perf
+trajectory catches a regression that would make "resumable" cost more
+than it must.
 
     PYTHONPATH=src python -m benchmarks.checkpoint_bench [--json [PATH]]
         [--checkpoint-every S] [--smoke]
@@ -67,7 +71,13 @@ def run(checkpoint_every: int = 10, smoke: bool = False) -> dict:
     t_seg = _solve_time(lambda: aa_kmeans(
         x, c0, cfg, checkpoint_every=every, checkpoint_cb=lambda st, t: None))
     with tempfile.TemporaryDirectory() as d:
-        t_ckpt = _solve_time(lambda: aa_kmeans(
+        t_sync = _solve_time(lambda: aa_kmeans(
+            x, c0, cfg, checkpoint_every=every, checkpoint_dir=d,
+            sync_writes=True))
+    with tempfile.TemporaryDirectory() as d:
+        # default path: background CheckpointWriter (drained before the
+        # driver returns, so every snapshot is on disk when timing stops)
+        t_async = _solve_time(lambda: aa_kmeans(
             x, c0, cfg, checkpoint_every=every, checkpoint_dir=d))
         n_snaps = len(list(Path(d).glob("it_*.npz")))
         # roundtrip correctness rides along: resume the final artifact
@@ -76,14 +86,56 @@ def run(checkpoint_every: int = 10, smoke: bool = False) -> dict:
     assert float(res.energy) == float(ref.energy), \
         "resumed solve diverged from the monolithic result"
     n_bounds = max(1, n_snaps)
+
+    # Direct per-boundary cost, free of solve-time noise (the end-to-end
+    # deltas above bury a ~ms write under ~60 ms segments): what the
+    # DRIVER pays at a boundary is device_get + npz write on the sync
+    # path vs device_get + queue handoff on the async path — the write
+    # itself runs on the writer thread, off the critical path.
+    from repro.core import serialize
+    from repro.runtime.writer import CheckpointWriter, write_snapshot
+    holder = {}
+    aa_kmeans(x, c0, cfg, checkpoint_every=every,
+              checkpoint_cb=lambda st, t: holder.update(state=st))
+    state = holder["state"]
+    reps = 8 if smoke else 20
+
+    def _boundary_time(fn, between=None):
+        ts = []
+        for i in range(reps):
+            t0 = time.perf_counter()
+            fn(i, jax.device_get(state))    # the snapshot point itself
+            ts.append(time.perf_counter() - t0)
+            if between is not None:
+                between()
+        ts.sort()
+        return ts[len(ts) // 2] * 1e6
+
+    with tempfile.TemporaryDirectory() as d:
+        sync_us = _boundary_time(lambda i, st: write_snapshot(
+            d, st, kind=serialize.KIND_LOOP, step=i))
+    with tempfile.TemporaryDirectory() as d:
+        with CheckpointWriter(d, kind=serialize.KIND_LOOP) as w:
+            # drain OUTSIDE the timer: in a real run the next segment's
+            # compute gives the writer its slack, so the driver pays only
+            # the handoff; a tight rep loop would instead measure queue
+            # back-pressure (disk saturation) that checkpoint_every
+            # boundaries never reach
+            async_us = _boundary_time(lambda i, st: w.submit(st, i),
+                                      between=w.drain)
+
     return {
         "n": p["n"], "d": p["d"], "k": p["k"],
         "n_iter": int(ref.n_iter), "checkpoint_every": every,
         "segments": n_bounds, "snapshots": n_snaps,
         "t_monolithic_s": t_mono, "t_segmented_s": t_seg,
-        "t_checkpointed_s": t_ckpt,
+        "t_checkpointed_s": t_sync, "t_checkpointed_async_s": t_async,
         "seg_overhead_us_per_boundary": (t_seg - t_mono) / n_bounds * 1e6,
-        "snap_overhead_us_per_snapshot": (t_ckpt - t_seg) / n_bounds * 1e6,
+        "snap_overhead_us_per_snapshot": (t_sync - t_seg) / n_bounds * 1e6,
+        "async_overhead_us_per_snapshot": (t_async - t_seg) / n_bounds * 1e6,
+        "sync_boundary_us": sync_us,
+        "async_boundary_us": async_us,
+        "async_to_sync_overhead_ratio": async_us / sync_us,
     }
 
 
@@ -110,12 +162,21 @@ def main(argv=None):
                   rec["t_checkpointed_s"] * 1e6,
                   f"snapshot_us={rec['snap_overhead_us_per_snapshot']:.1f};"
                   f"snapshots={rec['snapshots']}"))
+    print(csv_row(f"checkpoint.snapshotted_async.{tag}",
+                  rec["t_checkpointed_async_s"] * 1e6,
+                  f"snapshot_us={rec['async_overhead_us_per_snapshot']:.1f}"))
+    print(csv_row(f"checkpoint.boundary_sync.{tag}",
+                  rec["sync_boundary_us"]))
+    print(csv_row(f"checkpoint.boundary_async.{tag}",
+                  rec["async_boundary_us"],
+                  f"ratio_vs_sync="
+                  f"{rec['async_to_sync_overhead_ratio']:.3f}"))
     if args.json:
         path = Path(args.json)
         if not path.is_absolute():
             path = Path(__file__).resolve().parents[1] / path
         path.write_text(json.dumps(
-            {"schema": "checkpoint_bench/v1",
+            {"schema": "checkpoint_bench/v2",
              "backend": jax.default_backend(),
              "smoke": args.smoke, "record": rec}, indent=2))
         print(f"wrote {path}")

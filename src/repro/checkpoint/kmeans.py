@@ -30,17 +30,31 @@ from typing import Optional
 
 from repro.core import serialize
 from repro.core.api import AAKMeans, MiniBatchAAKMeans
+from repro.runtime.writer import read_manifest
 
 
 def latest_snapshot(ckpt_dir) -> Optional[Path]:
     """Newest solver snapshot in a segmented run's checkpoint directory,
     or None when there is none yet (first run / clean directory) — the
-    value to pass straight to ``resume_from=``.  Snapshots are atomically
-    renamed into place, so the newest complete artifact is always valid;
-    a stray ``.tmp`` from a crash mid-write is ignored."""
+    value to pass straight to ``resume_from=``.
+
+    Reads the directory's ``manifest.json`` (atomically rewritten at
+    every boundary by the runtime writer) rather than listing the
+    directory; a legacy/partial directory without a usable manifest falls
+    back to the old glob scan.  Either way the newest complete artifact
+    is always valid: snapshots are atomically renamed into place, and a
+    stray ``.tmp`` from a crash mid-write is ignored (and swept by the
+    writer on the next start)."""
     d = Path(ckpt_dir)
     if not d.exists():
         return None
+    m = read_manifest(d)
+    if m is not None and m.get("latest"):
+        p = d / m["latest"]
+        if p.exists():
+            return p
+        # manifest referencing a missing file means external deletion —
+        # fall through to the scan rather than failing the resume
     snaps = sorted(p for p in d.glob("it_*.npz") if not p.name.endswith(".tmp"))
     return snaps[-1] if snaps else None
 

@@ -148,7 +148,10 @@ def _save_estimator(model, path, kind, arrays: dict, stream: dict,
         if f.name.endswith("_") or f.name.startswith("_"):
             continue
         v = getattr(model, f.name)
-        if f.name == "mesh":
+        if f.name in ("mesh", "metrics"):
+            # both are process properties, not model parameters: a mesh
+            # belongs to the device topology, a metrics sink to whatever
+            # log file/stream this process opened
             continue
         if f.name == "backend":
             v = _encode_backend(v)
@@ -198,6 +201,11 @@ class AAKMeans:
     # local-compute engine: "dense" | "blocked" | "pallas" | "fused" |
     # "hamerly" or a Backend instance; composed with the mesh when set.
     backend: object = "dense"
+    # runtime metrics sink (`repro.runtime.metrics`): None | "stdout" |
+    # anything with log_scalars(step, dict).  Setting one routes the fit
+    # through the segmented driver (per-segment host boundaries are where
+    # the scalars materialise).  Not persisted by save().
+    metrics: object = None
 
     # fitted state
     centroids_: Optional[jax.Array] = None
@@ -226,6 +234,12 @@ class AAKMeans:
                 self.mesh, cfg, self.data_axes, backend=self.backend,
                 pick_best=True)
             x_in, _ = shard_dataset(x, self.mesh, self.data_axes)
+        elif self.metrics is not None:
+            # segmented (host-loop) driver: metrics need host boundaries
+            fit_fn = lambda a, b: select_best(  # noqa: E731
+                aa_kmeans_batched(a, b, cfg, backend=self.backend,
+                                  metrics=self.metrics))
+            x_in = x
         else:
             fit_fn = jax.jit(lambda a, b: select_best(
                 aa_kmeans_batched(a, b, cfg, backend=self.backend)))
@@ -367,6 +381,11 @@ class MiniBatchAAKMeans:
     mesh: Optional[jax.sharding.Mesh] = None
     data_axes: tuple = ("data",)
     backend: object = "dense"
+    # runtime metrics sink (`repro.runtime.metrics`); fit() logs per
+    # epoch, partial_fit per chunk.  Per-chunk logging float()s device
+    # scalars — a host sync the stream otherwise avoids — so attach a
+    # sink only when the diagnostics are worth it.  Not persisted.
+    metrics: object = None
 
     # fitted state
     centroids_: Optional[jax.Array] = None
@@ -424,6 +443,12 @@ class MiniBatchAAKMeans:
                 self.mesh, cfg, self.data_axes, backend=self.backend)
             x_val, _ = shard_dataset(x_val, self.mesh, self.data_axes)
             res = fit_fn(dc.chunks, dc.weights, x_val, c0, k_run)
+        elif self.metrics is not None:
+            # epoch-segmented driver (host loop) so per-epoch scalars
+            # have a host boundary to materialise at
+            res = aa_kmeans_minibatch(dc.chunks, dc.weights, x_val, c0,
+                                      cfg, backend=self.backend, key=k_run,
+                                      metrics=self.metrics)
         else:
             run = jax.jit(lambda ch, w, xv, c, key: aa_kmeans_minibatch(
                 ch, w, xv, c, cfg, backend=self.backend, key=key))
@@ -479,6 +504,36 @@ class MiniBatchAAKMeans:
         self.energy_ = trace.e_val
         self.n_steps_ = self._state.t
         self.n_accepted_ = self._state.n_acc
+        if self.metrics is not None:
+            # attaching a sink opts into the per-chunk host sync
+            from repro.runtime.metrics import as_metrics
+            as_metrics(self.metrics).log_scalars(
+                int(self._state.t),
+                {"e_val": float(trace.e_val),
+                 "accepted": float(trace.accepted),
+                 "n_accepted": float(self._state.n_acc),
+                 "chunk_rows": float(x.shape[0])})
+        return self
+
+    def partial_fit_stream(self, chunks, prefetch: int = 2
+                           ) -> "MiniBatchAAKMeans":
+        """Consume an iterator of host chunks with overlapped
+        host→device ingestion: chunk t+1's transfer is issued while
+        chunk t's step computes (`repro.data.streaming.stream_chunks`
+        over `repro.runtime.prefetch`).  Numerically identical to
+        calling ``partial_fit`` per chunk — only transfer timing
+        changes.  With a ``metrics`` sink attached, the final achieved
+        ingest bytes/bandwidth are logged as ``ingest_*`` scalars."""
+        from repro.data.streaming import stream_chunks
+        from repro.runtime.metrics import as_metrics
+        from repro.runtime.prefetch import IngestMeter
+        meter = IngestMeter()
+        for chunk in stream_chunks(iter(chunks), prefetch=prefetch,
+                                   meter=meter):
+            self.partial_fit(chunk)
+        if self.metrics is not None and meter.chunks:
+            as_metrics(self.metrics).log_scalars(int(self._state.t),
+                                                 meter.scalars())
         return self
 
     def finalize(self) -> "MiniBatchAAKMeans":

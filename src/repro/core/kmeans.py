@@ -54,6 +54,8 @@ from repro.core.backends import Backend, from_lloyd_ops, get_backend
 from repro.core.lloyd import DENSE_OPS, LloydOps
 from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult,
                                   guard_pick, minibatch_init, run_epoch)
+from repro.runtime.metrics import as_metrics
+from repro.runtime.writer import CheckpointWriter, write_snapshot
 
 
 @dataclasses.dataclass(frozen=True)
@@ -298,12 +300,41 @@ def _resolve_resume(resume_from, like, kind: str, cfg, backend: Backend):
     return resume_from
 
 
+def _snapshot_meta(step: int, cfg, backend: Backend,
+                   extra: Optional[dict] = None) -> dict:
+    return {"t": step, "k": cfg.k, "backend": backend.name,
+            **(extra or {})}
+
+
 def _snapshot(checkpoint_dir, state, kind: str, step: int, cfg,
-              backend: Backend, extra: Optional[dict] = None):
-    path = os.path.join(os.fspath(checkpoint_dir), f"it_{step:08d}")
-    return serialize.save(path, state, kind=kind,
-                          extra={"t": step, "k": cfg.k,
-                                 "backend": backend.name, **(extra or {})})
+              backend: Backend, extra: Optional[dict] = None,
+              keep_last_n: int = 0, keep_every_m: int = 0):
+    """Synchronous boundary snapshot: atomic artifact + manifest +
+    retention (`repro.runtime.writer.write_snapshot`).  The segmented
+    drivers route the same call through a `CheckpointWriter` thread; the
+    distributed driver and the sync-write benchmark arm call this
+    directly."""
+    return write_snapshot(checkpoint_dir, state, kind=kind, step=step,
+                          extra=_snapshot_meta(step, cfg, backend, extra),
+                          keep_last_n=keep_last_n, keep_every_m=keep_every_m)
+
+
+def _make_writer(checkpoint_dir, kind: str, keep_last_n: int,
+                 keep_every_m: int, metrics, sync_writes: bool):
+    if checkpoint_dir is None or sync_writes:
+        return None
+    return CheckpointWriter(checkpoint_dir, kind=kind,
+                            keep_last_n=keep_last_n,
+                            keep_every_m=keep_every_m, metrics=metrics)
+
+
+def _bound_scalars(carry) -> dict:
+    from repro.core.backends.bounds import extract_stats
+    bs = extract_stats(carry)
+    if bs is None:
+        return {}
+    return {"eliminated_frac": float(bs.eliminated_frac),
+            "skipped_frac": float(bs.skipped_frac)}
 
 
 def _no_trace(x, who: str):
@@ -326,23 +357,48 @@ def _result_from_state(state: _LoopState) -> KMeansResult:
 
 def _aa_kmeans_segmented(x, c0, cfg: KMeansConfig, bk: Backend,
                          checkpoint_every: int, checkpoint_dir,
-                         resume_from, checkpoint_cb) -> KMeansResult:
+                         resume_from, checkpoint_cb,
+                         keep_last_n: int = 0, keep_every_m: int = 0,
+                         metrics=None,
+                         sync_writes: bool = False) -> KMeansResult:
     _no_trace(x, "aa_kmeans")
+    mx = as_metrics(metrics)
     every = int(checkpoint_every) if checkpoint_every else cfg.max_iter
     like = loop_state_like(x, c0, cfg, bk)
     state = _resolve_resume(resume_from, like, serialize.KIND_LOOP, cfg, bk)
     if state is None:
         state = _init_state_jit(x, c0, cfg, bk)
     t = int(state.t)
-    while not bool(state.converged) and t < cfg.max_iter:
-        seg_end = min(t + every, cfg.max_iter)
-        state = _run_segment(x, state, jnp.asarray(seg_end, jnp.int32),
-                             cfg, bk)
-        t = int(state.t)
-        if checkpoint_dir is not None:
-            _snapshot(checkpoint_dir, state, serialize.KIND_LOOP, t, cfg, bk)
-        if checkpoint_cb is not None:
-            checkpoint_cb(state, t)
+    writer = _make_writer(checkpoint_dir, serialize.KIND_LOOP, keep_last_n,
+                          keep_every_m, mx, sync_writes)
+    try:
+        while not bool(state.converged) and t < cfg.max_iter:
+            seg_end = min(t + every, cfg.max_iter)
+            t0 = time.perf_counter()
+            state = _run_segment(x, state, jnp.asarray(seg_end, jnp.int32),
+                                 cfg, bk)
+            t = int(state.t)   # host sync: the segment is fully computed
+            seg_s = time.perf_counter() - t0
+            if writer is not None:
+                # the device_get here IS the snapshot point — taken
+                # synchronously at the boundary, so the artifact content
+                # is exactly the sync path's; only the write is deferred
+                writer.submit(jax.device_get(state), t,
+                              _snapshot_meta(t, cfg, bk))
+            elif checkpoint_dir is not None:
+                _snapshot(checkpoint_dir, state, serialize.KIND_LOOP, t,
+                          cfg, bk, keep_last_n=keep_last_n,
+                          keep_every_m=keep_every_m)
+            if checkpoint_cb is not None:
+                checkpoint_cb(state, t)
+            mx.log_scalars(t, {
+                "energy": float(state.e_last),
+                "n_accepted": float(int(state.n_acc)),
+                "converged": float(bool(state.converged)),
+                "segment_s": seg_s, **_bound_scalars(state.carry)})
+    finally:
+        if writer is not None:
+            writer.close()   # drain + join; a failed write fails the run
     return _result_from_state(state)
 
 
@@ -352,7 +408,11 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
               checkpoint_every: int = 0,
               checkpoint_dir=None,
               resume_from=None,
-              checkpoint_cb: Optional[Callable] = None) -> KMeansResult:
+              checkpoint_cb: Optional[Callable] = None,
+              keep_last_n: int = 0,
+              keep_every_m: int = 0,
+              metrics=None,
+              sync_writes: bool = False) -> KMeansResult:
     """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d).
 
     ``backend`` selects the engine ("dense" | "blocked" | "pallas" |
@@ -372,13 +432,25 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
     the resumed trajectory is bit-identical to the uninterrupted one
     because segment boundaries only partition the identical sequence of
     loop bodies.  The checkpoint parameters require host execution — do
-    not wrap the call itself in jit (each segment is jitted internally)."""
+    not wrap the call itself in jit (each segment is jitted internally).
+
+    Runtime (DESIGN.md §Runtime): artifact writes run on a background
+    `CheckpointWriter` thread (the state snapshot itself is taken
+    synchronously at the boundary, so resume stays bit-identical; set
+    ``sync_writes=True`` to force in-line writes), with
+    ``keep_last_n``/``keep_every_m`` retention and a ``manifest.json``
+    per run directory.  ``metrics`` is any ``log_scalars(step, dict)``
+    sink (`repro.runtime.metrics`); each segment boundary emits energy,
+    accept counts, bound-skip fractions and wall time, and the writer
+    emits per-snapshot write latency."""
     bk = resolve_backend(backend, ops, cfg)
     if checkpoint_every or checkpoint_dir is not None \
-            or resume_from is not None or checkpoint_cb is not None:
+            or resume_from is not None or checkpoint_cb is not None \
+            or metrics is not None:
         return _aa_kmeans_segmented(x, c0, cfg, bk, checkpoint_every,
                                     checkpoint_dir, resume_from,
-                                    checkpoint_cb)
+                                    checkpoint_cb, keep_last_n,
+                                    keep_every_m, metrics, sync_writes)
 
     def cond(state: _LoopState):
         return jnp.logical_and(~state.converged, state.t < cfg.max_iter)
@@ -561,8 +633,11 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
                       checkpoint_every: int = 0,
                       checkpoint_dir=None,
                       resume_from=None,
-                      checkpoint_cb: Optional[Callable] = None
-                      ) -> KMeansResult:
+                      checkpoint_cb: Optional[Callable] = None,
+                      keep_last_n: int = 0,
+                      keep_every_m: int = 0,
+                      metrics=None,
+                      sync_writes: bool = False) -> KMeansResult:
     """Batched Algorithm 1: R independent solves in one device program.
 
     ``c0s`` is (R, K, d) — one seed set per restart/problem.  ``x`` is
@@ -586,7 +661,9 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
     ``checkpoint_every=s`` segments the solve every s loop TRIPS (one
     batched backend step each; a rejected iteration spans two trips) and
     snapshots the whole per-restart state — see ``aa_kmeans`` for the
-    checkpoint/resume contract, which carries over verbatim.
+    checkpoint/resume contract and the runtime parameters
+    (``keep_last_n``/``keep_every_m``/``metrics``/``sync_writes``), which
+    carry over verbatim.
     """
     if c0s.ndim != 3:
         raise ValueError(f"c0s must be (R, K, d); got shape {c0s.shape}")
@@ -600,10 +677,12 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
     x_axis = 0 if x.ndim == 3 else None
 
     if checkpoint_every or checkpoint_dir is not None \
-            or resume_from is not None or checkpoint_cb is not None:
+            or resume_from is not None or checkpoint_cb is not None \
+            or metrics is not None:
         return _aa_kmeans_batched_segmented(
             x, c0s, cfg, bk, x_axis, checkpoint_every, checkpoint_dir,
-            resume_from, checkpoint_cb)
+            resume_from, checkpoint_cb, keep_last_n, keep_every_m,
+            metrics, sync_writes)
 
     inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, bk),
                       in_axes=(x_axis, 0))(x, c0s)
@@ -638,8 +717,12 @@ def _init_batched_state(x, c0s, cfg: KMeansConfig, backend: Backend,
 
 def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
                                  x_axis, checkpoint_every, checkpoint_dir,
-                                 resume_from, checkpoint_cb) -> KMeansResult:
+                                 resume_from, checkpoint_cb,
+                                 keep_last_n: int = 0, keep_every_m: int = 0,
+                                 metrics=None,
+                                 sync_writes: bool = False) -> KMeansResult:
     _no_trace(x, "aa_kmeans_batched")
+    mx = as_metrics(metrics)
     # Worst case every Algorithm-1 iteration rejects, costing two trips.
     every = int(checkpoint_every) if checkpoint_every \
         else 2 * cfg.max_iter + 1
@@ -655,15 +738,35 @@ def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
         trips = int(jnp.max(resume_from.inner.t))   # snapshot naming only
     else:
         bst = _init_batched_state(x, c0s, cfg, bk, x_axis)
-    while bool(jnp.any(_is_active(bst.inner, cfg.max_iter))):
-        bst = _run_batched_segment(x, bst, jnp.asarray(every, jnp.int32),
-                                   cfg, bk, x_batched=(x_axis == 0))
-        trips += every   # upper bound on the final segment; monotone
-        if checkpoint_dir is not None:
-            _snapshot(checkpoint_dir, bst, serialize.KIND_BATCHED, trips,
-                      cfg, bk)
-        if checkpoint_cb is not None:
-            checkpoint_cb(bst, trips)
+    writer = _make_writer(checkpoint_dir, serialize.KIND_BATCHED,
+                          keep_last_n, keep_every_m, mx, sync_writes)
+    try:
+        while bool(jnp.any(_is_active(bst.inner, cfg.max_iter))):
+            t0 = time.perf_counter()
+            bst = _run_batched_segment(x, bst, jnp.asarray(every, jnp.int32),
+                                       cfg, bk, x_batched=(x_axis == 0))
+            trips += every   # upper bound on the final segment; monotone
+            n_active = int(jnp.sum(_is_active(bst.inner, cfg.max_iter)))
+            seg_s = time.perf_counter() - t0
+            if writer is not None:
+                writer.submit(jax.device_get(bst), trips,
+                              _snapshot_meta(trips, cfg, bk))
+            elif checkpoint_dir is not None:
+                _snapshot(checkpoint_dir, bst, serialize.KIND_BATCHED,
+                          trips, cfg, bk, keep_last_n=keep_last_n,
+                          keep_every_m=keep_every_m)
+            if checkpoint_cb is not None:
+                checkpoint_cb(bst, trips)
+            e = bst.inner.e_last
+            e_best = jnp.min(jnp.where(jnp.isfinite(e), e, jnp.inf))
+            mx.log_scalars(trips, {
+                "energy_best": float(e_best),
+                "n_active": float(n_active),
+                "n_accepted_total": float(int(jnp.sum(bst.inner.n_acc))),
+                "segment_s": seg_s})
+    finally:
+        if writer is not None:
+            writer.close()
     return _result_from_state(bst.inner)
 
 
@@ -718,8 +821,13 @@ def _aa_kmeans_minibatch_segmented(chunks, weights, x_val, c0,
                                    cfg: MiniBatchConfig, bk: Backend, key,
                                    checkpoint_every, checkpoint_dir,
                                    resume_from, checkpoint_cb,
-                                   return_trace: bool):
+                                   return_trace: bool,
+                                   keep_last_n: int = 0,
+                                   keep_every_m: int = 0,
+                                   metrics=None,
+                                   sync_writes: bool = False):
     _no_trace(chunks, "aa_kmeans_minibatch")
+    mx = as_metrics(metrics)
     every = max(1, int(checkpoint_every)) if checkpoint_every else 1
     like = minibatch_stream_like(c0, cfg, bk, key)
     epoch = 0
@@ -735,23 +843,47 @@ def _aa_kmeans_minibatch_segmented(chunks, weights, x_val, c0,
     else:
         state = minibatch_init(c0, cfg, bk)
     traces = []
-    while epoch < cfg.epochs:
-        state, key, trace = _run_minibatch_epoch(chunks, weights, x_val,
-                                                 state, key, cfg, bk)
-        epoch += 1
-        if return_trace:
-            traces.append(trace)
-        if checkpoint_dir is not None and \
-                (epoch % every == 0 or epoch == cfg.epochs):
-            _snapshot(checkpoint_dir, {"state": state, "key": key},
-                      serialize.KIND_MINIBATCH, epoch, cfg, bk,
-                      extra={"epoch": epoch})
-        if checkpoint_cb is not None:
-            # "epoch" rides in the payload so the dict round-trips through
-            # resume_from= without losing the counter (a path-based resume
-            # reads it from the artifact's meta instead)
-            checkpoint_cb({"state": state, "key": key, "epoch": epoch},
-                          epoch)
+    writer = _make_writer(checkpoint_dir, serialize.KIND_MINIBATCH,
+                          keep_last_n, keep_every_m, mx, sync_writes)
+    try:
+        while epoch < cfg.epochs:
+            t0 = time.perf_counter()
+            state, key, trace = _run_minibatch_epoch(chunks, weights, x_val,
+                                                     state, key, cfg, bk)
+            epoch += 1
+            n_acc_epoch = int(jnp.sum(trace.accepted))   # host sync
+            epoch_s = time.perf_counter() - t0
+            if return_trace:
+                traces.append(trace)
+            if checkpoint_dir is not None and \
+                    (epoch % every == 0 or epoch == cfg.epochs):
+                meta = _snapshot_meta(epoch, cfg, bk,
+                                      extra={"epoch": epoch})
+                if writer is not None:
+                    writer.submit(
+                        jax.device_get({"state": state, "key": key}),
+                        epoch, meta)
+                else:
+                    _snapshot(checkpoint_dir, {"state": state, "key": key},
+                              serialize.KIND_MINIBATCH, epoch, cfg, bk,
+                              extra={"epoch": epoch},
+                              keep_last_n=keep_last_n,
+                              keep_every_m=keep_every_m)
+            if checkpoint_cb is not None:
+                # "epoch" rides in the payload so the dict round-trips
+                # through resume_from= without losing the counter (a
+                # path-based resume reads it from the artifact's meta)
+                checkpoint_cb({"state": state, "key": key, "epoch": epoch},
+                              epoch)
+            mx.log_scalars(epoch, {
+                "e_val": float(trace.e_val[-1]),
+                "e_cand": float(trace.e_cand[-1]),
+                "e_fallback": float(trace.e_fallback[-1]),
+                "n_accepted_epoch": float(n_acc_epoch),
+                "epoch_s": epoch_s})
+    finally:
+        if writer is not None:
+            writer.close()
     c_fin, e_fin, _, _ = guard_pick(x_val, state, cfg, bk)
     result = MiniBatchResult(c_fin, e_fin, state.t, state.n_acc)
     if not return_trace:
@@ -772,7 +904,11 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
                         checkpoint_every: int = 0,
                         checkpoint_dir=None,
                         resume_from=None,
-                        checkpoint_cb: Optional[Callable] = None):
+                        checkpoint_cb: Optional[Callable] = None,
+                        keep_last_n: int = 0,
+                        keep_every_m: int = 0,
+                        metrics=None,
+                        sync_writes: bool = False):
     """Streaming Algorithm 1 over chunked data — fully jit-able.
 
     ``chunks`` is (n_chunks, B, d) with row-weight mask ``weights``
@@ -796,6 +932,9 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
     ``checkpoint_every=e`` segments the run at EPOCH granularity (a host
     loop over the jit'd epoch program, snapshotting state + shuffle key
     every e epochs); see ``aa_kmeans`` for the checkpoint/resume contract.
+    The runtime knobs (``keep_last_n=`` / ``keep_every_m=`` retention,
+    ``metrics=`` sink, ``sync_writes=``) carry over verbatim; metrics are
+    emitted once per epoch.
     """
     if chunks.ndim != 3:
         raise ValueError(f"chunks must be (n_chunks, B, d); got "
@@ -807,10 +946,13 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
     if key is None:
         key = jax.random.PRNGKey(0)
     if checkpoint_every or checkpoint_dir is not None \
-            or resume_from is not None or checkpoint_cb is not None:
+            or resume_from is not None or checkpoint_cb is not None \
+            or metrics is not None:
         return _aa_kmeans_minibatch_segmented(
             chunks, weights, x_val, c0, cfg, bk, key, checkpoint_every,
-            checkpoint_dir, resume_from, checkpoint_cb, return_trace)
+            checkpoint_dir, resume_from, checkpoint_cb, return_trace,
+            keep_last_n=keep_last_n, keep_every_m=keep_every_m,
+            metrics=metrics, sync_writes=sync_writes)
     state = minibatch_init(c0, cfg, bk)
 
     def epoch_step(carry, _):
@@ -848,8 +990,14 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
                      ops: Optional[LloydOps] = None,
                      jit_iteration: bool = True,
                      backend: BackendLike = None,
-                     warmup: bool = False) -> KMeansTrace:
+                     warmup: bool = False,
+                     metrics=None) -> KMeansTrace:
     """Python-loop driver recording the statistics of Tables 2 and 3.
+
+    ``metrics=`` accepts any `repro.runtime.metrics` sink; each iteration
+    emits {energy, m, accepted} plus bound-elimination fractions for
+    bound backends — the same numbers the returned trace accumulates,
+    streamed live instead of collected at the end.
 
     ``warmup=True`` compiles the init/iteration computations on a throwaway
     run before the timer starts, so ``wall_time_s`` measures steady-state
@@ -872,6 +1020,7 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
 
     from repro.core.backends.bounds import extract_stats
 
+    mx = as_metrics(metrics)
     t0 = time.perf_counter()
     state = init_fn(x, c0, cfg, bk)
     energies, m_vals, acc, bstats = [], [], [], []
@@ -884,10 +1033,14 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
         energies.append(float(e_t))
         m_vals.append(int(state.aa.m))
         acc.append(bool(accepted))
+        scalars = {"energy": energies[-1], "m": float(m_vals[-1]),
+                   "accepted": float(acc[-1])}
         bs = extract_stats(state.carry)
         if bs is not None:
             bstats.append({"eliminated_frac": float(bs.eliminated_frac),
                            "skipped_frac": float(bs.skipped_frac)})
+            scalars.update(bstats[-1])
+        mx.log_scalars(len(energies), scalars)
     jax.block_until_ready(state.c)
     wall = time.perf_counter() - t0
 

@@ -26,7 +26,11 @@ resume is a ``device_put`` with the new shardings (core/distributed.py).
 Schema evolution contract: ``SCHEMA_VERSION`` bumps whenever a state
 tree's meaning changes (not merely its nesting — structure is checked
 against the like tree anyway); ``load`` refuses artifacts from a NEWER
-schema and leaves older-schema migration hooks to the kind owner.
+schema, and OLDER artifacts are upgraded in-memory by per-kind migration
+functions (`register_migration`) applied schema-by-schema until the
+artifact matches ``SCHEMA_VERSION`` — an old snapshot either restores
+correctly or fails loudly naming the missing migration; it never
+restores wrong.
 """
 
 from __future__ import annotations
@@ -51,6 +55,46 @@ KIND_ESTIMATOR_AA = "estimator/aa_kmeans"
 KIND_ESTIMATOR_MB = "estimator/minibatch_aa_kmeans"
 
 PyTree = Any
+
+# -- schema migrations (DESIGN.md §Persistence) ------------------------------
+#
+# {(kind, from_schema): migrate} where ``migrate(meta, by_path)`` returns
+# the (meta, by_path) pair upgraded to ``from_schema + 1`` — rename/add/
+# drop leaf paths in ``by_path`` and adjust ``meta`` accordingly.  `load`
+# chains these until the artifact reaches SCHEMA_VERSION, so each bump
+# needs exactly one migration per affected kind, written once, at the
+# bump.  Unaffected kinds need none: the identity chain is implied only
+# when a migration IS registered for the (kind, schema) step; a gap means
+# the artifact cannot be interpreted and `load` fails loudly.
+_MIGRATIONS: dict = {}
+
+
+def register_migration(kind: str, from_schema: int, fn) -> None:
+    """Register ``fn(meta, by_path) -> (meta, by_path)`` upgrading
+    ``kind`` artifacts from ``from_schema`` to ``from_schema + 1``."""
+    _MIGRATIONS[(kind, int(from_schema))] = fn
+
+
+def unregister_migration(kind: str, from_schema: int) -> None:
+    _MIGRATIONS.pop((kind, int(from_schema)), None)
+
+
+def _migrate(path, meta: dict, by_path: dict):
+    """Chain registered migrations until ``meta['schema']`` reaches
+    SCHEMA_VERSION; loud failure when a step has no migration."""
+    while meta["schema"] < SCHEMA_VERSION:
+        step = (meta.get("kind"), meta["schema"])
+        fn = _MIGRATIONS.get(step)
+        if fn is None:
+            raise ValueError(
+                f"{path}: artifact schema {meta['schema']} predates this "
+                f"code's {SCHEMA_VERSION} and no migration is registered "
+                f"for kind {meta.get('kind')!r} at schema "
+                f"{meta['schema']} — refusing to guess at the old layout")
+        meta, by_path = fn(dict(meta), dict(by_path))
+        if meta["schema"] <= step[1]:
+            meta["schema"] = step[1] + 1    # migrations may omit the bump
+    return meta, by_path
 
 
 def _key_name(k) -> str:
@@ -125,8 +169,10 @@ def load(path: str | os.PathLike, *, expect_kind: Optional[str] = None):
     """Read an artifact -> (meta dict, {leaf path: host array}).
 
     Validates the schema version (a NEWER schema than this code knows is
-    refused — forward compatibility is never silent) and, when
-    ``expect_kind`` is given, that the artifact holds that state kind."""
+    refused — forward compatibility is never silent; an OLDER one is
+    upgraded through registered migrations, failing loudly when a step
+    is unregistered) and, when ``expect_kind`` is given, that the
+    artifact holds that state kind."""
     path = Path(path)
     with np.load(path, allow_pickle=False) as z:
         meta = msgpack.unpackb(bytes(z["__meta__"].tobytes()))
@@ -142,6 +188,8 @@ def load(path: str | os.PathLike, *, expect_kind: Optional[str] = None):
             f"expected {expect_kind!r}")
     by_path = {m["path"]: _from_storable(a, m["dtype"])
                for m, a in zip(meta["leaves"], arrays)}
+    if schema < SCHEMA_VERSION:
+        meta, by_path = _migrate(path, meta, by_path)
     return meta, by_path
 
 

@@ -15,6 +15,11 @@ The chunk contract shared by both: every chunk has exactly ``chunk_size``
 rows; rows past the true N carry weight 0 (they replicate the final sample
 but vanish from every weighted reduction); under a mesh, chunk rows are
 sharded over the data axes so each host/shard streams only its slice.
+
+`stream_chunks` unifies the regimes behind one iterator: it yields
+device-resident chunks whether the source is a `DeviceChunks`, a host
+array, or a raw chunk generator, prefetching host→device transfers
+through `repro.runtime.prefetch` so copies overlap compute.
 """
 
 from __future__ import annotations
@@ -130,3 +135,61 @@ def host_chunk_stream(x, chunk_size: int, epochs: int = 1, seed: int = 0,
                 skip -= 1
                 continue
             yield x[idx]
+
+
+def stream_chunks(source, chunk_size: Optional[int] = None, *,
+                  epochs: int = 1, seed: int = 0, start_chunk: int = 0,
+                  drop_remainder: bool = False, prefetch: int = 2,
+                  mesh: Optional[jax.sharding.Mesh] = None,
+                  data_axes: Sequence[str] = ("data",),
+                  meter=None):
+    """One iterator contract over both chunk regimes.
+
+    Yields device-resident chunk arrays regardless of where ``source``
+    lives:
+
+      * a `DeviceChunks` — chunks are already on device (and already
+        mesh-sharded if built that way); they are yielded in storage
+        order with zero copies.  ``chunk_size``/``epochs``/``seed`` must
+        be left at their defaults — shuffling device-resident chunks is
+        the epoch driver's job.
+      * a host array — wrapped in `host_chunk_stream` (per-epoch
+        shuffle, ``start_chunk`` resume skipping) and pushed through
+        `repro.runtime.prefetch.prefetch_to_device`, so chunk t+1's
+        host→device copy overlaps the consumer's compute on chunk t.
+      * any iterator/generator of host chunks — prefetched as-is (the
+        caller owns ordering); ``chunk_size`` is ignored.
+
+    With ``mesh`` set, each transferred chunk lands sharded over
+    ``data_axes`` (rows split, spec `P(axes)` for 2-D chunks), matching
+    `chunk_dataset`'s placement.  ``prefetch`` bounds the in-flight
+    transfers (2 = double buffering; 1 = synchronous).  ``meter`` is an
+    optional `repro.runtime.prefetch.IngestMeter` accumulating achieved
+    ingest bytes/bandwidth.
+    """
+    from repro.runtime.prefetch import prefetch_to_device
+
+    if isinstance(source, DeviceChunks):
+        if chunk_size is not None or epochs != 1 or start_chunk:
+            raise ValueError(
+                "stream_chunks(DeviceChunks) yields storage order; "
+                "chunk_size/epochs/start_chunk do not apply")
+
+        def _device_iter():
+            for i in range(source.chunks.shape[0]):
+                yield source.chunks[i]
+        return _device_iter()
+
+    if hasattr(source, "__next__") or not hasattr(source, "shape"):
+        host_iter = iter(source)
+    else:
+        if chunk_size is None:
+            raise ValueError("chunk_size is required for a host array")
+        host_iter = host_chunk_stream(source, chunk_size, epochs=epochs,
+                                      seed=seed, start_chunk=start_chunk,
+                                      drop_remainder=drop_remainder)
+    sharding = None
+    if mesh is not None:
+        sharding = NamedSharding(mesh, P(tuple(data_axes)))
+    return prefetch_to_device(host_iter, size=max(1, int(prefetch)),
+                              sharding=sharding, meter=meter)

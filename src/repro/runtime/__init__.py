@@ -1,0 +1,21 @@
+"""Host-side execution runtime (DESIGN.md §Runtime).
+
+Three cooperating pieces behind the solver drivers' host loops:
+
+  * `repro.runtime.prefetch` — overlapped host→device chunk ingestion
+    (double-buffered ``device_put``; ingest accounting);
+  * `repro.runtime.writer`   — background checkpoint writer thread with a
+    drain/error lifecycle, snapshot manifest, retention, orphan cleanup;
+  * `repro.runtime.metrics`  — the pluggable ``log_scalars`` sink
+    protocol (null/stdout/jsonl/tee/collect).
+"""
+
+from repro.runtime.metrics import (CollectMetrics, JsonlMetrics,  # noqa: F401
+                                   MetricsLogger, NullMetrics,
+                                   StdoutMetrics, TeeMetrics, as_metrics,
+                                   close_metrics)
+from repro.runtime.prefetch import (IngestMeter, prefetch_to_device,  # noqa: F401,E501
+                                    tree_nbytes)
+from repro.runtime.writer import (CheckpointWriter, cleanup_orphans,  # noqa: F401,E501
+                                  read_manifest, snapshot_name,
+                                  write_snapshot)

@@ -1,0 +1,157 @@
+"""Pluggable metrics pipeline for the host-side runtime (DESIGN.md
+§Runtime).
+
+Every host loop in this repo — the segmented solver drivers, the
+minibatch epoch driver, the traced benchmark driver, the estimator's
+``partial_fit`` stream, the background checkpoint writer — emits its
+per-boundary diagnostics through one tiny protocol:
+
+    logger.log_scalars(step, {"energy": 1.2e6, "segment_s": 0.41, ...})
+
+in the spirit of HomebrewNLP-Jax's ``wandblog.py``: the producer never
+knows (or imports) the consumer, so the same driver feeds a no-op sink in
+production, stdout while debugging, a JSONL file for offline analysis, or
+a user-supplied wandb/TensorBoard adapter — anything with a
+``log_scalars`` method qualifies; subclassing is never required.
+
+Sinks must tolerate being called from more than one thread: the
+checkpoint writer reports its write latency from the writer thread while
+the driver logs segment metrics from the main thread (`JsonlMetrics`
+locks around its file; the others are trivially safe).
+
+Values may be Python numbers or device scalars; sinks coerce through
+``float()``, which *synchronises* on a device scalar — drivers therefore
+only log at host boundaries where the value is already materialised
+(segment ends, epoch ends), never inside a jit trace.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import threading
+from typing import IO, Mapping, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class MetricsLogger(Protocol):
+    """Anything with ``log_scalars(step, scalars)`` is a metrics sink."""
+
+    def log_scalars(self, step: int, scalars: Mapping[str, float]) -> None:
+        ...
+
+
+def _to_float(v) -> float:
+    """Coerce a Python / numpy / jax scalar to float (bool -> 0.0/1.0)."""
+    return float(v)
+
+
+class NullMetrics:
+    """The default sink: drops everything, costs nothing."""
+
+    def log_scalars(self, step, scalars) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class StdoutMetrics:
+    """Human-readable one-line-per-call sink (debugging / smoke runs)."""
+
+    def __init__(self, prefix: str = "metrics", stream: Optional[IO] = None):
+        self.prefix = prefix
+        self.stream = stream if stream is not None else sys.stdout
+
+    def log_scalars(self, step, scalars) -> None:
+        body = " ".join(f"{k}={_to_float(v):.6g}"
+                        for k, v in sorted(scalars.items()))
+        print(f"{self.prefix} step={int(step)} {body}",
+              file=self.stream, flush=True)
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlMetrics:
+    """Append-only JSON-lines sink: one ``{"step": t, ...}`` object per
+    call, flushed per line so a killed run loses at most the line in
+    flight.  Thread-safe (writer thread + driver thread share it)."""
+
+    def __init__(self, path):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f = open(path, "a", encoding="utf-8")
+
+    def log_scalars(self, step, scalars) -> None:
+        rec = {"step": int(step)}
+        rec.update({k: _to_float(v) for k, v in scalars.items()})
+        line = json.dumps(rec, sort_keys=True)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
+class TeeMetrics:
+    """Fan one stream of scalars out to several sinks."""
+
+    def __init__(self, *sinks: MetricsLogger):
+        self.sinks = tuple(as_metrics(s) for s in sinks)
+
+    def log_scalars(self, step, scalars) -> None:
+        for s in self.sinks:
+            s.log_scalars(step, scalars)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            close_metrics(s)
+
+
+class CollectMetrics:
+    """In-memory sink: ``records`` is a list of (step, dict) — unit tests
+    and notebook inspection."""
+
+    def __init__(self):
+        self.records = []
+        self._lock = threading.Lock()
+
+    def log_scalars(self, step, scalars) -> None:
+        rec = {k: _to_float(v) for k, v in scalars.items()}
+        with self._lock:
+            self.records.append((int(step), rec))
+
+    def close(self) -> None:
+        pass
+
+
+def as_metrics(obj) -> MetricsLogger:
+    """Normalise the ``metrics=`` argument every driver accepts: None ->
+    the null sink; a string -> a named built-in ("null" | "stdout");
+    anything with ``log_scalars`` passes through."""
+    if obj is None:
+        return NullMetrics()
+    if isinstance(obj, str):
+        if obj == "null":
+            return NullMetrics()
+        if obj == "stdout":
+            return StdoutMetrics()
+        raise ValueError(f"unknown metrics sink name {obj!r}; expected "
+                         f"'null' | 'stdout', a sink object, or None")
+    if not hasattr(obj, "log_scalars"):
+        raise TypeError(
+            f"metrics= expects an object with log_scalars(step, scalars); "
+            f"got {type(obj).__name__}")
+    return obj
+
+
+def close_metrics(obj) -> None:
+    """Close a sink if it supports closing (the protocol does not require
+    it, so user adapters without close() are fine)."""
+    close = getattr(obj, "close", None)
+    if close is not None:
+        close()

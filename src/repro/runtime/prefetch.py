@@ -1,0 +1,115 @@
+"""Overlapped host→device chunk ingestion (DESIGN.md §Runtime).
+
+The streaming solver's host loop used to be strictly serial: gather chunk
+t on the host, ``device_put`` it, run the chunk step, repeat — the
+transfer of chunk t+1 waits for step t even though the device (and XLA's
+async dispatch on every backend) could hide it entirely.
+
+``prefetch_to_device`` turns any host-chunk iterator into a
+double-buffered device iterator: it keeps up to ``size`` chunks in
+flight, issuing each ``jax.device_put`` as soon as a slot frees — because
+device_put and jit dispatch are both asynchronous, the copy of chunk t+1
+proceeds while the consumer's compute on chunk t runs.  The yielded
+sequence is exactly the input sequence (same order, same values); only
+the *timing* of the transfers changes, so a prefetched run is
+numerically identical to a synchronous one.
+
+Mesh runs pass a ``sharding`` (e.g. ``NamedSharding(mesh, P(axes))``):
+each chunk lands already sharded over the data axes, preserving the
+chunk contract of `repro.data.streaming`.
+
+``IngestMeter`` rides along to account achieved ingest bandwidth — the
+number `benchmarks/streaming_sweep.py --big` reports as GB/s.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Iterable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def tree_nbytes(tree) -> int:
+    """Total payload bytes of a pytree of arrays (host or device)."""
+    return sum(int(np.asarray(leaf).nbytes) if not hasattr(leaf, "nbytes")
+               else int(leaf.nbytes)
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class IngestMeter:
+    """Byte/wall-clock accounting for a chunk stream.
+
+    ``add(nbytes)`` per chunk; ``gbps`` is achieved ingest over the
+    meter's lifetime (or between ``start()`` and the last ``add``).
+    """
+
+    def __init__(self):
+        self.bytes = 0
+        self.chunks = 0
+        self._t0 = time.perf_counter()
+        self._t_last = self._t0
+
+    def start(self) -> "IngestMeter":
+        self._t0 = time.perf_counter()
+        self._t_last = self._t0
+        self.bytes = 0
+        self.chunks = 0
+        return self
+
+    def add(self, nbytes: int) -> None:
+        self.bytes += int(nbytes)
+        self.chunks += 1
+        self._t_last = time.perf_counter()
+
+    @property
+    def seconds(self) -> float:
+        return max(self._t_last - self._t0, 1e-12)
+
+    @property
+    def gbps(self) -> float:
+        return self.bytes / self.seconds / 1e9
+
+    def scalars(self) -> dict:
+        return {"ingest_bytes": float(self.bytes),
+                "ingest_chunks": float(self.chunks),
+                "ingest_gbps": self.gbps}
+
+
+def prefetch_to_device(iterator: Iterable, size: int = 2, *,
+                       sharding: Optional[jax.sharding.Sharding] = None,
+                       meter: Optional[IngestMeter] = None) -> Iterator:
+    """Iterate ``iterator``'s chunks (any pytree of host arrays) with up
+    to ``size`` host→device transfers in flight.
+
+    ``size=2`` is classic double buffering: while the consumer computes
+    on the chunk just yielded, the next chunk's copy is already issued.
+    ``size=1`` degenerates to the synchronous behaviour (one transfer,
+    then yield) and ``size=0`` is rejected.  With ``sharding`` set, every
+    leaf is placed with it (rows sharded over the mesh's data axes);
+    otherwise the default device placement applies.
+
+    The generator holds references to at most ``size`` device chunks, so
+    the peak device footprint is bounded by ``size * chunk_bytes`` on top
+    of the consumer's own state.
+    """
+    if size < 1:
+        raise ValueError(f"prefetch size must be >= 1; got {size}")
+
+    def _put(host_tree):
+        if meter is not None:
+            meter.add(tree_nbytes(host_tree))
+        if sharding is not None:
+            return jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, sharding), host_tree)
+        return jax.tree_util.tree_map(jax.device_put, host_tree)
+
+    buf = collections.deque()
+    for item in iterator:
+        buf.append(_put(item))
+        if len(buf) > size - 1:
+            yield buf.popleft()
+    while buf:
+        yield buf.popleft()

@@ -1,0 +1,284 @@
+"""Background checkpoint writer + snapshot manifest (DESIGN.md §Runtime).
+
+The segmented drivers (core/kmeans.py) used to block ~15 ms per boundary
+on the synchronous ``device_get`` + atomic npz write
+(BENCH_checkpoint.json) — pure host time the solve cannot hide.  This
+module moves the *write* off the critical path while keeping every bit of
+the resume guarantee:
+
+  * the **snapshot is taken synchronously**: the driver calls
+    ``jax.device_get(state)`` at the segment boundary and hands the
+    writer a host tree.  The artifact content is therefore exactly what
+    the synchronous path would have written — bit-identical resume does
+    not depend on writer timing at all; only the file I/O is deferred.
+  * the **writer is a single daemon thread** over a bounded queue
+    (default depth 2), so a driver that outruns the disk back-pressures
+    instead of buffering unboundedly.
+  * **errors propagate**: the first write failure is recorded and
+    re-raised on the next ``submit``/``drain``/``close`` — the drivers
+    close the writer in a ``finally``, so a failed write still fails the
+    run instead of silently dropping snapshots.
+  * **drain on exit**: ``close()`` processes everything queued, joins the
+    thread, then surfaces any error; after the driver returns, every
+    snapshot it reported is durable on disk.
+
+Checkpoint lifecycle (ROADMAP item) lives here too:
+
+  * ``write_snapshot`` — the shared synchronous primitive (the writer
+    thread and the distributed driver's snapshot path both use it):
+    atomic tmp+rename ``serialize.save``, then an atomically rewritten
+    ``manifest.json``, then retention deletions.  The ordering is what
+    makes deletion crash-safe: the manifest never references a file that
+    is about to be deleted, so a crash between the manifest rewrite and
+    the ``unlink`` leaves at worst an orphaned-but-complete artifact —
+    never a manifest pointing at nothing.
+  * retention — ``keep_last_n`` (sliding window) and ``keep_every_m``
+    (every m-th boundary kept forever, for post-hoc trajectory analysis);
+    the newest snapshot is always retained.
+  * ``cleanup_orphans`` — startup sweep removing ``*.tmp`` files a killed
+    writer left behind (the atomic-rename protocol guarantees they are
+    never valid artifacts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from pathlib import Path
+from typing import Optional
+
+from repro.runtime.metrics import as_metrics
+
+# NOTE: repro.core.serialize is imported inside `write_snapshot`, not at
+# module scope — core/kmeans.py imports this module, and importing the
+# repro.core package from here would close an import cycle.
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_SCHEMA = "ckpt_manifest/v1"
+
+_STOP = object()
+
+
+def snapshot_name(step: int) -> str:
+    """Canonical artifact file name for a boundary snapshot."""
+    return f"it_{int(step):08d}.npz"
+
+
+def manifest_path(ckpt_dir) -> Path:
+    return Path(ckpt_dir) / MANIFEST_NAME
+
+
+def read_manifest(ckpt_dir) -> Optional[dict]:
+    """The run directory's manifest, or None (no manifest yet / legacy
+    directory / unreadable file — callers fall back to a directory
+    scan)."""
+    p = manifest_path(ckpt_dir)
+    try:
+        with open(p, "r", encoding="utf-8") as f:
+            m = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(m, dict) or m.get("schema") != MANIFEST_SCHEMA:
+        return None
+    return m
+
+
+def _write_manifest(ckpt_dir, manifest: dict) -> None:
+    """Atomic tmp+rename rewrite — a reader never sees a torn manifest."""
+    p = manifest_path(ckpt_dir)
+    tmp = p.with_name(p.name + ".tmp")
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+
+
+def cleanup_orphans(ckpt_dir) -> list:
+    """Remove ``*.tmp`` files left by a killed writer (both artifact and
+    manifest temps).  Atomic-rename writing means a ``.tmp`` is never a
+    complete artifact, so deletion is always safe.  Returns the removed
+    paths."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return []
+    removed = []
+    for p in d.glob("*.tmp"):
+        try:
+            p.unlink()
+            removed.append(p)
+        except OSError:
+            pass
+    return removed
+
+
+def _json_safe(v):
+    try:
+        json.dumps(v)
+        return v
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def _apply_retention(snaps: list, keep_last_n: int, keep_every_m: int):
+    """(retained, dropped) over step-sorted manifest entries.  With both
+    knobs 0 everything is retained; otherwise an entry survives when it
+    is among the newest ``keep_last_n``, on a ``keep_every_m`` boundary
+    (step % m == 0), or the newest overall (always kept: it is the resume
+    point)."""
+    if not snaps or (keep_last_n <= 0 and keep_every_m <= 0):
+        return snaps, []
+    last = {e["file"] for e in snaps[-max(keep_last_n, 1):]} \
+        if keep_last_n > 0 else {snaps[-1]["file"]}
+    retained, dropped = [], []
+    for e in snaps:
+        keep = e["file"] in last or e is snaps[-1] or \
+            (keep_every_m > 0 and e["step"] % keep_every_m == 0)
+        (retained if keep else dropped).append(e)
+    return retained, dropped
+
+
+def write_snapshot(ckpt_dir, state, *, kind: str, step: int,
+                   extra: Optional[dict] = None,
+                   keep_last_n: int = 0, keep_every_m: int = 0) -> Path:
+    """Synchronous snapshot primitive: artifact, manifest, retention —
+    in that order (see the module docstring for why the order is the
+    crash-safety argument).  ``state`` may be device or host arrays;
+    `serialize.save` gathers either."""
+    from repro.core import serialize
+    d = Path(ckpt_dir)
+    d.mkdir(parents=True, exist_ok=True)
+    name = snapshot_name(step)
+    path = serialize.save(d / name, state, kind=kind, extra=extra)
+    entry = {"file": path.name, "step": int(step),
+             "meta": {k: _json_safe(v) for k, v in (extra or {}).items()}}
+    manifest = read_manifest(d)
+    if manifest is None:
+        manifest = {"schema": MANIFEST_SCHEMA, "snapshots": []}
+    snaps = [e for e in manifest.get("snapshots", [])
+             if e.get("file") != entry["file"]]
+    snaps.append(entry)
+    snaps.sort(key=lambda e: e["step"])
+    retained, dropped = _apply_retention(snaps, int(keep_last_n),
+                                         int(keep_every_m))
+    manifest.update(kind=kind, latest=retained[-1]["file"],
+                    snapshots=retained)
+    _write_manifest(d, manifest)
+    for e in dropped:
+        try:
+            (d / e["file"]).unlink()
+        except FileNotFoundError:
+            pass
+    return path
+
+
+class CheckpointWriter:
+    """Single-thread background writer over `write_snapshot`.
+
+    Usage (exactly what the segmented drivers do)::
+
+        writer = CheckpointWriter(ckpt_dir, kind=serialize.KIND_LOOP,
+                                  keep_last_n=3, metrics=sink)
+        try:
+            for segment in run:
+                writer.submit(jax.device_get(state), t, extra_meta)
+        finally:
+            writer.close()      # drain + join; re-raises a failed write
+
+    ``submit`` blocks only when ``queue_size`` writes are already
+    pending (disk back-pressure), and re-raises any earlier write error
+    immediately so failures surface at the next boundary rather than at
+    the end of a long run.  The write latency of every snapshot is
+    emitted to ``metrics`` as ``checkpoint_write_s`` (from the writer
+    thread — sinks are thread-safe by contract).
+    """
+
+    def __init__(self, ckpt_dir, *, kind: str,
+                 keep_last_n: int = 0, keep_every_m: int = 0,
+                 metrics=None, queue_size: int = 2):
+        self.dir = Path(ckpt_dir)
+        self.kind = kind
+        self.keep_last_n = int(keep_last_n)
+        self.keep_every_m = int(keep_every_m)
+        self.metrics = as_metrics(metrics)
+        self.last_write_s: Optional[float] = None
+        self.n_written = 0
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(queue_size)))
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self.dir.mkdir(parents=True, exist_ok=True)
+        cleanup_orphans(self.dir)
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-ckpt-writer")
+        self._thread.start()
+
+    # -- driver-facing API -------------------------------------------------
+
+    def submit(self, state_host, step: int,
+               extra: Optional[dict] = None) -> None:
+        """Queue one snapshot.  ``state_host`` must already be the
+        boundary state (the caller's ``jax.device_get`` IS the snapshot
+        point; the writer only persists it)."""
+        self._check()
+        if self._closed:
+            raise RuntimeError("CheckpointWriter is closed")
+        self._q.put((state_host, int(step), extra))
+
+    def drain(self) -> None:
+        """Block until every queued snapshot is on disk; then surface any
+        write error."""
+        self._q.join()
+        self._check()
+
+    def close(self) -> None:
+        """Drain, stop the thread, surface any write error.  Idempotent."""
+        if not self._closed:
+            self._closed = True
+            self._q.put(_STOP)
+            self._thread.join()
+        self._check()
+
+    def __enter__(self) -> "CheckpointWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # on a clean exit surface writer errors; if the body already
+        # raised, still drain/join but let the body's error win
+        try:
+            self.close()
+        except BaseException:
+            if exc_type is None:
+                raise
+
+    # -- worker ------------------------------------------------------------
+
+    def _check(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                if self._error is not None:
+                    continue    # stop persisting after the first failure
+                state, step, extra = item
+                t0 = time.perf_counter()
+                write_snapshot(self.dir, state, kind=self.kind, step=step,
+                               extra=extra, keep_last_n=self.keep_last_n,
+                               keep_every_m=self.keep_every_m)
+                self.last_write_s = time.perf_counter() - t0
+                self.n_written += 1
+                try:
+                    self.metrics.log_scalars(
+                        step, {"checkpoint_write_s": self.last_write_s})
+                except Exception:
+                    pass    # a broken sink must not poison the run
+            except BaseException as e:   # noqa: BLE001 — propagated later
+                self._error = e
+            finally:
+                self._q.task_done()

@@ -92,8 +92,13 @@ def test_checkpoint_bench_emits_json(tmp_path):
     rec = checkpoint_bench.main(
         ["--smoke", "--checkpoint-every", "5", "--json", str(out)])
     payload = json.loads(out.read_text())
-    assert payload["schema"] == "checkpoint_bench/v1"
+    assert payload["schema"] == "checkpoint_bench/v2"
     assert payload["record"] == rec
     assert rec["checkpoint_every"] == 5 and rec["snapshots"] >= 1
-    for key in ("t_monolithic_s", "t_segmented_s", "t_checkpointed_s"):
+    for key in ("t_monolithic_s", "t_segmented_s", "t_checkpointed_s",
+                "t_checkpointed_async_s"):
         assert rec[key] > 0
+    # v2 reports the async writer's per-boundary cost next to sync's:
+    # device_get + queue handoff must beat device_get + inline npz write
+    assert rec["sync_boundary_us"] > 0 and rec["async_boundary_us"] > 0
+    assert rec["async_to_sync_overhead_ratio"] < 1.0

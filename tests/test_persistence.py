@@ -106,6 +106,85 @@ def test_restore_shape_mismatch_is_loud(tmp_path):
         serialize.restore(p, {"b": jax.ShapeDtypeStruct((4, 2), np.float32)})
 
 
+def test_serialize_migration_chain(tmp_path, monkeypatch):
+    """Older-schema artifacts are upgraded through registered per-kind
+    migrations; a missing migration fails loudly instead of guessing."""
+    tree_old = {"c": jnp.arange(6, dtype=jnp.float32).reshape(3, 2),
+                "e": jnp.asarray(4.5)}     # hypothetical old leaf name
+    p = serialize.save(tmp_path / "s", tree_old, kind=serialize.KIND_LOOP,
+                       extra={"t": 5})
+    monkeypatch.setattr(serialize, "SCHEMA_VERSION",
+                        serialize.SCHEMA_VERSION + 1)
+    with pytest.raises(ValueError, match="no migration is registered"):
+        serialize.load(p)
+
+    def mig(meta, by_path):      # schema bump renamed 'e' -> 'energy'
+        by_path["energy"] = by_path.pop("e")
+        for leaf in meta["leaves"]:
+            if leaf["path"] == "e":
+                leaf["path"] = "energy"
+        return meta, by_path     # schema bump applied by the chain
+
+    serialize.register_migration(serialize.KIND_LOOP,
+                                 serialize.SCHEMA_VERSION - 1, mig)
+    try:
+        like = {"c": jax.ShapeDtypeStruct((3, 2), np.float32),
+                "energy": jax.ShapeDtypeStruct((), np.float32)}
+        out, meta = serialize.restore(p, like,
+                                      expect_kind=serialize.KIND_LOOP)
+        assert meta["schema"] == serialize.SCHEMA_VERSION
+        assert meta["t"] == 5
+        np.testing.assert_array_equal(np.asarray(tree_old["c"]), out["c"])
+        assert float(out["energy"]) == 4.5
+    finally:
+        serialize.unregister_migration(serialize.KIND_LOOP,
+                                       serialize.SCHEMA_VERSION - 1)
+
+
+def test_migrated_loop_state_resumes_bit_identical(tmp_path, monkeypatch):
+    """End-to-end schema evolution drill on the real driver: snapshot a
+    run, rewrite the artifact as if saved before a (simulated)
+    `_LoopState` field rename, bump SCHEMA_VERSION, register the
+    migration — the segmented driver resumes from the migrated artifact
+    and reproduces the uninterrupted solve bit for bit."""
+    x = jnp.asarray(make_blobs(400, 4, 5, seed=0, spread=1.0))
+    c0 = kmeanspp_init(jax.random.PRNGKey(0), x, 5)
+    cfg = KMeansConfig(k=5, max_iter=30)
+    ref = aa_kmeans(x, c0, cfg)
+    aa_kmeans(x, c0, cfg, checkpoint_every=5, checkpoint_dir=tmp_path)
+    p = latest_snapshot(tmp_path)
+    meta, by_path = serialize.load(p)    # current layout, current schema
+
+    # forge the pre-rename artifact: leaf 'e_last' used to be 'e_final'
+    old = dict(by_path)
+    old["e_final"] = old.pop("e_last")
+    extra = {k: v for k, v in meta.items()
+             if k not in ("schema", "kind", "leaves")}
+    p_old = serialize.save(tmp_path / "old_schema", old,
+                           kind=serialize.KIND_LOOP, extra=extra)
+
+    monkeypatch.setattr(serialize, "SCHEMA_VERSION",
+                        serialize.SCHEMA_VERSION + 1)
+
+    def mig(m, bp):
+        bp["e_last"] = bp.pop("e_final")
+        for leaf in m["leaves"]:
+            if leaf["path"] == "e_final":
+                leaf["path"] = "e_last"
+        return m, bp
+
+    serialize.register_migration(serialize.KIND_LOOP,
+                                 serialize.SCHEMA_VERSION - 1, mig)
+    try:
+        res = aa_kmeans(x, c0, cfg, resume_from=p_old)
+    finally:
+        serialize.unregister_migration(serialize.KIND_LOOP,
+                                       serialize.SCHEMA_VERSION - 1)
+    assert float(res.energy) == float(ref.energy)
+    np.testing.assert_array_equal(np.asarray(res.centroids),
+                                  np.asarray(ref.centroids))
+
+
 # ---------------------------------------------------------------------------
 # Segmented drivers — resume parity against the golden trajectory
 # ---------------------------------------------------------------------------
