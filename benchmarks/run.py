@@ -80,6 +80,13 @@ def main() -> None:
     except Exception:
         traceback.print_exc()
 
+    print("# === Serving: closure-index recall vs latency ===", flush=True)
+    try:
+        from benchmarks import serving_bench
+        serving_bench.main(["--json"] + (["--smoke"] if args.fast else []))
+    except Exception:
+        traceback.print_exc()
+
     print("# === Kernel roofline (fused vs split Lloyd pass) ===",
           flush=True)
     try:

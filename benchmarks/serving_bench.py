@@ -1,0 +1,157 @@
+"""Serving-path benchmark: closure-index recall vs latency
+(DESIGN.md §Serving).
+
+For each (K, d) case the query set is labelled once by the exact full-K
+scan, then by the cluster-closure candidate path over a sweep of
+candidate counts (`repro.serving.closure`).  Each record prices one
+sweep point: label agreement with the exact path ("recall" — the
+candidate restriction is the only approximation) against the measured
+per-query wall cost of both paths.  The curve is the serving tier's
+tuning surface: pick the smallest candidate count whose recall clears
+the product's bar.
+
+``--json [PATH]`` writes ``BENCH_serving.json`` (schema
+``serving_bench/v1``); ``--smoke`` runs a tiny case for CI
+(tests/test_perf_smoke.py pins the schema).  The full run includes the
+K=4096 case the ISSUE-8 acceptance names.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench --json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# (k, d, n_queries, candidate sweep)
+CASES = [
+    (512, 32, 4096, (8, 16, 32, 64, 128)),
+    (4096, 64, 4096, (32, 64, 128, 256, 512)),
+]
+SMOKE_CASES = [
+    (64, 8, 512, (4, 16, 64)),
+]
+
+
+def _timed(fn, *args, reps: int = 5) -> float:
+    """Median wall seconds per call; compile excluded (one warmup)."""
+    import jax
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _make_case(k: int, d: int, n_queries: int, seed: int):
+    """Synthetic serving workload: centroids on a low-intrinsic-dimension
+    manifold (8-D latent embedded in d), queries scattered around them.
+    Real fitted codebooks have exactly this structure — neighbouring
+    centroids exist, so a closure index has something to exploit.  An
+    isotropic d=64 Gaussian would not (concentration of measure makes
+    every centroid nearly equidistant, which no candidate index — or
+    product — can serve).  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    dim_lat = max(2, min(d, 8))
+    basis = rng.normal(size=(dim_lat, d)).astype(np.float32) / \
+        np.sqrt(dim_lat)
+    centroids = (rng.normal(size=(k, dim_lat)) * 8.0
+                 ).astype(np.float32) @ basis
+    owner = rng.integers(0, k, size=n_queries)
+    queries = (centroids[owner]
+               + 0.5 * rng.normal(size=(n_queries, d)).astype(np.float32))
+    return centroids, queries
+
+
+def case_records(k: int, d: int, n_queries: int, sweep, *,
+                 seed: int = 0, reps: int = 5) -> list:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.lloyd import pairwise_sqdist
+    from repro.serving.closure import (build_closure_index,
+                                       candidate_table, closure_assign)
+
+    centroids_h, queries_h = _make_case(k, d, n_queries, seed)
+    c = jnp.asarray(centroids_h)
+    x = jnp.asarray(queries_h)
+
+    exact_fn = jax.jit(lambda xq, cq: jnp.argmin(
+        pairwise_sqdist(xq, cq), axis=1).astype(jnp.int32))
+    t_exact = _timed(exact_fn, x, c, reps=reps)
+    exact_labels = np.asarray(exact_fn(x, c))
+
+    approx_fn = jax.jit(
+        lambda xq, cq, r, cd, t: closure_assign(xq, cq, r, cd, t)[0])
+    # one build at the largest sweep point; prefixes ARE the smaller
+    # closures (candidate lists are sorted nearest-first).  The candidate
+    # table is per-model-version state (ServingModel builds it at load),
+    # so it is precomputed here too and excluded from the per-query cost.
+    index = build_closure_index(c, n_candidates=max(sweep), seed=seed)
+    table = candidate_table(c, index.candidates)
+    records = []
+    for n_cand in sorted(sweep):
+        idx = index.shrink(n_cand)
+        tab = table[:, :n_cand]
+        t_approx = _timed(approx_fn, x, c, idx.routers, idx.candidates,
+                          tab, reps=reps)
+        labels = np.asarray(approx_fn(x, c, idx.routers, idx.candidates,
+                                      tab))
+        records.append({
+            "k": k, "d": d, "n_queries": n_queries,
+            "n_groups": int(idx.n_groups),
+            "n_candidates": int(n_cand),
+            "scan_frac": (idx.n_groups + n_cand) / k,
+            "recall": float(np.mean(labels == exact_labels)),
+            "exact_us_per_query": t_exact / n_queries * 1e6,
+            "approx_us_per_query": t_approx / n_queries * 1e6,
+            "speedup": t_exact / t_approx,
+        })
+    return records
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_serving.json",
+                        default=None, metavar="PATH",
+                        help="write records to PATH (default "
+                             "BENCH_serving.json in the repo root)")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny case for CI (schema smoke)")
+    args = parser.parse_args(argv)
+
+    import jax
+
+    cases = SMOKE_CASES if args.smoke else CASES
+    records = []
+    for k, d, n_queries, sweep in cases:
+        records += case_records(k, d, n_queries, sweep,
+                                reps=3 if args.smoke else 5)
+    records.sort(key=lambda r: (r["k"], r["n_candidates"]))
+    for r in records:
+        print(f"serving.closure.k{r['k']}_d{r['d']}_c{r['n_candidates']},"
+              f"{r['approx_us_per_query']:.3f},"
+              f"recall={r['recall']:.4f};speedup={r['speedup']:.2f};"
+              f"exact_us={r['exact_us_per_query']:.3f}")
+    if args.json:
+        path = Path(args.json)
+        if not path.is_absolute():
+            path = Path(__file__).resolve().parents[1] / path
+        path.write_text(json.dumps(
+            {"schema": "serving_bench/v1",
+             "backend": jax.default_backend(),
+             "smoke": args.smoke, "records": records},
+            indent=2, sort_keys=True))
+        print(f"wrote {path}")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ artifacts without knowing which estimator class wrote them.
 from __future__ import annotations
 
 import os
+import re
 from pathlib import Path
 from typing import Optional
 
@@ -55,8 +56,18 @@ def latest_snapshot(ckpt_dir) -> Optional[Path]:
             return p
         # manifest referencing a missing file means external deletion —
         # fall through to the scan rather than failing the resume
-    snaps = sorted(p for p in d.glob("it_*.npz") if not p.name.endswith(".tmp"))
-    return snaps[-1] if snaps else None
+    # Scan fallback: only canonical ``it_<int>.npz`` names qualify — the
+    # regex is what actually excludes a crashed writer's ``*.npz.tmp``
+    # orphans (the old ``endswith(".tmp")`` filter was dead code: a path
+    # matching the ``it_*.npz`` glob can never end in ".tmp") — and the
+    # newest snapshot is picked by the PARSED step, since lexicographic
+    # order mis-ranks any non-zero-padded legacy name (it_9 > it_10).
+    snaps = []
+    for p in d.glob("it_*.npz*"):
+        m = re.fullmatch(r"it_(\d+)\.npz", p.name)
+        if m:
+            snaps.append((int(m.group(1)), p))
+    return max(snaps, key=lambda sp: sp[0])[1] if snaps else None
 
 
 def resume_point(ckpt_dir) -> tuple[Optional[Path], Optional[dict]]:

@@ -51,9 +51,18 @@ from repro.data.streaming import (chunk_dataset, shard_count,
                                   split_validation)
 
 
-def _mesh_rows_apply(model, x, kind, fn):
-    """Run ``fn(x_local, centroids) -> per-row output`` under a fitted
-    model's mesh: rows sharded over its data axes, centroids replicated,
+class NotFittedError(RuntimeError):
+    """Inference was requested on an estimator with no fitted state.
+
+    A real exception, not a bare ``assert``: under ``python -O`` asserts
+    are compiled away, which used to turn "call fit() first" into an
+    opaque None-attribute crash inside the first jitted call."""
+
+
+def _mesh_rows_apply(model, x, kind, fn, extras=()):
+    """Run ``fn(x_local, centroids, *extras) -> per-row output`` under a
+    fitted model's mesh: rows sharded over its data axes, centroids (and
+    any extra operands, e.g. the closure index arrays) replicated,
     padding rows (added to match the shard count) stripped from the
     result.  The jitted shard_map program is cached on the model per
     (kind, mesh, axes, backend), so a serving loop pays compilation once
@@ -66,21 +75,30 @@ def _mesh_rows_apply(model, x, kind, fn):
     run = cache.get(cache_key)
     if run is None:
         run = cache[cache_key] = jax.jit(compat.shard_map(
-            fn, mesh=model.mesh, in_specs=(P(axes), P()),
+            fn, mesh=model.mesh,
+            in_specs=(P(axes), P()) + (P(),) * len(extras),
             out_specs=P(axes)))
-    out = run(x_sh, jnp.asarray(model.centroids_))
+    out = run(x_sh, jnp.asarray(model.centroids_), *extras)
     return out[:x.shape[0]]
 
 
 def _chunked_rows_apply(model, x, kind, fn, out_dtype, out_cols=None,
-                        chunk_size=None):
-    """Run ``fn(x_chunk, centroids) -> per-row output`` jitted, chunk by
-    chunk, into a HOST (numpy) array — the single-device serving path
-    shared by both estimators.  The chunking bounds the device footprint
-    for host-sized X (an (N, K) transform of such an X would not fit back
-    on device either, hence the numpy result), and the jitted fn is
-    cached on the model per (kind, backend) so a serving loop pays
-    dispatch/tracing once instead of eager per-call overhead."""
+                        chunk_size=None, extras=()):
+    """Run ``fn(x_chunk, centroids, *extras) -> per-row output`` jitted,
+    chunk by chunk, into a HOST (numpy) array — the single-device serving
+    path shared by both estimators.  The chunking bounds the device
+    footprint for host-sized X (an (N, K) transform of such an X would
+    not fit back on device either, hence the numpy result), and the
+    jitted fn is cached on the model per (kind, backend) so a serving
+    loop pays dispatch/tracing once instead of eager per-call overhead.
+
+    Every chunk fed to the jitted fn has EXACTLY ``step`` rows: the tail
+    chunk is padded with copies of its last row and the padding sliced
+    off the output.  One compiled shape total — a serving loop over
+    varying N used to retrace per distinct remainder (N % step), which
+    is precisely the varying-batch-size pattern a request queue
+    produces.  Extras are passed through to the fn unchanged, so index
+    arrays can be swapped (same shapes) without invalidating the cache."""
     cache = model.__dict__.setdefault("_local_runners", {})
     run = cache.get((kind, model.backend))
     if run is None:
@@ -91,8 +109,103 @@ def _chunked_rows_apply(model, x, kind, fn, out_dtype, out_cols=None,
     shape = (n,) if out_cols is None else (n, out_cols)
     out = np.empty(shape, out_dtype)
     for i in range(0, n, step):
-        out[i:i + step] = np.asarray(run(jnp.asarray(x[i:i + step]), c))
+        xc = jnp.asarray(x[i:i + step])
+        m = xc.shape[0]
+        if m < step:
+            xc = jnp.concatenate(
+                [xc, jnp.repeat(xc[-1:], step - m, axis=0)])
+        out[i:i + m] = np.asarray(run(xc, c, *extras))[:m]
     return out
+
+
+# -- shared inference paths (both estimators) --------------------------------
+
+def _closure_extras(model):
+    """(routers, candidates, candidate_table) when the model carries a
+    serving index.  The (G, C, d) table is built once per inference call
+    and threaded through as an operand so every chunk scans contiguous
+    block rows instead of paying a scattered per-row centroid gather."""
+    if getattr(model, "closure_routers_", None) is None:
+        return None
+    from repro.serving.closure import candidate_table
+    candidates = jnp.asarray(model.closure_candidates_)
+    return (jnp.asarray(model.closure_routers_), candidates,
+            candidate_table(model.centroids_, candidates))
+
+
+def _predict_rows(model, x, chunk_size=None, approx=False):
+    """Nearest-centroid labels; ``approx=True`` routes through the
+    cluster-closure candidate index (`repro.serving.closure`) when the
+    model carries one — exact argmin over each row's candidate list,
+    sublinear in K — and falls back to the full-K scan when it does not
+    (legacy/index-less artifacts serve unchanged, just slower)."""
+    model._assert_fitted()
+    extras = _closure_extras(model) if approx else None
+    if extras is not None:
+        from repro.serving.closure import closure_assign
+        fn = lambda xl, c, r, cd, t: closure_assign(  # noqa: E731
+            xl, c, r, cd, t)[0]
+        if model.mesh is not None:
+            return _mesh_rows_apply(model, jnp.asarray(x),
+                                    "predict_closure", fn, extras=extras)
+        return _chunked_rows_apply(model, x, "predict_closure", fn,
+                                   np.int32, chunk_size=chunk_size,
+                                   extras=extras)
+    bk = resolve_backend(model.backend)
+    label_fn = lambda xl, c: bk.assign(xl, c).labels  # noqa: E731
+    if model.mesh is not None:
+        return _mesh_rows_apply(model, jnp.asarray(x), "predict", label_fn)
+    return _chunked_rows_apply(model, x, "predict", label_fn, np.int32,
+                               chunk_size=chunk_size)
+
+
+def _transform_rows(model, x, chunk_size=None, approx=False):
+    """Distances to each centroid (N, K).  ``approx=True`` with a fitted
+    closure index prices only each row's candidate centroids — the other
+    columns come back +inf (consistent with `closure_assign`'s argmin,
+    and honest about not having been computed)."""
+    from repro.core.lloyd import pairwise_sqdist
+    model._assert_fitted()
+    extras = _closure_extras(model) if approx else None
+    if extras is not None:
+        from repro.serving.closure import closure_sqdist
+        fn = lambda xl, c, r, cd, t: jnp.sqrt(  # noqa: E731
+            closure_sqdist(xl, c, r, cd, t))
+        if model.mesh is not None:
+            return _mesh_rows_apply(model, jnp.asarray(x),
+                                    "transform_closure", fn, extras=extras)
+        return _chunked_rows_apply(model, x, "transform_closure", fn,
+                                   np.float32, out_cols=model.n_clusters,
+                                   chunk_size=chunk_size, extras=extras)
+    dist_fn = lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c))  # noqa: E731
+    if model.mesh is not None:
+        return _mesh_rows_apply(model, jnp.asarray(x), "transform",
+                                dist_fn)
+    return _chunked_rows_apply(model, x, "transform", dist_fn,
+                               np.float32, out_cols=model.n_clusters,
+                               chunk_size=chunk_size)
+
+
+def _build_serving_index(model, n_candidates=None, n_groups=None, seed=0):
+    """Build + attach the cluster-closure index (DESIGN.md §Serving) to a
+    fitted model; persisted by ``save`` and restored by ``load``."""
+    model._assert_fitted()
+    from repro.serving.closure import build_closure_index
+    idx = build_closure_index(jnp.asarray(model.centroids_),
+                              n_candidates=n_candidates,
+                              n_groups=n_groups, seed=seed)
+    model.closure_routers_ = idx.routers
+    model.closure_candidates_ = idx.candidates
+    return model
+
+
+def _closure_index(model):
+    """The model's `ClosureIndex`, or None when none was built."""
+    if getattr(model, "closure_routers_", None) is None:
+        return None
+    from repro.serving.closure import ClosureIndex
+    return ClosureIndex(jnp.asarray(model.closure_routers_),
+                        jnp.asarray(model.closure_candidates_))
 
 
 # -- estimator persistence (DESIGN.md §Persistence) -------------------------
@@ -206,6 +319,11 @@ class AAKMeans:
     # through the segmented driver (per-segment host boundaries are where
     # the scalars materialise).  Not persisted by save().
     metrics: object = None
+    # cluster-closure serving index (DESIGN.md §Serving): None = don't
+    # build at fit time; True = build with default sizing; an int = build
+    # with that candidate count.  `build_serving_index()` attaches one to
+    # an already-fitted model either way.
+    serving_index: object = None
 
     # fitted state
     centroids_: Optional[jax.Array] = None
@@ -213,6 +331,8 @@ class AAKMeans:
     energy_: Optional[float] = None
     n_iter_: Optional[int] = None
     n_accepted_: Optional[int] = None
+    closure_routers_: Optional[jax.Array] = None
+    closure_candidates_: Optional[jax.Array] = None
 
     def _config(self) -> KMeansConfig:
         return KMeansConfig(
@@ -261,17 +381,43 @@ class AAKMeans:
         self.energy_ = energy
         self.n_iter_ = int(best.n_iter)
         self.n_accepted_ = int(best.n_accepted)
+        # fresh centroids invalidate any previous closure index; rebuild
+        # when requested, never serve a stale one
+        self.closure_routers_ = self.closure_candidates_ = None
+        if self.serving_index:
+            self.build_serving_index(
+                n_candidates=self.serving_index
+                if isinstance(self.serving_index, int)
+                and not isinstance(self.serving_index, bool) else None)
         return self
 
     # -- inference --------------------------------------------------------
 
     def _assert_fitted(self):
-        assert self.centroids_ is not None, "call fit() first"
+        if self.centroids_ is None:
+            raise NotFittedError(
+                "this AAKMeans instance has no fitted centroids; call "
+                "fit() (or load() a fitted artifact) first")
 
     def _mesh_apply(self, x, kind, fn):
         return _mesh_rows_apply(self, x, kind, fn)
 
-    def predict(self, x, chunk_size: Optional[int] = None):
+    def build_serving_index(self, n_candidates: Optional[int] = None,
+                            n_groups: Optional[int] = None,
+                            seed: int = 0) -> "AAKMeans":
+        """Attach a cluster-closure candidate index to the fitted
+        centroids (`repro.serving.closure`); ``save`` persists it and
+        ``load`` restores it, so the serving process never rebuilds."""
+        return _build_serving_index(self, n_candidates=n_candidates,
+                                    n_groups=n_groups, seed=seed)
+
+    @property
+    def closure_index_(self):
+        """The fitted `ClosureIndex`, or None when none was built."""
+        return _closure_index(self)
+
+    def predict(self, x, chunk_size: Optional[int] = None,
+                approx: bool = False):
         """Nearest-centroid labels.  A mesh-fitted model assigns under the
         same mesh/backend composition as ``fit`` — rows sharded over the
         data axes, centroids replicated — instead of silently falling back
@@ -279,27 +425,20 @@ class AAKMeans:
         of a distributed fit and breaks once N exceeds one device).  The
         local path runs jitted and chunked into a host array
         (`_chunked_rows_apply`): a serving loop previously paid eager
-        dispatch per call, and a host-sized X materialised (N, K) at once."""
-        self._assert_fitted()
-        bk = resolve_backend(self.backend)
-        label_fn = lambda xl, c: bk.assign(xl, c).labels  # noqa: E731
-        if self.mesh is not None:
-            return self._mesh_apply(jnp.asarray(x), "predict", label_fn)
-        return _chunked_rows_apply(self, x, "predict", label_fn, np.int32,
-                                   chunk_size=chunk_size)
+        dispatch per call, and a host-sized X materialised (N, K) at once.
+        ``approx=True`` scores only the closure index's candidate
+        centroids per row (sublinear in K); without a fitted index it
+        falls back to the exact full scan."""
+        return _predict_rows(self, x, chunk_size=chunk_size, approx=approx)
 
-    def transform(self, x, chunk_size: Optional[int] = None):
+    def transform(self, x, chunk_size: Optional[int] = None,
+                  approx: bool = False):
         """Distances to each centroid (N, K); mesh-fitted models compute
         the row block on each shard's local rows (K is replicated), the
-        local path is jitted + chunked like ``predict``."""
-        from repro.core.lloyd import pairwise_sqdist
-        self._assert_fitted()
-        dist_fn = lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c))  # noqa: E731
-        if self.mesh is not None:
-            return self._mesh_apply(jnp.asarray(x), "transform", dist_fn)
-        return _chunked_rows_apply(self, x, "transform", dist_fn,
-                                   np.float32, out_cols=self.n_clusters,
-                                   chunk_size=chunk_size)
+        local path is jitted + chunked like ``predict``.  ``approx=True``
+        prices only the candidate centroids (+inf elsewhere)."""
+        return _transform_rows(self, x, chunk_size=chunk_size,
+                               approx=approx)
 
     @property
     def inertia_(self) -> float:
@@ -318,6 +457,10 @@ class AAKMeans:
         arrays = {"centroids_": jnp.asarray(self.centroids_)}
         if self.labels_ is not None:
             arrays["labels_"] = jnp.asarray(self.labels_)
+        if self.closure_routers_ is not None:
+            arrays["closure_routers_"] = jnp.asarray(self.closure_routers_)
+            arrays["closure_candidates_"] = \
+                jnp.asarray(self.closure_candidates_)
         scalars = {"energy_": self.energy_, "n_iter_": self.n_iter_,
                    "n_accepted_": self.n_accepted_}
         return _save_estimator(self, path, serialize.KIND_ESTIMATOR_AA,
@@ -393,6 +536,8 @@ class MiniBatchAAKMeans:
     energy_: Optional[float] = None
     n_steps_: Optional[int] = None
     n_accepted_: Optional[int] = None
+    closure_routers_: Optional[jax.Array] = None
+    closure_candidates_: Optional[jax.Array] = None
 
     # streaming state (partial_fit)
     _state: object = dataclasses.field(default=None, repr=False)
@@ -457,6 +602,8 @@ class MiniBatchAAKMeans:
         self.energy_ = float(res.energy)
         self.n_steps_ = int(res.n_steps)
         self.n_accepted_ = int(res.n_accepted)
+        # new centroids: any previously built closure index is stale
+        self.closure_routers_ = self.closure_candidates_ = None
         self.labels_ = self.predict(x) if self.compute_labels else None
         return self
 
@@ -504,6 +651,8 @@ class MiniBatchAAKMeans:
         self.energy_ = trace.e_val
         self.n_steps_ = self._state.t
         self.n_accepted_ = self._state.n_acc
+        # centroids moved: a previously built closure index is stale
+        self.closure_routers_ = self.closure_candidates_ = None
         if self.metrics is not None:
             # attaching a sink opts into the per-chunk host sync
             from repro.runtime.metrics import as_metrics
@@ -547,13 +696,17 @@ class MiniBatchAAKMeans:
         c_fin, e_fin, _, _ = guard_pick(self._x_val, self._state, cfg, bk)
         self.centroids_ = c_fin
         self.energy_ = float(e_fin)
+        self.closure_routers_ = self.closure_candidates_ = None
         return self
 
     # -- inference ---------------------------------------------------------
 
     def _assert_fitted(self):
-        assert self.centroids_ is not None, \
-            "call fit() or partial_fit() first"
+        if self.centroids_ is None:
+            raise NotFittedError(
+                "this MiniBatchAAKMeans instance has no fitted centroids; "
+                "call fit() or partial_fit() (or load() a fitted "
+                "artifact) first")
 
     def _chunked_apply(self, x, kind, fn, out_dtype, out_cols=None,
                        chunk_size=None):
@@ -561,6 +714,21 @@ class MiniBatchAAKMeans:
         AAKMeans via the module-level `_chunked_rows_apply`."""
         return _chunked_rows_apply(self, x, kind, fn, out_dtype,
                                    out_cols=out_cols, chunk_size=chunk_size)
+
+    def build_serving_index(self, n_candidates: Optional[int] = None,
+                            n_groups: Optional[int] = None,
+                            seed: int = 0) -> "MiniBatchAAKMeans":
+        """Attach a cluster-closure candidate index (`repro.serving`) to
+        the current centroids.  For a ``partial_fit`` stream, call after
+        ``finalize()`` — the index describes the centroids it was built
+        from, and further chunks invalidate it."""
+        return _build_serving_index(self, n_candidates=n_candidates,
+                                    n_groups=n_groups, seed=seed)
+
+    @property
+    def closure_index_(self):
+        """The fitted `ClosureIndex`, or None when none was built."""
+        return _closure_index(self)
 
     # -- persistence ------------------------------------------------------
 
@@ -576,6 +744,10 @@ class MiniBatchAAKMeans:
         arrays = {"centroids_": jnp.asarray(self.centroids_)}
         if self.labels_ is not None:
             arrays["labels_"] = jnp.asarray(self.labels_)
+        if self.closure_routers_ is not None:
+            arrays["closure_routers_"] = jnp.asarray(self.closure_routers_)
+            arrays["closure_candidates_"] = \
+                jnp.asarray(self.closure_candidates_)
         stream = {}
         if self._state is not None:
             stream = {"state": self._state,
@@ -608,31 +780,21 @@ class MiniBatchAAKMeans:
             model._x_val = jnp.asarray(by_path["stream/x_val"])
         return model
 
-    def predict(self, x, chunk_size: Optional[int] = None):
+    def predict(self, x, chunk_size: Optional[int] = None,
+                approx: bool = False):
         """Nearest-centroid labels, computed chunk by chunk into a host
         array (bounded device footprint); mesh-fitted models assign under
-        the fitted mesh instead."""
-        self._assert_fitted()
-        bk = resolve_backend(self.backend)
-        label_fn = lambda xl, c: bk.assign(xl, c).labels  # noqa: E731
-        if self.mesh is not None:
-            return _mesh_rows_apply(self, jnp.asarray(x), "predict",
-                                    label_fn)
-        return self._chunked_apply(x, "predict", label_fn, np.int32,
-                                   chunk_size=chunk_size)
+        the fitted mesh instead.  ``approx=True`` uses the closure index
+        when one is built, the exact full scan otherwise."""
+        return _predict_rows(self, x, chunk_size=chunk_size, approx=approx)
 
-    def transform(self, x, chunk_size: Optional[int] = None):
+    def transform(self, x, chunk_size: Optional[int] = None,
+                  approx: bool = False):
         """Distances to each centroid (N, K), chunked like predict into
-        a host array."""
-        from repro.core.lloyd import pairwise_sqdist
-        self._assert_fitted()
-        dist_fn = lambda xl, c: jnp.sqrt(pairwise_sqdist(xl, c))  # noqa: E731
-        if self.mesh is not None:
-            return _mesh_rows_apply(self, jnp.asarray(x), "transform",
-                                    dist_fn)
-        return self._chunked_apply(x, "transform", dist_fn, np.float32,
-                                   out_cols=self.n_clusters,
-                                   chunk_size=chunk_size)
+        a host array; ``approx=True`` prices only the candidate
+        centroids (+inf elsewhere)."""
+        return _transform_rows(self, x, chunk_size=chunk_size,
+                               approx=approx)
 
     @property
     def inertia_(self) -> float:

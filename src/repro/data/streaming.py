@@ -170,10 +170,15 @@ def stream_chunks(source, chunk_size: Optional[int] = None, *,
     from repro.runtime.prefetch import prefetch_to_device
 
     if isinstance(source, DeviceChunks):
-        if chunk_size is not None or epochs != 1 or start_chunk:
+        # enforce the WHOLE documented contract: seed/drop_remainder used
+        # to slip through this check and be silently ignored, which reads
+        # as "my shuffle seed works" when it does nothing
+        if chunk_size is not None or epochs != 1 or start_chunk \
+                or seed != 0 or drop_remainder:
             raise ValueError(
                 "stream_chunks(DeviceChunks) yields storage order; "
-                "chunk_size/epochs/start_chunk do not apply")
+                "chunk_size/epochs/seed/start_chunk/drop_remainder "
+                "do not apply")
 
         def _device_iter():
             for i in range(source.chunks.shape[0]):

@@ -1,0 +1,15 @@
+"""Online serving tier (DESIGN.md §Serving): cluster-closure candidate
+index for sublinear-in-K assignment, and the micro-batching request
+server with hot reload."""
+
+from repro.serving.closure import (ClosureIndex, build_closure_index,
+                                   candidate_table, closure_assign,
+                                   closure_sqdist, default_n_candidates,
+                                   default_n_groups)
+from repro.serving.server import KMeansServer, ServingModel, serve_manifest
+
+__all__ = [
+    "ClosureIndex", "build_closure_index", "candidate_table",
+    "closure_assign", "closure_sqdist", "default_n_candidates",
+    "default_n_groups", "KMeansServer", "ServingModel", "serve_manifest",
+]

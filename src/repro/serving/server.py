@@ -1,0 +1,407 @@
+"""Async online-serving tier: micro-batched assignment + hot reload
+(DESIGN.md §Serving).
+
+The "millions of users" workload (ROADMAP) is a request queue, and a
+request queue produces exactly the shape pattern jit punishes: every
+distinct row count is a fresh trace.  This server makes the compiled
+surface ONE shape:
+
+  * **bounded queue micro-batching** — callers `submit` (n_i, d) row
+    blocks and get a Future; a single worker thread coalesces waiting
+    requests (up to ``batch_size`` rows or ``flush_ms``, whichever first)
+    and runs them as fixed-size ``(batch_size, d)`` padded batches through
+    a module-level jitted runner.  Padding rows replicate the last real
+    row and their outputs are sliced off, so results are exactly the
+    per-request labels.  The queue bound is back-pressure: a producer
+    outrunning the device blocks in ``submit`` instead of buffering
+    unboundedly (same policy as the PR-7 checkpoint writer).
+  * **closure-index fast path** — when the model carries a cluster
+    closure index (`repro.serving.closure`), batches are labelled by the
+    sublinear candidate scan; without one the server falls back to the
+    exact full-K scan.  Both runners take centroids/index as *arguments*,
+    so a reload that only moves values never recompiles.
+  * **hot reload** — a watcher thread polls the artifact source (an
+    estimator ``.npz``, or a directory whose ``manifest.json`` — the PR-7
+    writer's — names the latest artifact) every ``poll_s``; on a changed
+    fingerprint it loads and *warms* the replacement off the serving
+    path, then swaps the model reference atomically.  The worker reads
+    that reference once per micro-batch, so every batch is served
+    entirely by one model version and no request is ever dropped or
+    mixed across versions.
+  * **metrics** — per-batch ``serve_latency_s`` / ``queue_depth`` /
+    ``batch_rows`` / ``padded_rows`` (and ``reload_s`` per swap) through
+    the PR-7 `log_scalars` protocol; any sink object works.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import NotFittedError
+from repro.runtime.metrics import as_metrics
+from repro.serving.closure import (ClosureIndex, build_closure_index,
+                                   candidate_table, closure_assign)
+
+_STOP = object()
+
+
+# -- jitted runners ----------------------------------------------------------
+# Module level (not per-model): the jit cache survives hot reloads, so a
+# swap that keeps (batch_size, d, K) recompiles nothing.
+
+@jax.jit
+def _labels_exact(xb, centroids):
+    from repro.core.lloyd import pairwise_sqdist
+    return jnp.argmin(pairwise_sqdist(xb, centroids), axis=1
+                      ).astype(jnp.int32)
+
+
+@jax.jit
+def _labels_closure(xb, centroids, routers, candidates, table):
+    return closure_assign(xb, centroids, routers, candidates, table)[0]
+
+
+class ServingModel:
+    """Immutable servable snapshot: centroids + optional closure index.
+
+    ``version`` is whatever fingerprint the loader attached (file name +
+    mtime for artifact sources); it is how tests and operators observe
+    which model a server is answering with."""
+
+    def __init__(self, centroids, index: Optional[ClosureIndex] = None,
+                 *, version=None, approx: bool = True):
+        self.centroids = jnp.asarray(centroids)
+        self.index = index
+        self.version = version
+        self.approx = bool(approx) and index is not None
+        # the (G, C, d) candidate table is the hot-path scan operand;
+        # built ONCE per model version so batches never pay the gather
+        self.table = candidate_table(self.centroids, index.candidates) \
+            if self.approx else None
+
+    @classmethod
+    def from_estimator(cls, model, *, version=None, approx: bool = True,
+                       n_candidates: Optional[int] = None
+                       ) -> "ServingModel":
+        """Snapshot a fitted estimator.  ``n_candidates`` builds an index
+        on the spot when the artifact carries none (legacy models) —
+        left None, an index-less model simply serves the exact path."""
+        if getattr(model, "centroids_", None) is None:
+            raise NotFittedError(
+                "cannot serve an unfitted estimator; call fit() or load "
+                "a fitted artifact first")
+        index = getattr(model, "closure_index_", None)
+        if index is None and n_candidates is not None:
+            index = build_closure_index(model.centroids_,
+                                        n_candidates=n_candidates)
+        return cls(model.centroids_, index, version=version, approx=approx)
+
+    def labels(self, xb) -> np.ndarray:
+        """Labels for one device-shaped batch (host numpy out)."""
+        xb = jnp.asarray(xb)
+        if self.approx:
+            out = _labels_closure(xb, self.centroids, self.index.routers,
+                                  self.index.candidates, self.table)
+        else:
+            out = _labels_exact(xb, self.centroids)
+        return np.asarray(out)
+
+    def warmup(self, batch_size: int, d: Optional[int] = None) -> None:
+        """Compile (or hit the cache for) the fixed serving shape off the
+        serving path — reload swaps never pay a trace mid-traffic."""
+        d = self.centroids.shape[1] if d is None else d
+        self.labels(jnp.zeros((batch_size, d), self.centroids.dtype))
+
+
+# -- artifact source resolution ---------------------------------------------
+
+def _resolve_artifact(source: Path) -> Optional[Path]:
+    """The artifact a source path currently designates: the file itself,
+    or — for a directory — the file its ``manifest.json`` names as
+    ``latest`` (falling back to the newest ``*.npz`` by mtime when there
+    is no usable manifest)."""
+    if source.is_dir():
+        from repro.runtime.writer import read_manifest
+        m = read_manifest(source)
+        if m is not None and m.get("latest"):
+            p = source / m["latest"]
+            if p.exists():
+                return p
+        snaps = [p for p in source.glob("*.npz")]
+        return max(snaps, key=lambda p: p.stat().st_mtime_ns, default=None)
+    return source if source.exists() else None
+
+
+def _fingerprint(path: Optional[Path]):
+    if path is None:
+        return None
+    st = path.stat()
+    return (str(path), st.st_mtime_ns, st.st_size)
+
+
+@dataclasses.dataclass
+class _Request:
+    rows: np.ndarray
+    future: Future
+
+
+class KMeansServer:
+    """Micro-batching assignment server over one servable model.
+
+    ``source`` is a fitted estimator instance (static serving), or a path
+    — an estimator artifact ``.npz`` or a directory with a writer
+    ``manifest.json`` — which is watched for hot reload when ``poll_s``
+    is set.  Use as a context manager::
+
+        with KMeansServer("model.npz", batch_size=256, poll_s=2.0) as srv:
+            labels = srv.predict(rows)          # sync convenience
+            fut = srv.submit(more_rows)         # async
+    """
+
+    def __init__(self, source, *, batch_size: int = 256,
+                 approx: bool = True, n_candidates: Optional[int] = None,
+                 flush_ms: float = 2.0, max_queue: int = 1024,
+                 poll_s: Optional[float] = None, metrics=None):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1; got {batch_size}")
+        self.batch_size = int(batch_size)
+        self.approx = bool(approx)
+        self.n_candidates = n_candidates
+        self.flush_s = max(float(flush_ms), 0.0) / 1e3
+        self.metrics = as_metrics(metrics)
+        self.poll_s = poll_s
+        self.n_batches = 0
+        self.n_requests = 0
+        self.reload_count = 0
+        self.last_reload_error: Optional[BaseException] = None
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, int(max_queue)))
+        self._stop = threading.Event()
+        self._worker_thread: Optional[threading.Thread] = None
+        self._watcher_thread: Optional[threading.Thread] = None
+
+        if isinstance(source, (str, Path)):
+            self._source: Optional[Path] = Path(source)
+            path = _resolve_artifact(self._source)
+            if path is None:
+                raise FileNotFoundError(
+                    f"{self._source}: no servable artifact found")
+            self._fp = _fingerprint(path)
+            self._model = self._load(path)
+        else:
+            self._source = None
+            self._fp = None
+            self._model = ServingModel.from_estimator(
+                source, version="estimator", approx=self.approx,
+                n_candidates=self.n_candidates)
+        self._model.warmup(self.batch_size)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "KMeansServer":
+        if self._worker_thread is not None:
+            return self
+        self._stop.clear()
+        self._worker_thread = threading.Thread(
+            target=self._worker, daemon=True, name="repro-serve-worker")
+        self._worker_thread.start()
+        if self._source is not None and self.poll_s:
+            self._watcher_thread = threading.Thread(
+                target=self._watcher, daemon=True,
+                name="repro-serve-watcher")
+            self._watcher_thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain: every accepted request is answered before the worker
+        exits.  Idempotent."""
+        if self._worker_thread is None:
+            return
+        self._stop.set()
+        self._q.put(_STOP)
+        self._worker_thread.join()
+        self._worker_thread = None
+        if self._watcher_thread is not None:
+            self._watcher_thread.join()
+            self._watcher_thread = None
+
+    def __enter__(self) -> "KMeansServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    # -- request API -------------------------------------------------------
+
+    @property
+    def version(self):
+        return self._model.version
+
+    def submit(self, rows) -> Future:
+        """Queue (n, d) rows; the Future resolves to their (n,) int32
+        labels.  Blocks (back-pressure) when ``max_queue`` requests are
+        already waiting."""
+        if self._worker_thread is None:
+            raise RuntimeError("server is not running; call start() or "
+                               "use it as a context manager")
+        rows = np.asarray(rows)
+        if rows.ndim != 2:
+            raise ValueError(f"submit expects (n, d) rows; got shape "
+                             f"{rows.shape}")
+        if rows.shape[0] == 0:
+            f: Future = Future()
+            f.set_result(np.empty((0,), np.int32))
+            return f
+        req = _Request(rows, Future())
+        self._q.put(req)
+        return req.future
+
+    def predict(self, rows, timeout: Optional[float] = None) -> np.ndarray:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(rows).result(timeout=timeout)
+
+    # -- worker ------------------------------------------------------------
+
+    def _collect(self, first) -> list:
+        """One micro-batch: the triggering request plus whatever arrives
+        before ``batch_size`` rows are gathered or ``flush_s`` elapses."""
+        batch, rows = [first], first.rows.shape[0]
+        deadline = time.perf_counter() + self.flush_s
+        while rows < self.batch_size:
+            wait = deadline - time.perf_counter()
+            if wait <= 0:
+                break
+            try:
+                nxt = self._q.get(timeout=wait)
+            except queue.Empty:
+                break
+            if nxt is _STOP:
+                self._stop.set()     # drain what we have, then exit
+                break
+            batch.append(nxt)
+            rows += nxt.rows.shape[0]
+        return batch
+
+    def _worker(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set() and self._q.empty():
+                    return
+                continue
+            if item is _STOP:
+                if self._q.empty():
+                    return
+                continue    # stop already set; keep draining
+            self._serve_batch(self._collect(item))
+
+    def _serve_batch(self, batch: list) -> None:
+        # one reference read per micro-batch: a concurrent hot reload
+        # swaps the model BETWEEN batches, never inside one
+        model = self._model
+        depth = self._q.qsize()
+        t0 = time.perf_counter()
+        try:
+            rows = np.concatenate([r.rows for r in batch]) \
+                if len(batch) > 1 else batch[0].rows
+            n, b = rows.shape[0], self.batch_size
+            labels = np.empty((n,), np.int32)
+            padded = (-n) % b
+            for i in range(0, n, b):
+                xb = rows[i:i + b]
+                m = xb.shape[0]
+                if m < b:   # fixed compiled shape: pad, slice the output
+                    xb = np.concatenate(
+                        [xb, np.repeat(xb[-1:], b - m, axis=0)])
+                labels[i:i + m] = model.labels(xb)[:m]
+            off = 0
+            for r in batch:
+                m = r.rows.shape[0]
+                r.future.set_result(labels[off:off + m].copy())
+                off += m
+        except BaseException as e:   # noqa: BLE001 — delivered per request
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(e)
+        finally:
+            self.n_batches += 1
+            self.n_requests += len(batch)
+            try:
+                self.metrics.log_scalars(self.n_batches, {
+                    "serve_latency_s": time.perf_counter() - t0,
+                    "queue_depth": float(depth),
+                    "batch_rows": float(sum(r.rows.shape[0]
+                                            for r in batch)),
+                    "batch_requests": float(len(batch)),
+                    "padded_rows": float(padded),
+                })
+            except Exception:
+                pass    # a broken sink must not fail requests
+
+    # -- hot reload --------------------------------------------------------
+
+    def _load(self, path: Path) -> ServingModel:
+        # lazy: repro.checkpoint.kmeans imports repro.core.api — keep the
+        # serving package importable without closing that cycle at import
+        from repro.checkpoint.kmeans import load_estimator
+        est = load_estimator(path)
+        return ServingModel.from_estimator(
+            est, version=_fingerprint(path), approx=self.approx,
+            n_candidates=self.n_candidates)
+
+    def check_reload(self) -> bool:
+        """Poll the source once; swap in a changed artifact.  Returns
+        True when a swap happened.  The watcher thread calls this on its
+        ``poll_s`` cadence; tests and single-threaded callers may call it
+        directly."""
+        if self._source is None:
+            return False
+        path = _resolve_artifact(self._source)
+        fp = _fingerprint(path)
+        if fp is None or fp == self._fp:
+            return False
+        t0 = time.perf_counter()
+        model = self._load(path)
+        model.warmup(self.batch_size)   # compile off the serving path
+        self._model = model             # atomic ref swap: between batches
+        self._fp = fp
+        self.reload_count += 1
+        self.last_reload_error = None
+        try:
+            self.metrics.log_scalars(self.n_batches, {
+                "reload_s": time.perf_counter() - t0,
+                "reload_count": float(self.reload_count)})
+        except Exception:
+            pass
+        return True
+
+    def _watcher(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            try:
+                self.check_reload()
+            except Exception as e:   # keep serving the old model
+                self.last_reload_error = e
+
+
+def serve_manifest(server: KMeansServer) -> str:
+    """One-line JSON status blob for operators/health checks."""
+    return json.dumps({
+        "version": list(server.version)
+        if isinstance(server.version, tuple) else server.version,
+        "batch_size": server.batch_size,
+        "approx": server._model.approx,
+        "n_batches": server.n_batches,
+        "n_requests": server.n_requests,
+        "reload_count": server.reload_count,
+    }, sort_keys=True)

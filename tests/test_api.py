@@ -1,5 +1,7 @@
 """Estimator-API tests + emergency-checkpoint behaviour."""
 
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -75,3 +77,72 @@ def test_estimator_predict_uses_fitted_mesh():
                                np.asarray(ml.transform(q)), rtol=1e-5)
     assert mm.predict(q).shape == (333,)
     assert mm.transform(q).shape == (333, 4)
+
+
+def test_chunked_runner_traces_once_across_remainders():
+    """Regression (ISSUE 8): `_chunked_rows_apply` used to retrace the
+    jitted runner for every distinct final-chunk remainder shape — the
+    exact varying-batch-size pattern a request queue produces.  The tail
+    chunk is now padded to the fixed chunk size, so a serving loop over
+    varying N compiles exactly once."""
+    import jax.numpy as jnp
+    from repro.core.api import _chunked_rows_apply
+    from repro.core.lloyd import pairwise_sqdist
+
+    x = make_blobs(700, 5, 4, seed=8, spread=4.0)
+    m = AAKMeans(n_clusters=4, seed=0).fit(x)
+    traced_shapes = []
+
+    def spy(xl, c):
+        traced_shapes.append(tuple(xl.shape))   # runs at TRACE time only
+        return jnp.argmin(pairwise_sqdist(xl, c), axis=1).astype(jnp.int32)
+
+    xh = np.asarray(x)
+    for n in (257, 128, 300, 123, 512, 1):      # six distinct remainders
+        out = _chunked_rows_apply(m, xh[:n], "spy", spy, np.int32,
+                                  chunk_size=128)
+        assert out.shape == (n,)
+        # padding must not perturb the real rows' results
+        np.testing.assert_array_equal(out, np.asarray(m.predict(xh[:n])))
+    assert traced_shapes == [(128, 5)], \
+        f"expected ONE trace at the padded chunk shape; got {traced_shapes}"
+
+
+def test_unfitted_inference_raises_not_fitted_error():
+    from repro.core.api import MiniBatchAAKMeans, NotFittedError
+    q = np.zeros((4, 3), np.float32)
+    for m in (AAKMeans(n_clusters=3), MiniBatchAAKMeans(n_clusters=3)):
+        for call in (m.predict, m.transform):
+            with pytest.raises(NotFittedError):
+                call(q)
+        with pytest.raises(NotFittedError):
+            m.save("unfitted.npz")      # checked before any file I/O
+        with pytest.raises(NotFittedError):
+            m.build_serving_index()
+
+
+def test_assert_fitted_survives_python_O(tmp_path):
+    """Regression (ISSUE 8): the fitted check was a bare ``assert``,
+    which `python -O` strips — turning "call fit() first" into an opaque
+    None-attribute crash inside the first jitted call.  Run the check in
+    an optimized subprocess and require the REAL exception."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "import numpy as np\n"
+        "from repro.core.api import AAKMeans, NotFittedError\n"
+        "try:\n"
+        "    AAKMeans(n_clusters=3).predict(np.zeros((4, 2), np.float32))\n"
+        "except NotFittedError:\n"
+        "    print('NOT_FITTED_RAISED')\n"
+    )
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-O", "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "NOT_FITTED_RAISED" in out.stdout, \
+        f"stdout={out.stdout!r} stderr={out.stderr[-500:]!r}"

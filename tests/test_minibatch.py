@@ -313,7 +313,9 @@ def test_estimator_input_validation():
     with pytest.raises(ValueError, match="rows"):
         MiniBatchAAKMeans(n_clusters=8).fit(np.zeros((4, 2), np.float32))
     m = MiniBatchAAKMeans(n_clusters=2)
-    with pytest.raises(AssertionError, match="fit"):
+    # a REAL exception, not a bare assert: survives `python -O` (ISSUE 8)
+    from repro.core.api import NotFittedError
+    with pytest.raises(NotFittedError, match="fit"):
         m.predict(np.zeros((4, 2), np.float32))
     with pytest.raises(ValueError, match="streaming state"):
         m.finalize()

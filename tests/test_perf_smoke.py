@@ -102,3 +102,37 @@ def test_checkpoint_bench_emits_json(tmp_path):
     # device_get + queue handoff must beat device_get + inline npz write
     assert rec["sync_boundary_us"] > 0 and rec["async_boundary_us"] > 0
     assert rec["async_to_sync_overhead_ratio"] < 1.0
+
+
+def test_serving_bench_emits_json(tmp_path):
+    """`benchmarks/serving_bench.py --smoke`: the recall-vs-latency sweep
+    runs end to end and BENCH_serving.json is well formed (ISSUE 8
+    acceptance names the schema; the full run adds the K=4096 case)."""
+    sys.path.insert(0, str(BENCH_DIR.parent))
+    try:
+        from benchmarks import serving_bench
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_serving.json"
+    records = serving_bench.main(["--smoke", "--json", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "serving_bench/v1"
+    assert payload["smoke"] is True and payload["records"] == records
+    assert records
+    for r in records:
+        assert {"k", "n_groups", "n_candidates", "recall",
+                "exact_us_per_query", "approx_us_per_query",
+                "speedup", "scan_frac"} <= set(r)
+        assert 0.0 <= r["recall"] <= 1.0
+        assert r["approx_us_per_query"] > 0
+    # recall is monotone in the candidate sweep (prefix closures), and
+    # full candidate coverage (C = K in the smoke case) is exact
+    by_k = {}
+    for r in records:
+        by_k.setdefault(r["k"], []).append(r)
+    for k, recs in by_k.items():
+        recs.sort(key=lambda r: r["n_candidates"])
+        recalls = [r["recall"] for r in recs]
+        assert recalls == sorted(recalls)
+        if recs[-1]["n_candidates"] == k:
+            assert recalls[-1] == 1.0

@@ -90,6 +90,19 @@ def test_stream_chunks_requires_chunk_size_for_arrays(rng):
         stream_chunks(rng.standard_normal((10, 2)))
 
 
+def test_stream_chunks_device_chunks_rejects_all_stream_params(rng):
+    """Regression (ISSUE 8): ``seed=``/``drop_remainder=`` used to slip
+    past the DeviceChunks guard and be silently ignored — a caller's
+    "my shuffle seed works" was a no-op.  The documented contract (all
+    stream params at defaults) is now enforced for every parameter."""
+    dc = chunk_dataset(rng.standard_normal((96, 3)).astype(np.float32), 32)
+    for bad in ({"seed": 7}, {"drop_remainder": True}, {"epochs": 2},
+                {"start_chunk": 1}, {"chunk_size": 32}):
+        with pytest.raises(ValueError, match="storage order"):
+            stream_chunks(dc, **bad)
+    assert len(list(stream_chunks(dc))) == dc.chunks.shape[0]
+
+
 # ---------------------------------------------------------------------------
 # metrics sinks
 # ---------------------------------------------------------------------------
@@ -204,6 +217,24 @@ def test_latest_snapshot_uses_manifest_with_scan_fallback(tmp_path):
     write_snapshot(tmp_path, _fake_state(3), kind="unit", step=3)
     (tmp_path / snapshot_name(3)).unlink()
     assert latest_snapshot(tmp_path).name == snapshot_name(2)
+
+
+def test_latest_snapshot_fallback_orders_by_step_not_name(tmp_path):
+    """Regression (ISSUE 8): the manifest-less fallback sorted snapshot
+    file NAMES, so lexicographic it_9.npz beat it_10.npz and a ``.tmp``
+    filter aimed at ``*.npz.tmp`` never matched its own glob.  The
+    fallback now parses the integer step and ignores orphans/garbage."""
+    from repro.checkpoint import latest_snapshot as latest
+    for step in (9, 10, 2):
+        (tmp_path / f"it_{step}.npz").write_bytes(b"snap")
+    (tmp_path / "it_11.npz.tmp").write_bytes(b"orphan")    # interrupted
+    (tmp_path / "it_xx.npz").write_bytes(b"garbage")       # unparseable
+    assert latest(tmp_path).name == "it_10.npz"
+    # directory with ONLY orphans/garbage: no snapshot, not a crash
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    (empty / "it_1.npz.tmp").write_bytes(b"orphan")
+    assert latest(empty) is None
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,265 @@
+"""Serving-tier tests (DESIGN.md §Serving): closure-index recall and
+persistence, padded micro-batch parity, hot reload without dropped
+requests, legacy-artifact fallback."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.api import AAKMeans, MiniBatchAAKMeans, NotFittedError
+from repro.data.synthetic import make_blobs
+from repro.serving import (KMeansServer, ServingModel, build_closure_index,
+                           closure_assign, closure_sqdist, serve_manifest)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x = make_blobs(4000, 8, 32, seed=0, spread=6.0)
+    model = AAKMeans(n_clusters=32, seed=1).fit(x)
+    return np.asarray(x), model
+
+
+# -- closure index ----------------------------------------------------------
+
+def test_closure_index_recall_bounds(fitted):
+    """Full candidate lists reproduce the exact labels exactly; truncated
+    lists stay above a generous recall bar on blob data; recall is
+    monotone in the candidate count by construction (prefix closures)."""
+    x, model = fitted
+    exact = model.predict(x)
+    model.build_serving_index(n_candidates=32)   # C = K: no approximation
+    assert np.array_equal(model.predict(x, approx=True), exact)
+    idx = model.closure_index_
+    recalls = []
+    for c in (4, 8, 16, 32):
+        small = idx.shrink(c)
+        labels, _ = closure_assign(jnp.asarray(x), model.centroids_,
+                                   small.routers, small.candidates)
+        recalls.append(float(np.mean(np.asarray(labels) == exact)))
+    assert recalls == sorted(recalls)        # prefix lists: monotone
+    assert recalls[1] >= 0.9                 # C=8 of K=32 on blobs
+    # candidate lists are valid centroid indices, nearest-first
+    cand = np.asarray(idx.candidates)
+    assert cand.min() >= 0 and cand.max() < 32
+
+
+def test_closure_assign_distances_exact_for_hits(fitted):
+    """Where the approximate label agrees, the min_sqdist is the exact
+    one — candidate restriction never perturbs the scanned distances."""
+    x, model = fitted
+    model.build_serving_index(n_candidates=16)
+    idx = model.closure_index_
+    labels, d2 = closure_assign(jnp.asarray(x[:256]), model.centroids_,
+                                idx.routers, idx.candidates)
+    full = np.asarray(model.transform(x[:256])) ** 2
+    hits = np.asarray(labels) == np.argmin(full, axis=1)
+    assert hits.mean() > 0.8
+    np.testing.assert_allclose(np.asarray(d2)[hits],
+                               full.min(axis=1)[hits], rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_closure_transform_inf_off_candidates(fitted):
+    x, model = fitted
+    model.build_serving_index(n_candidates=8)
+    t = model.transform(x[:64], approx=True)
+    assert t.shape == (64, 32)
+    finite = np.isfinite(t)
+    assert (finite.sum(axis=1) <= 8).all() and (finite.sum(axis=1) >= 1).all()
+    # argmin over the approximate transform == approximate predict
+    assert np.array_equal(np.argmin(t, axis=1),
+                          model.predict(x[:64], approx=True))
+
+
+def test_index_roundtrips_through_save_load(fitted, tmp_path):
+    x, model = fitted
+    model.build_serving_index(n_candidates=16)
+    p = model.save(tmp_path / "m.npz")
+    loaded = AAKMeans.load(p)
+    assert np.array_equal(np.asarray(loaded.closure_routers_),
+                          np.asarray(model.closure_routers_))
+    assert np.array_equal(np.asarray(loaded.closure_candidates_),
+                          np.asarray(model.closure_candidates_))
+    assert loaded.closure_candidates_.dtype == jnp.int32
+    assert np.array_equal(loaded.predict(x[:500], approx=True),
+                          model.predict(x[:500], approx=True))
+
+
+def test_fit_builds_and_refit_invalidates_index():
+    x = make_blobs(1200, 6, 8, seed=3, spread=5.0)
+    m = AAKMeans(n_clusters=8, seed=0, serving_index=4).fit(x)
+    assert m.closure_index_ is not None
+    assert m.closure_index_.n_candidates == 4
+    first = np.asarray(m.closure_routers_)
+    m.fit(np.asarray(x) + 10.0)              # refit: index rebuilt, not stale
+    assert m.closure_index_ is not None
+    assert not np.allclose(np.asarray(m.closure_routers_), first)
+
+
+def test_legacy_artifact_without_index_falls_back(fitted, tmp_path):
+    """approx=True on an index-less (legacy) artifact serves the exact
+    full scan — no crash, no silent wrong answers."""
+    x, model = fitted
+    fresh = AAKMeans(n_clusters=32, seed=1).fit(x)   # no index built
+    p = fresh.save(tmp_path / "legacy.npz")
+    loaded = AAKMeans.load(p)
+    assert loaded.closure_index_ is None
+    assert np.array_equal(loaded.predict(x[:300], approx=True),
+                          loaded.predict(x[:300]))
+
+
+def test_minibatch_estimator_serving_index(tmp_path):
+    x = make_blobs(3000, 6, 10, seed=5, spread=5.0)
+    m = MiniBatchAAKMeans(n_clusters=10, chunk_size=512, epochs=2,
+                          seed=0).fit(x)
+    m.build_serving_index(n_candidates=10)
+    exact = m.predict(x[:400])
+    assert np.array_equal(m.predict(x[:400], approx=True), exact)
+    loaded = MiniBatchAAKMeans.load(m.save(tmp_path / "mb.npz"))
+    assert loaded.closure_index_ is not None
+    assert np.array_equal(loaded.predict(x[:400], approx=True), exact)
+
+
+# -- serving model / server -------------------------------------------------
+
+def test_serving_model_requires_fitted():
+    with pytest.raises(NotFittedError):
+        ServingModel.from_estimator(AAKMeans(n_clusters=3))
+
+
+def test_server_padded_microbatch_parity(fitted):
+    """Every request size — including ones larger than the batch size and
+    ones that land mid-batch — returns exactly the estimator's labels."""
+    x, model = fitted
+    model.build_serving_index(n_candidates=16)
+    want = model.predict(x, approx=True)
+    with KMeansServer(model, batch_size=64, flush_ms=1.0) as srv:
+        sizes = [1, 7, 63, 64, 65, 200, 17]
+        futs, off = [], 0
+        for s in sizes:
+            futs.append((off, s, srv.submit(x[off:off + s])))
+            off += s
+        for start, s, f in futs:
+            got = f.result(timeout=30)
+            assert got.dtype == np.int32 and got.shape == (s,)
+            assert np.array_equal(got, want[start:start + s])
+        assert srv.n_requests == len(sizes)
+    # empty request resolves immediately (no queue round-trip)
+    srv2 = KMeansServer(model, batch_size=8).start()
+    try:
+        assert srv2.submit(x[:0]).result(timeout=5).shape == (0,)
+    finally:
+        srv2.stop()
+
+
+def test_server_exact_fallback_without_index(fitted):
+    x, _ = fitted
+    model = AAKMeans(n_clusters=32, seed=1).fit(x)   # no index
+    with KMeansServer(model, batch_size=32) as srv:
+        assert not srv._model.approx
+        assert np.array_equal(srv.predict(x[:100]), model.predict(x[:100]))
+
+
+def test_server_builds_index_for_legacy_source(fitted, tmp_path):
+    """n_candidates= lets the server attach a closure index to an
+    index-less artifact at load time."""
+    x, model = fitted
+    fresh = AAKMeans(n_clusters=32, seed=1).fit(x)
+    p = fresh.save(tmp_path / "legacy.npz")
+    with KMeansServer(p, batch_size=32, n_candidates=32) as srv:
+        assert srv._model.approx
+        assert np.array_equal(srv.predict(x[:100]), fresh.predict(x[:100]))
+
+
+def test_server_hot_reload_no_dropped_requests(tmp_path):
+    """Swap the artifact under continuous traffic: the watcher picks the
+    new version up between batches, every request in flight is answered,
+    and post-swap answers match the new model."""
+    x = make_blobs(2000, 6, 8, seed=7, spread=6.0)
+    m1 = AAKMeans(n_clusters=8, seed=0, serving_index=8).fit(x)
+    p = tmp_path / "model.npz"
+    m1.save(p)
+    errors, results = [], []
+    stop = threading.Event()
+    with KMeansServer(p, batch_size=32, poll_s=0.02,
+                      flush_ms=0.5) as srv:
+        v1 = srv.version
+
+        def traffic():
+            i = 0
+            while not stop.is_set():
+                try:
+                    results.append(srv.predict(np.asarray(
+                        x[i % 1500:i % 1500 + 11]), timeout=30))
+                except Exception as e:     # noqa: BLE001 — test records
+                    errors.append(e)
+                i += 17
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            time.sleep(0.1)
+            m2 = AAKMeans(n_clusters=8, seed=3, init="random",
+                          serving_index=8).fit(np.asarray(x) * -1.0 + 5.0)
+            m2.save(p)
+            deadline = time.time() + 10
+            while srv.reload_count == 0 and time.time() < deadline:
+                time.sleep(0.02)
+        finally:
+            stop.set()
+            t.join()
+        assert srv.reload_count >= 1 and srv.version != v1
+        assert not errors
+        assert all(r.shape == (11,) for r in results)
+        # post-swap, the server answers with the NEW model
+        got = srv.predict(np.asarray(x[:128]))
+        assert np.array_equal(got, m2.predict(x[:128], approx=True))
+        manifest = serve_manifest(srv)
+        assert '"reload_count": 1' in manifest
+
+
+def test_server_reload_from_manifest_dir(fitted, tmp_path):
+    """Directory sources resolve through the PR-7 writer manifest: the
+    server follows ``latest`` as new estimator artifacts land."""
+    import json
+    x, model = fitted
+    d = tmp_path / "run"
+    d.mkdir()
+    model.build_serving_index(n_candidates=16)
+    model.save(d / "v1.npz")
+    (d / "manifest.json").write_text(json.dumps(
+        {"schema": "ckpt_manifest/v1", "latest": "v1.npz",
+         "snapshots": [{"file": "v1.npz", "step": 1}]}))
+    with KMeansServer(d, batch_size=32, poll_s=0.02) as srv:
+        want = model.predict(x[:64], approx=True)
+        assert np.array_equal(srv.predict(x[:64]), want)
+        m2 = AAKMeans(n_clusters=32, seed=9, init="random",
+                      serving_index=16).fit(np.asarray(x) + 2.0)
+        m2.save(d / "v2.npz")
+        (d / "manifest.json").write_text(json.dumps(
+            {"schema": "ckpt_manifest/v1", "latest": "v2.npz",
+             "snapshots": [{"file": "v2.npz", "step": 2}]}))
+        deadline = time.time() + 10
+        while srv.reload_count == 0 and time.time() < deadline:
+            time.sleep(0.02)
+        assert srv.reload_count >= 1
+        assert np.array_equal(srv.predict(x[:64]),
+                              m2.predict(x[:64], approx=True))
+
+
+def test_server_metrics_per_batch(fitted):
+    from repro.runtime.metrics import CollectMetrics
+    x, model = fitted
+    sink = CollectMetrics()
+    with KMeansServer(model, batch_size=16, metrics=sink) as srv:
+        srv.predict(x[:40])     # 40 rows -> 16+16+8: one padded batch
+    steps = dict(sink.records)
+    assert steps, "no batch metrics emitted"
+    rec = next(iter(steps.values()))
+    assert {"serve_latency_s", "queue_depth", "batch_rows",
+            "padded_rows"} <= set(rec)
+    assert sum(r["batch_rows"] for _, r in sink.records) == 40
+    assert sum(r["padded_rows"] for _, r in sink.records) == 8
