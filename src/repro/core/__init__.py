@@ -6,6 +6,8 @@ Public surface:
     aa_kmeans             — jit-able Algorithm 1 (lax.while_loop)
     aa_kmeans_batched     — R restarts/problems in one device program
     aa_kmeans_minibatch   — streaming chunked driver (DESIGN.md §Streaming)
+    aa_kmeans_minibatch_streamed — host-source epoch driver with prefetch
+    ReorderConfig/reorder_backend — locality engine (DESIGN.md §Locality)
     select_best           — on-device best-of-R selection
     aa_kmeans_traced      — instrumented driver (per-iteration stats)
     lloyd_kmeans          — classical Lloyd baseline
@@ -28,7 +30,10 @@ from repro.core.distributed import (make_distributed_kmeans,   # noqa: F401
 from repro.core.hamerly import hamerly_kmeans                  # noqa: F401
 from repro.core.kmeans import (KMeansConfig, aa_kmeans,        # noqa: F401
                                aa_kmeans_batched, aa_kmeans_minibatch,
+                               aa_kmeans_minibatch_streamed,
                                aa_kmeans_traced, select_best)
+from repro.core.locality import (ReorderConfig,                # noqa: F401
+                                 reorder_backend)
 from repro.core.lloyd import lloyd_kmeans                      # noqa: F401
 from repro.core.minibatch import (MiniBatchConfig,             # noqa: F401
                                   MiniBatchResult)

@@ -33,6 +33,13 @@ run R restarts as the kernels' leading grid axis, minibatch steps fold
 row weights into the stats in-pass.  The bound family threads its carry
 — (labels, upper, lower, c_last, BoundStats) — through the solver loop;
 `distribute()` keeps the bounds shard-local and pmean's the stats.
+
+Every bound backend also registers a ``<name>_reorder`` variant wrapping
+it in the locality engine (churn-triggered cluster-sorted row reordering,
+DESIGN.md §Locality) — original-order outputs stay bit-identical, the
+kernel sees locality-ordered rows.  Reorder policy knobs (``warmup``,
+``churn_threshold``, ``sort_tile``) pass through `get_backend` opts; the
+rest go to the inner backend's factory.
 """
 
 from repro.core.backends.base import (Backend, Precision,        # noqa: F401
@@ -58,3 +65,25 @@ register_backend("hamerly", hamerly_backend)
 register_backend("elkan", elkan_backend)
 register_backend("yinyang", yinyang_backend)
 register_backend("fused_bounds", fused_bounds_backend)
+
+
+def _reorder_factory(inner_name):
+    def factory(*, warmup=None, churn_threshold=None, sort_tile=None,
+                **inner_opts):
+        from repro.core.locality import ReorderConfig, reorder_backend
+        cfg = ReorderConfig()
+        if warmup is not None:
+            cfg = _dc.replace(cfg, warmup=warmup)
+        if churn_threshold is not None:
+            cfg = _dc.replace(cfg, churn_threshold=churn_threshold)
+        if sort_tile is not None:
+            cfg = _dc.replace(cfg, sort_tile=sort_tile)
+        return reorder_backend(get_backend(inner_name, **inner_opts), cfg)
+    return factory
+
+
+import dataclasses as _dc  # noqa: E402
+
+for _name in ("hamerly", "elkan", "yinyang", "fused_bounds"):
+    register_backend(f"{_name}_reorder", _reorder_factory(_name))
+del _name

@@ -52,8 +52,10 @@ from repro.core import anderson, serialize
 from repro.core.anderson import AAConfig, AAState
 from repro.core.backends import Backend, from_lloyd_ops, get_backend
 from repro.core.lloyd import DENSE_OPS, LloydOps
+from repro.core.locality import maybe_reorder
 from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult,
-                                  guard_pick, minibatch_init, run_epoch)
+                                  guard_pick, minibatch_init,
+                                  minibatch_iteration, run_epoch)
 from repro.runtime.metrics import as_metrics
 from repro.runtime.writer import CheckpointWriter, write_snapshot
 
@@ -412,7 +414,8 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
               keep_last_n: int = 0,
               keep_every_m: int = 0,
               metrics=None,
-              sync_writes: bool = False) -> KMeansResult:
+              sync_writes: bool = False,
+              reorder=False) -> KMeansResult:
     """Jit-able Algorithm 1.  ``cfg`` is static; x (N,d); c0 (K,d).
 
     ``backend`` selects the engine ("dense" | "blocked" | "pallas" |
@@ -442,8 +445,15 @@ def aa_kmeans(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
     per run directory.  ``metrics`` is any ``log_scalars(step, dict)``
     sink (`repro.runtime.metrics`); each segment boundary emits energy,
     accept counts, bound-skip fractions and wall time, and the writer
-    emits per-snapshot write latency."""
-    bk = resolve_backend(backend, ops, cfg)
+    emits per-snapshot write latency.
+
+    Locality (DESIGN.md §Locality): ``reorder=True`` (or a
+    `repro.core.locality.ReorderConfig`) wraps a bound backend in the
+    churn-triggered row-reordering engine — the kernel sees cluster-sorted
+    rows once assignments stabilise, while emitted labels/energies stay
+    bit-identical to the unpermuted solve.  The permutation rides the
+    backend carry, so checkpoint/resume persists it automatically."""
+    bk = maybe_reorder(resolve_backend(backend, ops, cfg), reorder)
     if checkpoint_every or checkpoint_dir is not None \
             or resume_from is not None or checkpoint_cb is not None \
             or metrics is not None:
@@ -637,7 +647,8 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
                       keep_last_n: int = 0,
                       keep_every_m: int = 0,
                       metrics=None,
-                      sync_writes: bool = False) -> KMeansResult:
+                      sync_writes: bool = False,
+                      reorder=False) -> KMeansResult:
     """Batched Algorithm 1: R independent solves in one device program.
 
     ``c0s`` is (R, K, d) — one seed set per restart/problem.  ``x`` is
@@ -663,7 +674,9 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
     snapshots the whole per-restart state — see ``aa_kmeans`` for the
     checkpoint/resume contract and the runtime parameters
     (``keep_last_n``/``keep_every_m``/``metrics``/``sync_writes``), which
-    carry over verbatim.
+    carry over verbatim.  ``reorder=`` wraps a bound backend in the
+    locality engine with per-restart permutations (DESIGN.md §Locality;
+    each restart's rows sort by its own labels, gathered as (R, N, d)).
     """
     if c0s.ndim != 3:
         raise ValueError(f"c0s must be (R, K, d); got shape {c0s.shape}")
@@ -673,7 +686,7 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
         raise ValueError(
             f"batched x has {x.shape[0]} problems but c0s has "
             f"{c0s.shape[0]} seed sets")
-    bk = resolve_backend(backend, ops, cfg)
+    bk = maybe_reorder(resolve_backend(backend, ops, cfg), reorder)
     x_axis = 0 if x.ndim == 3 else None
 
     if checkpoint_every or checkpoint_dir is not None \
@@ -968,6 +981,79 @@ def aa_kmeans_minibatch(chunks: jax.Array, weights: jax.Array,
     return (result, trace) if return_trace else result
 
 
+def aa_kmeans_minibatch_streamed(source, x_val: jax.Array, c0: jax.Array,
+                                 cfg: MiniBatchConfig,
+                                 backend: BackendLike = None, *,
+                                 chunk_size: Optional[int] = None,
+                                 seed: int = 0,
+                                 prefetch: int = 2,
+                                 drop_remainder: bool = False,
+                                 sort_chunks: bool = False,
+                                 mesh=None, data_axes=("data",),
+                                 meter=None, metrics=None,
+                                 return_trace: bool = False):
+    """Streaming Algorithm 1 over a host-resident source, with transfer
+    overlap: the `stream_chunks` prefetcher threaded under the epoch
+    driver (DESIGN.md §Runtime — previously only `partial_fit_stream` and
+    the ``--big`` benchmark overlapped host→device copies).
+
+    ``source`` is a host array (chunked/shuffled per epoch by
+    `host_chunk_stream`; ``chunk_size`` defaults to ``cfg.chunk_size``) or
+    any iterator of host chunks (``chunk_size``/``seed`` ignored; the
+    caller owns ordering and ``cfg.epochs`` must be baked into the
+    iterator).  Each chunk runs one jitted `minibatch_iteration` — the
+    same per-chunk state machine as `aa_kmeans_minibatch` — while chunk
+    t+1's copy is in flight, so the device never waits on ingest.  For a
+    device-resident `DeviceChunks` use `aa_kmeans_minibatch`, whose
+    scan-over-gathers needs no transfers at all.
+
+    ``sort_chunks=True`` assembles each chunk cluster-sorted
+    (`stream_chunks(sort_by=...)` with the driver's current centroids —
+    stale by the prefetch depth, which affects locality only, never the
+    numbers) so the weighted backend pass sees locality-ordered rows.
+    ``meter`` (an `IngestMeter`) and ``metrics`` observe ingest bandwidth
+    and per-chunk guard decisions; note a ``metrics`` sink synchronises on
+    every chunk, serialising the very overlap this driver exists for —
+    leave it None on the hot path.  Uniform chunk lengths avoid re-jitting
+    (``drop_remainder=True`` guarantees them for an array source).
+
+    Returns a `MiniBatchResult` (with ``return_trace=True``, also a
+    `MiniBatchTrace` stacked over all chunk steps).
+    """
+    from repro.data.streaming import stream_chunks
+
+    bk = resolve_backend(backend)
+    state = minibatch_init(c0, cfg, bk)
+    holder = [state]
+    sort_by = (lambda: jax.device_get(holder[0].c)) if sort_chunks else None
+    step = jax.jit(minibatch_iteration, static_argnames=("cfg", "backend"))
+    mx = as_metrics(metrics)
+    traces = []
+    chunk_iter = stream_chunks(
+        source, None if hasattr(source, "__next__") else
+        (chunk_size or cfg.chunk_size),
+        epochs=cfg.epochs, seed=seed, drop_remainder=drop_remainder,
+        prefetch=prefetch, mesh=mesh, data_axes=tuple(data_axes),
+        meter=meter, sort_by=sort_by)
+    for xc in chunk_iter:
+        w = jnp.ones((xc.shape[0],), jnp.float32)
+        holder[0], tr = step(xc, w, x_val, holder[0], cfg, bk)
+        if return_trace:
+            traces.append(tr)
+        if metrics is not None:
+            mx.log_scalars(int(holder[0].t),
+                           {"e_val": float(tr.e_val),
+                            "accepted": float(tr.accepted)})
+    state = holder[0]
+    c_fin, e_fin, _, _ = guard_pick(x_val, state, cfg, bk)
+    result = MiniBatchResult(c_fin, e_fin, state.t, state.n_acc)
+    if not return_trace:
+        return result
+    trace = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *traces) \
+        if traces else None
+    return result, trace
+
+
 # ---------------------------------------------------------------------------
 # Instrumented Python driver (benchmark parity with the paper's tables)
 # ---------------------------------------------------------------------------
@@ -984,6 +1070,46 @@ class KMeansTrace(NamedTuple):
     # BoundStats; [] for stateless backends.  Shows how the elimination
     # ramps from 0 (first full scan) toward the converged-phase plateau.
     bound_stats: tuple = ()
+    # per-phase means of bound_stats, split at the FIRST ACCEPTED AA
+    # iteration: {"pre_accept": {...}, "post_accept": {...}}, each with
+    # n_iters + the mean fracs (None when the phase is empty).  The flat
+    # bound_stats average mixes the warm-up iterations — where skipping is
+    # structurally ~0 because bounds have not tightened — into the
+    # converged plateau, understating the engine by 2-3x on short runs;
+    # BENCH consumers must read post_accept (see split_bound_phases).
+    bound_phases: Optional[dict] = None
+
+
+def split_bound_phases(accepted, bound_stats):
+    """Split per-iteration bound stats at the first accepted iteration.
+
+    The early iterations run on slack bounds (first scan has upper = +inf;
+    drift updates need a few steps to tighten), so their elimination/skip
+    fractions sit near 0 regardless of the engine's quality — averaging
+    them into the converged tail dilutes every reported fraction.  The
+    first *accepted* AA iteration is the natural phase boundary: the energy
+    has started decreasing monotonically and the bounds are live.
+
+    Returns {} when there are no bound stats; otherwise a dict with
+    "pre_accept" / "post_accept" entries of {n_iters, <mean of each stat
+    key>} — empty phases report n_iters = 0 and None means.
+    """
+    bound_stats = list(bound_stats)
+    if not bound_stats:
+        return {}
+    accepted = list(accepted)[:len(bound_stats)]
+    first = next((i for i, a in enumerate(accepted) if a), len(bound_stats))
+    keys = sorted(bound_stats[0])
+
+    def phase(rows):
+        out = {"n_iters": len(rows)}
+        for key in keys:
+            out[key] = (sum(r[key] for r in rows) / len(rows)) if rows \
+                else None
+        return out
+
+    return {"pre_accept": phase(bound_stats[:first]),
+            "post_accept": phase(bound_stats[first:])}
 
 
 def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
@@ -991,7 +1117,8 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
                      jit_iteration: bool = True,
                      backend: BackendLike = None,
                      warmup: bool = False,
-                     metrics=None) -> KMeansTrace:
+                     metrics=None,
+                     reorder=False) -> KMeansTrace:
     """Python-loop driver recording the statistics of Tables 2 and 3.
 
     ``metrics=`` accepts any `repro.runtime.metrics` sink; each iteration
@@ -1005,8 +1132,13 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
     Table 3 wall-times report.  (Both jitted functions are keyed on static
     (cfg, backend) and the argument shapes, so the warm-up populates
     exactly the cache the timed loop hits.)
+
+    ``reorder=`` enables the locality engine exactly as in ``aa_kmeans``;
+    the trace's ``bound_phases`` then shows the converged-phase skip the
+    reordering unlocked (the flat average would dilute it — see
+    `split_bound_phases`).
     """
-    bk = resolve_backend(backend, ops, cfg)
+    bk = maybe_reorder(resolve_backend(backend, ops, cfg), reorder)
     iter_fn = _iteration
     if jit_iteration:
         iter_fn = jax.jit(_iteration, static_argnames=("cfg", "backend"))
@@ -1050,4 +1182,5 @@ def aa_kmeans_traced(x: jax.Array, c0: jax.Array, cfg: KMeansConfig,
                           jnp.array(n_iter), jnp.array(n_accepted),
                           jnp.array(converged))
     mse = float(state.e_last) / x.shape[0]
-    return KMeansTrace(result, energies, m_vals, acc, wall, mse, bstats)
+    return KMeansTrace(result, energies, m_vals, acc, wall, mse, bstats,
+                       split_bound_phases(acc, bstats))

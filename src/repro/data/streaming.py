@@ -137,12 +137,34 @@ def host_chunk_stream(x, chunk_size: int, epochs: int = 1, seed: int = 0,
             yield x[idx]
 
 
+def _sorted_chunk_iter(host_iter, sort_by):
+    """Stably sort each host chunk's rows by nearest centroid before the
+    host→device copy (DESIGN.md §Locality).
+
+    ``sort_by`` is a (K, d) host array of centroids, or a zero-arg callable
+    returning one — the streamed epoch driver passes a callable reading its
+    *current* iterate, so chunks assembled ``prefetch`` steps ahead sort by
+    slightly stale centroids.  That staleness is harmless: chunk ordering
+    only shapes locality (tile-skipping inside the weighted backend pass),
+    never the numbers — the minibatch stats are row-weighted sums.  The
+    sort runs on host, off the device hot path, so np.argsort is fine here
+    (the no-argsort rule guards the in-loop device sort in core/locality)."""
+    provider = sort_by if callable(sort_by) else (lambda: sort_by)
+    for chunk in host_iter:
+        rows = np.asarray(chunk)
+        c = np.asarray(provider())
+        d2 = (np.square(rows).sum(-1)[:, None]
+              - 2.0 * rows @ c.T + np.square(c).sum(-1)[None, :])
+        labels = np.argmin(d2, axis=1)
+        yield rows[np.argsort(labels, kind="stable")]
+
+
 def stream_chunks(source, chunk_size: Optional[int] = None, *,
                   epochs: int = 1, seed: int = 0, start_chunk: int = 0,
                   drop_remainder: bool = False, prefetch: int = 2,
                   mesh: Optional[jax.sharding.Mesh] = None,
                   data_axes: Sequence[str] = ("data",),
-                  meter=None):
+                  meter=None, sort_by=None):
     """One iterator contract over both chunk regimes.
 
     Yields device-resident chunk arrays regardless of where ``source``
@@ -166,6 +188,13 @@ def stream_chunks(source, chunk_size: Optional[int] = None, *,
     transfers (2 = double buffering; 1 = synchronous).  ``meter`` is an
     optional `repro.runtime.prefetch.IngestMeter` accumulating achieved
     ingest bytes/bandwidth.
+
+    ``sort_by`` (a (K, d) centroid array, or a zero-arg callable returning
+    one) stably sorts each host chunk's rows by nearest centroid before
+    transfer, so device chunks arrive locality-ordered for the bound
+    engines' tile-skipping (DESIGN.md §Locality).  Host-path only — a
+    `DeviceChunks` source is already resident and cannot be re-ordered
+    here.
     """
     from repro.runtime.prefetch import prefetch_to_device
 
@@ -174,11 +203,11 @@ def stream_chunks(source, chunk_size: Optional[int] = None, *,
         # to slip through this check and be silently ignored, which reads
         # as "my shuffle seed works" when it does nothing
         if chunk_size is not None or epochs != 1 or start_chunk \
-                or seed != 0 or drop_remainder:
+                or seed != 0 or drop_remainder or sort_by is not None:
             raise ValueError(
                 "stream_chunks(DeviceChunks) yields storage order; "
-                "chunk_size/epochs/seed/start_chunk/drop_remainder "
-                "do not apply")
+                "chunk_size/epochs/seed/start_chunk/drop_remainder/"
+                "sort_by do not apply")
 
         def _device_iter():
             for i in range(source.chunks.shape[0]):
@@ -193,6 +222,8 @@ def stream_chunks(source, chunk_size: Optional[int] = None, *,
         host_iter = host_chunk_stream(source, chunk_size, epochs=epochs,
                                       seed=seed, start_chunk=start_chunk,
                                       drop_remainder=drop_remainder)
+    if sort_by is not None:
+        host_iter = _sorted_chunk_iter(host_iter, sort_by)
     sharding = None
     if mesh is not None:
         sharding = NamedSharding(mesh, P(tuple(data_axes)))

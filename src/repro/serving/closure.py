@@ -134,19 +134,39 @@ def candidate_table(centroids, candidates):
                     axis=0).reshape(g, c, -1)
 
 
-def _candidate_sqdist(x, routers, candidates, table):
-    """Shared core: route, block-gather, exact distances to candidates.
-    Returns (g (N,), d2 (N, C))."""
-    x = jnp.asarray(x)
-    g = jnp.argmin(pairwise_sqdist(x, routers), axis=1)        # (N,)
+def _routed_sqdist(x, g, table):
+    """Exact distances from each row to its router's candidate block."""
     cc = table[g]                                  # (N, C, d) block rows
     x_sq = jnp.sum(x * x, axis=-1, keepdims=True)               # (N, 1)
     c_sq = jnp.sum(table * table, axis=-1)[g]                   # (N, C)
     cross = jnp.einsum("nd,ncd->nc", x, cc)                     # (N, C)
-    return g, jnp.maximum(x_sq - 2.0 * cross + c_sq, 0.0)
+    return jnp.maximum(x_sq - 2.0 * cross + c_sq, 0.0)
 
 
-def closure_assign(x, centroids, routers, candidates, table=None):
+def _candidate_sqdist(x, routers, candidates, table, bucketed=False):
+    """Shared core: route, block-gather, exact distances to candidates.
+    Returns (g (N,), d2 (N, C)).
+
+    ``bucketed=True`` counting-sorts the rows by router id before the
+    block gather and inverts the permutation on the way out (DESIGN.md
+    §Locality): rows sharing a router then read the SAME contiguous
+    (C, d) table block back to back instead of hopping between blocks —
+    the serving-tier analogue of the solver's cluster-sorted reordering.
+    All per-row math is row-local, so the outputs are bit-identical to
+    the unbucketed path."""
+    x = jnp.asarray(x)
+    g = jnp.argmin(pairwise_sqdist(x, routers), axis=1)        # (N,)
+    if bucketed:
+        from repro.core.locality import counting_sort_perm
+        perm, inv = counting_sort_perm(g, routers.shape[0])
+        d2s = _routed_sqdist(jnp.take(x, perm, axis=0),
+                             jnp.take(g, perm, axis=0), table)
+        return g, jnp.take(d2s, inv, axis=0)
+    return g, _routed_sqdist(x, g, table)
+
+
+def closure_assign(x, centroids, routers, candidates, table=None,
+                   bucketed=False):
     """Approximate assignment: exact argmin over the nearest router's
     candidate list.  Returns (labels (N,) int32, min_sqdist (N,)).
 
@@ -154,27 +174,31 @@ def closure_assign(x, centroids, routers, candidates, table=None):
     the scanned centroids are exact, so a row whose true centroid is in
     its router's closure gets exactly the full-scan label.  ``table`` is
     the `candidate_table`; pass a precomputed one to skip the per-call
-    build (hot serving path)."""
+    build (hot serving path).  ``bucketed=True`` sorts the batch by
+    router id for contiguous table reads (bit-identical outputs; see
+    `_candidate_sqdist`)."""
     if table is None:
         table = candidate_table(centroids, candidates)
-    g, d2 = _candidate_sqdist(x, routers, candidates, table)
+    g, d2 = _candidate_sqdist(x, routers, candidates, table,
+                              bucketed=bucketed)
     j = jnp.argmin(d2, axis=1)
     take = lambda a: jnp.take_along_axis(a, j[:, None], axis=1)[:, 0]
     return take(candidates[g]).astype(jnp.int32), take(d2)
 
 
 def closure_sqdist(x, centroids, routers, candidates, table=None,
-                   fill=jnp.inf):
+                   fill=jnp.inf, bucketed=False):
     """Approximate transform support: (N, K) squared distances, computed
     exactly for each row's candidate centroids and ``fill`` (+inf by
     default) everywhere else — +inf keeps any downstream argmin/softmin
     consistent with `closure_assign`, at the cost that non-candidate
     columns carry no information (that is the point of not pricing
-    them)."""
+    them).  ``bucketed`` as in `closure_assign`."""
     k = jnp.asarray(centroids).shape[0]
     if table is None:
         table = candidate_table(centroids, candidates)
-    g, d2 = _candidate_sqdist(x, routers, candidates, table)
+    g, d2 = _candidate_sqdist(x, routers, candidates, table,
+                              bucketed=bucketed)
     out = jnp.full((d2.shape[0], k), fill, dtype=d2.dtype)
     rows = jnp.arange(d2.shape[0])[:, None]
     return out.at[rows, candidates[g]].set(d2)

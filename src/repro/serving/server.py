@@ -51,14 +51,21 @@ import numpy as np
 from repro.core.api import NotFittedError
 from repro.runtime.metrics import as_metrics
 from repro.serving.closure import (ClosureIndex, build_closure_index,
-                                   candidate_table, closure_assign)
+                                   candidate_table, closure_assign,
+                                   closure_sqdist)
 
 _STOP = object()
+
+_OPS = ("labels", "transform")
 
 
 # -- jitted runners ----------------------------------------------------------
 # Module level (not per-model): the jit cache survives hot reloads, so a
-# swap that keeps (batch_size, d, K) recompiles nothing.
+# swap that keeps (batch_size, d, K) recompiles nothing.  The closure
+# runners serve bucketed: the micro-batch is counting-sorted by nearest
+# router before the candidate-table gather, so rows sharing a router read
+# the same contiguous (C, d) block (bit-identical outputs; DESIGN.md
+# §Locality).
 
 @jax.jit
 def _labels_exact(xb, centroids):
@@ -69,7 +76,20 @@ def _labels_exact(xb, centroids):
 
 @jax.jit
 def _labels_closure(xb, centroids, routers, candidates, table):
-    return closure_assign(xb, centroids, routers, candidates, table)[0]
+    return closure_assign(xb, centroids, routers, candidates, table,
+                          bucketed=True)[0]
+
+
+@jax.jit
+def _dists_exact(xb, centroids):
+    from repro.core.lloyd import pairwise_sqdist
+    return pairwise_sqdist(xb, centroids)
+
+
+@jax.jit
+def _dists_closure(xb, centroids, routers, candidates, table):
+    return closure_sqdist(xb, centroids, routers, candidates, table,
+                          bucketed=True)
 
 
 class ServingModel:
@@ -117,11 +137,28 @@ class ServingModel:
             out = _labels_exact(xb, self.centroids)
         return np.asarray(out)
 
+    def dists(self, xb) -> np.ndarray:
+        """(b, K) squared-distance rows for one device-shaped batch — the
+        transform-serving payload.  On the closure path non-candidate
+        columns are +inf (`closure_sqdist`), so argmin over a row always
+        reproduces `labels`."""
+        xb = jnp.asarray(xb)
+        if self.approx:
+            out = _dists_closure(xb, self.centroids, self.index.routers,
+                                 self.index.candidates, self.table)
+        else:
+            out = _dists_exact(xb, self.centroids)
+        return np.asarray(out)
+
     def warmup(self, batch_size: int, d: Optional[int] = None) -> None:
         """Compile (or hit the cache for) the fixed serving shape off the
-        serving path — reload swaps never pay a trace mid-traffic."""
+        serving path — reload swaps never pay a trace mid-traffic.  Warms
+        both ops: a batch mixing predict and transform requests must not
+        trace either runner mid-traffic."""
         d = self.centroids.shape[1] if d is None else d
-        self.labels(jnp.zeros((batch_size, d), self.centroids.dtype))
+        zeros = jnp.zeros((batch_size, d), self.centroids.dtype)
+        self.labels(zeros)
+        self.dists(zeros)
 
 
 # -- artifact source resolution ---------------------------------------------
@@ -154,6 +191,7 @@ def _fingerprint(path: Optional[Path]):
 class _Request:
     rows: np.ndarray
     future: Future
+    op: str = "labels"
 
 
 class KMeansServer:
@@ -247,10 +285,15 @@ class KMeansServer:
     def version(self):
         return self._model.version
 
-    def submit(self, rows) -> Future:
+    def submit(self, rows, op: str = "labels") -> Future:
         """Queue (n, d) rows; the Future resolves to their (n,) int32
-        labels.  Blocks (back-pressure) when ``max_queue`` requests are
-        already waiting."""
+        labels (``op="labels"``) or (n, K) squared-distance rows
+        (``op="transform"``).  Requests of both ops coalesce into the
+        same micro-batches — one compiled padded shape per op, shared by
+        every request.  Blocks (back-pressure) when ``max_queue``
+        requests are already waiting."""
+        if op not in _OPS:
+            raise ValueError(f"op must be one of {_OPS}; got {op!r}")
         if self._worker_thread is None:
             raise RuntimeError("server is not running; call start() or "
                                "use it as a context manager")
@@ -260,15 +303,27 @@ class KMeansServer:
                              f"{rows.shape}")
         if rows.shape[0] == 0:
             f: Future = Future()
-            f.set_result(np.empty((0,), np.int32))
+            k = self._model.centroids.shape[0]
+            f.set_result(np.empty((0,), np.int32) if op == "labels"
+                         else np.empty((0, k), np.float32))
             return f
-        req = _Request(rows, Future())
+        req = _Request(rows, Future(), op)
         self._q.put(req)
         return req.future
+
+    def submit_transform(self, rows) -> Future:
+        """`submit` with ``op="transform"``."""
+        return self.submit(rows, op="transform")
 
     def predict(self, rows, timeout: Optional[float] = None) -> np.ndarray:
         """Synchronous convenience: submit + wait."""
         return self.submit(rows).result(timeout=timeout)
+
+    def transform(self, rows, timeout: Optional[float] = None) -> np.ndarray:
+        """Synchronous transform: (n, K) squared-distance rows through the
+        same micro-batch path (closure models fill non-candidate columns
+        with +inf, exactly like the estimator's ``approx`` transform)."""
+        return self.submit_transform(rows).result(timeout=timeout)
 
     # -- worker ------------------------------------------------------------
 
@@ -316,7 +371,14 @@ class KMeansServer:
             rows = np.concatenate([r.rows for r in batch]) \
                 if len(batch) > 1 else batch[0].rows
             n, b = rows.shape[0], self.batch_size
-            labels = np.empty((n,), np.int32)
+            # ops can mix within a micro-batch; each padded block runs
+            # only the runners some waiting request actually needs
+            need_labels = any(r.op == "labels" for r in batch)
+            need_dists = any(r.op == "transform" for r in batch)
+            k = model.centroids.shape[0]
+            labels = np.empty((n,), np.int32) if need_labels else None
+            dists = np.empty((n, k), model.centroids.dtype) \
+                if need_dists else None
             padded = (-n) % b
             for i in range(0, n, b):
                 xb = rows[i:i + b]
@@ -324,11 +386,16 @@ class KMeansServer:
                 if m < b:   # fixed compiled shape: pad, slice the output
                     xb = np.concatenate(
                         [xb, np.repeat(xb[-1:], b - m, axis=0)])
-                labels[i:i + m] = model.labels(xb)[:m]
+                if need_labels:
+                    labels[i:i + m] = model.labels(xb)[:m]
+                if need_dists:
+                    dists[i:i + m] = model.dists(xb)[:m]
             off = 0
             for r in batch:
                 m = r.rows.shape[0]
-                r.future.set_result(labels[off:off + m].copy())
+                out = labels[off:off + m] if r.op == "labels" \
+                    else dists[off:off + m]
+                r.future.set_result(out.copy())
                 off += m
         except BaseException as e:   # noqa: BLE001 — delivered per request
             for r in batch:

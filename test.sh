@@ -14,7 +14,8 @@
 #                          #   (kernels_bench/checkpoint_bench --smoke,
 #                          #   emitting BENCH_*.json)
 #   ./test.sh --interpret  # interpret tier: the kernel-facing suites
-#                          #   (kernels v1/v2, conformance, bounds) with
+#                          #   (kernels v1/v2, conformance, bounds,
+#                          #   locality) with
 #                          #   REPRO_PALLAS_INTERPRET=1, forcing every
 #                          #   pallas_call through interpret mode even
 #                          #   where a compiled path would be picked —
@@ -42,7 +43,8 @@ if [[ "${1:-}" == "--interpret" ]]; then
     export REPRO_PALLAS_INTERPRET=1
     exec python -m pytest -x -q -m 'not slow' \
         tests/test_kernels.py tests/test_kernels_v2.py \
-        tests/test_conformance.py tests/test_bounds.py "$@"
+        tests/test_conformance.py tests/test_bounds.py \
+        tests/test_locality.py "$@"
 fi
 if [[ "${1:-}" == "--slow" ]]; then
     shift

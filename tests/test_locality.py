@@ -1,0 +1,239 @@
+"""Locality-engine invariants (DESIGN.md §Locality).
+
+The reordering wrapper's whole contract is "the kernel sees sorted rows,
+the caller sees nothing": every test here is some flavour of
+*bit-identical outputs* around a permutation that verifiably happened
+(non-identity perm, n_sorts > 0).  Three exactness tiers, matching the
+engine's documented guarantees:
+
+  * CPU bound backends (hamerly/elkan/yinyang): reorder=True vs the raw
+    backend is strictly bitwise on every KMeansResult leaf — the wrapper
+    recomputes sums/counts/energy in original row order with the exact
+    expressions those backends use.
+  * fused_bounds: labels are exact vs raw, but the raw kernel accumulates
+    sums/energy in-pass while the wrapper recomputes them — ulp-level
+    drift.  The strict bitwise claim is SAME-ENGINE sorted vs
+    never-sorted (churn_threshold 0 vs >= 1: identical programs, only the
+    sort predicate's data differs).
+  * batched: materialising the per-restart permuted (R, N, d) X changes
+    the matmul lowering vs the raw path's broadcast shared X, so the
+    bitwise claim is again same-program sorted vs never-sorted, plus
+    exact labels vs raw.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import distribute, get_backend
+from repro.core.kmeans import (KMeansConfig, aa_kmeans, aa_kmeans_batched,
+                               split_bound_phases)
+from repro.core.locality import (ReorderConfig, counting_sort_perm,
+                                 inner_carry, permutation, reorder_backend,
+                                 sort_count)
+from repro.data.synthetic import make_blobs
+
+jax.config.update("jax_enable_x64", False)
+
+NEVER = ReorderConfig(warmup=2, churn_threshold=1.5)   # sort never fires
+ALWAYS = ReorderConfig(warmup=2, churn_threshold=0.0)  # sort on any drift
+
+
+def _problem(seed=3, n=512, d=8, k=8):
+    x = jnp.asarray(make_blobs(n, d, k, seed=seed))
+    c0 = jnp.asarray(np.asarray(x)[
+        np.random.default_rng(0).permutation(n)[:k]])
+    return x, c0, KMeansConfig(k=k, max_iter=40)
+
+
+def _leaves_equal(a, b):
+    fa, fb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(fa) == len(fb) and all(
+        bool(jnp.array_equal(u, v)) for u, v in zip(fa, fb))
+
+
+# ---------------------------------------------------------------------------
+# counting sort
+# ---------------------------------------------------------------------------
+
+
+def test_counting_sort_matches_stable_argsort():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 200))
+        k = int(rng.integers(1, 16))
+        labels = rng.integers(0, k, size=n).astype(np.int32)
+        perm, inv = counting_sort_perm(jnp.asarray(labels), k)
+        expect = np.argsort(labels, kind="stable")
+        assert np.array_equal(np.asarray(perm), expect)
+        assert np.array_equal(np.asarray(perm)[np.asarray(inv)],
+                              np.arange(n))
+
+
+def test_counting_sort_empty_clusters_and_tiles():
+    # labels concentrated in few of many clusters; tiny tile forces the
+    # rank pass through many tile iterations, most over empty labels
+    labels = jnp.asarray([5, 5, 0, 9, 5, 0], jnp.int32)
+    perm, inv = counting_sort_perm(labels, 12, sort_tile=1)
+    expect = np.argsort(np.asarray(labels), kind="stable")
+    assert np.array_equal(np.asarray(perm), expect)
+    assert np.array_equal(np.asarray(inv),
+                          np.argsort(expect, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# driver-level bitwise equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["hamerly", "elkan", "yinyang"])
+def test_solve_bitwise_vs_raw(name):
+    x, c0, cfg = _problem()
+    res_raw = aa_kmeans(x, c0, cfg, backend=name)
+    res_ro = aa_kmeans(x, c0, cfg, backend=name, reorder=True)
+    assert _leaves_equal(res_raw, res_ro)
+
+
+def test_fused_bounds_labels_exact_and_same_engine_bitwise():
+    x, c0, cfg = _problem()
+    res_raw = aa_kmeans(x, c0, cfg, backend="fused_bounds")
+    res_never = aa_kmeans(x, c0, cfg, backend="fused_bounds", reorder=NEVER)
+    res_sorted = aa_kmeans(x, c0, cfg, backend="fused_bounds",
+                           reorder=ALWAYS)
+    assert bool(jnp.array_equal(res_raw.labels, res_sorted.labels))
+    assert _leaves_equal(res_never, res_sorted)
+
+
+def test_batched_same_program_bitwise_and_labels_exact():
+    x, c0, cfg = _problem()
+    c0s = jnp.stack([c0, jnp.flip(c0, axis=0)])
+    raw = aa_kmeans_batched(x, c0s, cfg, backend="fused_bounds")
+    never = aa_kmeans_batched(x, c0s, cfg, backend="fused_bounds",
+                              reorder=NEVER)
+    srt = aa_kmeans_batched(x, c0s, cfg, backend="fused_bounds",
+                            reorder=ALWAYS)
+    assert _leaves_equal(never, srt)
+    assert bool(jnp.array_equal(raw.labels, srt.labels))
+
+
+# ---------------------------------------------------------------------------
+# the sort actually happens / the churn trigger gates it
+# ---------------------------------------------------------------------------
+
+
+def _carry_probe(name, config, steps=6, seed=3):
+    """Drive raw steps and return the final wrapper carry."""
+    x, c0, _ = _problem(seed=seed)
+    k = c0.shape[0]
+    bk = reorder_backend(get_backend(name), config)
+    carry = bk.init_carry(x, c0, k)
+    c = c0
+    step = jax.jit(lambda a, b, cr: bk.step(a, b, k, cr))
+    for _ in range(steps):
+        (res, carry) = step(x, c, carry)
+        c = bk.centroids_from_step(x, res, k, c)
+    return carry
+
+
+def test_churn_trigger_fires():
+    carry = _carry_probe("elkan", ALWAYS)
+    assert int(sort_count(carry)) > 0
+    assert not np.array_equal(np.asarray(permutation(carry)),
+                              np.arange(512))
+
+
+@pytest.mark.parametrize("config", [NEVER, ReorderConfig(warmup=10 ** 6)])
+def test_churn_trigger_held_off(config):
+    carry = _carry_probe("elkan", config)
+    assert int(sort_count(carry)) == 0
+    assert np.array_equal(np.asarray(permutation(carry)), np.arange(512))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume with a live permutation
+# ---------------------------------------------------------------------------
+
+
+def test_resume_mid_sort_bitwise(tmp_path):
+    x, c0, cfg = _problem()
+    snaps = {}
+    res_full = aa_kmeans(x, c0, cfg, backend="elkan", reorder=True,
+                         checkpoint_every=3,
+                         checkpoint_cb=lambda st, t: snaps.setdefault(t, st))
+    t0 = min(snaps)
+    carry = snaps[t0].carry
+    # the snapshot really holds a mid-solve permutation, not identity
+    assert int(sort_count(carry)) > 0
+    assert not np.array_equal(np.asarray(permutation(carry)),
+                              np.arange(512))
+    res_resumed = aa_kmeans(x, c0, cfg, backend="elkan", reorder=True,
+                            checkpoint_every=3, resume_from=snaps[t0])
+    assert _leaves_equal(res_full, res_resumed)
+
+
+def test_resume_rejects_reorder_mismatch(tmp_path):
+    x, c0, cfg = _problem()
+    aa_kmeans(x, c0, cfg, backend="elkan", reorder=True,
+              checkpoint_every=3, checkpoint_dir=tmp_path)
+    ckpts = sorted(tmp_path.glob("*.npz"))
+    assert ckpts
+    with pytest.raises(ValueError, match="backend"):
+        aa_kmeans(x, c0, cfg, backend="elkan",
+                  checkpoint_every=3, resume_from=ckpts[-1])
+
+
+# ---------------------------------------------------------------------------
+# composition and guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_wrapper_rejects_boundless_inner():
+    x, c0, _ = _problem()
+    bk = reorder_backend(get_backend("dense"))
+    with pytest.raises(TypeError, match="bound-carrying"):
+        bk.init_carry(x, c0, c0.shape[0])
+
+
+def test_distribute_composition_order():
+    inner = get_backend("hamerly")
+    dist = distribute(reorder_backend(inner), ("data",))
+    assert dist.axes == ("data",)
+    with pytest.raises(ValueError, match="shard-local"):
+        reorder_backend(distribute(inner, ("data",)))
+
+
+def test_registry_variants_resolve():
+    bk = get_backend("elkan_reorder", warmup=5, churn_threshold=0.5)
+    assert bk.name == "elkan+reorder"
+    assert bk is not get_backend("elkan_reorder")   # different config
+    assert get_backend("elkan_reorder") is get_backend("elkan_reorder")
+
+
+# ---------------------------------------------------------------------------
+# bound-stats phase split (the PR-9 dilution bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_split_bound_phases_pins_split():
+    stats = [{"skipped_frac": s} for s in (0.0, 0.0, 0.6, 0.8)]
+    accepted = [False, False, True, True]
+    phases = split_bound_phases(accepted, stats)
+    assert phases["pre_accept"]["n_iters"] == 2
+    assert phases["pre_accept"]["skipped_frac"] == 0.0
+    assert phases["post_accept"]["n_iters"] == 2
+    assert phases["post_accept"]["skipped_frac"] == pytest.approx(0.7)
+    # a flat mean would have reported 0.35 — the dilution this fixes
+    assert phases["post_accept"]["skipped_frac"] > 0.5
+
+
+def test_split_bound_phases_edge_cases():
+    assert split_bound_phases([True], []) == {}
+    phases = split_bound_phases([False, False],
+                                [{"skipped_frac": 0.1}] * 2)
+    assert phases["post_accept"]["n_iters"] == 0
+    assert phases["post_accept"]["skipped_frac"] is None
+    assert phases["pre_accept"]["n_iters"] == 2

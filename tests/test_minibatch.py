@@ -21,11 +21,12 @@ from repro.core import backends as B
 from repro.core.api import MiniBatchAAKMeans
 from repro.core.init_schemes import kmeanspp_init
 from repro.core.kmeans import (KMeansConfig, aa_kmeans,
-                               aa_kmeans_minibatch)
+                               aa_kmeans_minibatch,
+                               aa_kmeans_minibatch_streamed)
 from repro.core.minibatch import (MiniBatchConfig, guard_pick,
                                   minibatch_init, minibatch_iteration)
 from repro.data.streaming import (chunk_dataset, host_chunk_stream,
-                                  split_validation)
+                                  split_validation, stream_chunks)
 from repro.data.synthetic import make_blobs
 from repro.kernels import ref
 
@@ -319,6 +320,78 @@ def test_estimator_input_validation():
         m.predict(np.zeros((4, 2), np.float32))
     with pytest.raises(ValueError, match="streaming state"):
         m.finalize()
+
+
+# -- streamed epoch driver + chunk locality ---------------------------------
+
+def test_stream_chunks_sort_by_orders_rows(problem):
+    """``sort_by`` re-orders each chunk's rows by nearest centroid without
+    changing WHICH rows a chunk holds (the locality engine's streaming
+    analogue: ordering shapes tile-skipping, never the numbers)."""
+    x, xt, xv, c0 = problem
+    xt_np = np.asarray(xt)[:4096]
+    c_np = np.asarray(c0)
+    plain = list(stream_chunks(xt_np, 1024, epochs=1, seed=5))
+    srt = list(stream_chunks(xt_np, 1024, epochs=1, seed=5, sort_by=c_np))
+    assert len(plain) == len(srt) == 4
+    for p, s in zip(plain, srt):
+        p, s = np.asarray(p), np.asarray(s)
+        # same rows, re-ordered
+        assert np.array_equal(np.sort(p, axis=0), np.sort(s, axis=0))
+        d2 = (np.square(s).sum(-1)[:, None] - 2.0 * s @ c_np.T
+              + np.square(c_np).sum(-1)[None, :])
+        labels = np.argmin(d2, axis=1)
+        assert np.all(np.diff(labels) >= 0)     # cluster-sorted
+    # a callable provider is re-read per chunk (the streamed driver
+    # passes its live centroids)
+    reads = []
+
+    def provider():
+        reads.append(1)
+        return c_np
+    list(stream_chunks(xt_np, 1024, epochs=1, sort_by=provider))
+    assert len(reads) == 4
+
+
+def test_stream_chunks_device_source_rejects_sort_by(problem):
+    x, xt, xv, c0 = problem
+    dc = chunk_dataset(xt, 2048)
+    with pytest.raises(ValueError, match="sort_by"):
+        stream_chunks(dc, sort_by=np.asarray(c0))
+
+
+def test_streamed_driver_matches_quality_and_counts(problem):
+    """`aa_kmeans_minibatch_streamed` runs the same per-chunk state
+    machine as the device-resident driver over a prefetched host stream;
+    with ``sort_chunks`` it must still land within the quality bar, and
+    the trace must cover every chunk of every epoch."""
+    x, xt, xv, c0 = problem
+    full = aa_kmeans(x, c0, KMeansConfig(k=K, max_iter=500))
+    xt_np = np.asarray(xt)
+    cfg = MiniBatchConfig(k=K, chunk_size=2048, epochs=3)
+    n_chunks = -(-xt_np.shape[0] // 2048)
+    for sort_chunks in (False, True):
+        res, tr = aa_kmeans_minibatch_streamed(
+            xt_np, xv, c0, cfg, sort_chunks=sort_chunks,
+            return_trace=True)
+        assert int(res.n_steps) == 3 * n_chunks
+        assert tr.e_val.shape == (3 * n_chunks,)
+        e = _full_energy(x, res.centroids)
+        assert e <= float(full.energy) * 1.02, (sort_chunks, e)
+
+
+def test_streamed_driver_iterator_source_and_meter(problem):
+    """An explicit chunk-iterator source streams as-is, and the ingest
+    meter observes the host→device transfers."""
+    from repro.runtime.prefetch import IngestMeter
+    x, xt, xv, c0 = problem
+    xt_np = np.asarray(xt)[:6144]
+    cfg = MiniBatchConfig(k=K, chunk_size=2048, epochs=1)
+    meter = IngestMeter()
+    it = host_chunk_stream(xt_np, 2048, epochs=1, seed=3)
+    res = aa_kmeans_minibatch_streamed(it, xv, c0, cfg, meter=meter)
+    assert int(res.n_steps) == 3
+    assert meter.chunks == 3 and meter.bytes > 0
 
 
 # -- benchmark smoke --------------------------------------------------------

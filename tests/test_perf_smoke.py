@@ -23,20 +23,22 @@ def test_kernels_bench_emits_json(tmp_path):
     records = kernels_bench.main(["--smoke", "--json", str(out)])
     assert out.exists()
     payload = json.loads(out.read_text())
-    assert payload["schema"] == "kernels_bench/v3"
+    assert payload["schema"] == "kernels_bench/v4"
     assert payload["records"] == records and records
     variants = {r["variant"] for r in records}
     # analytic roofline rows for every variant + the real Pallas kernels
     # driven in interpret mode
     assert {"split", "fused", "fused_v1", "pallas.fused",
             "pallas.assignment", "pallas.update",
-            "pallas.fused_bounds"} <= variants
+            "pallas.fused_bounds", "solver.fused_bounds_traced"} <= variants
     for r in records:
+        # v3 tile-skip + v4 layout columns exist on EVERY record (None
+        # outside the bounds arms)
+        assert "skipped_tile_frac" in r and "phase" in r and "layout" in r
+        if r["variant"].startswith("solver."):
+            continue                       # end-to-end rows: no roofline
         assert r["x_passes_per_iter"] >= 1.0
         assert r["bytes_per_iter"] > 0 and r["flops_per_iter"] > 0
-        # v3: the tile-skip columns exist on EVERY record (None outside
-        # the bounds engine)
-        assert "skipped_tile_frac" in r and "phase" in r
     # the v2 fused kernel reads X once; the split path twice — and the
     # bounds engine never adds an X pass (skipping removes C re-streams)
     by_var = {}
@@ -45,13 +47,27 @@ def test_kernels_bench_emits_json(tmp_path):
     assert by_var["fused"]["x_passes_per_iter"] == 1.0
     assert by_var["split"]["x_passes_per_iter"] == 2.0
     assert by_var["pallas.fused_bounds"]["x_passes_per_iter"] == 1.0
-    # the bounds engine reports both phases: zero skip on the bound-free
-    # first step, majority skip once converged on the ordered workload
-    phases = {r["phase"]: r for r in records
-              if r["variant"] == "pallas.fused_bounds"}
-    assert set(phases) == {"early", "converged"}
-    assert phases["early"]["skipped_tile_frac"] == 0.0
-    assert phases["converged"]["skipped_tile_frac"] > 0.5
+    # v4 layout matrix: each bounds arm reports both phases; skip is 0 on
+    # the bound-free first step everywhere, and converged skip depends on
+    # the row layout — majority skip when rows are cluster-ordered (or
+    # reordered on the fly by the locality engine), ~0 when interleaved
+    cells = {(r["layout"], r["phase"]): r for r in records
+             if r["variant"] == "pallas.fused_bounds"}
+    layouts = ("ordered", "interleaved", "interleaved+reorder")
+    assert set(cells) == {(lay, ph) for lay in layouts
+                          for ph in ("early", "converged")}
+    for lay in layouts:
+        assert cells[(lay, "early")]["skipped_tile_frac"] == 0.0
+    assert cells[("ordered", "converged")]["skipped_tile_frac"] > 0.5
+    assert cells[("interleaved", "converged")]["skipped_tile_frac"] < 0.05
+    assert cells[("interleaved+reorder", "converged")][
+        "skipped_tile_frac"] >= 0.5
+    # end-to-end traced rows: one per arm, wall time measured
+    solver = [r for r in records
+              if r["variant"] == "solver.fused_bounds_traced"]
+    assert sorted(r["layout"] for r in solver) == \
+        ["interleaved", "interleaved+reorder"]
+    assert all(r["wall_us"] > 0 and r["n_iters"] > 0 for r in solver)
     # interpret-mode Pallas rows actually measured a wall time
     assert all(r["wall_us"] is not None for r in records
                if r["wall_path"] == "pallas_interpret")

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core.api import AAKMeans, MiniBatchAAKMeans, NotFittedError
 from repro.data.synthetic import make_blobs
 from repro.serving import (KMeansServer, ServingModel, build_closure_index,
-                           closure_assign, closure_sqdist, serve_manifest)
+                           candidate_table, closure_assign, closure_sqdist,
+                           serve_manifest)
 
 
 @pytest.fixture(scope="module")
@@ -263,3 +264,66 @@ def test_server_metrics_per_batch(fitted):
             "padded_rows"} <= set(rec)
     assert sum(r["batch_rows"] for _, r in sink.records) == 40
     assert sum(r["padded_rows"] for _, r in sink.records) == 8
+
+
+# -- transform serving + bucketed closure (DESIGN.md §Locality) -------------
+
+def test_closure_bucketed_parity(fitted):
+    """Router-bucketed candidate scanning (rows counting-sorted by router
+    id for contiguous table reads) is bit-identical to the plain path —
+    all per-row math is row-local."""
+    x, model = fitted
+    idx = model.closure_index_
+    c = model.centroids_
+    tab = candidate_table(c, idx.candidates)
+    xq = jnp.asarray(x[:512])
+    l0, d0 = closure_assign(xq, c, idx.routers, idx.candidates, tab)
+    l1, d1 = closure_assign(xq, c, idx.routers, idx.candidates, tab,
+                            bucketed=True)
+    assert np.array_equal(np.asarray(l0), np.asarray(l1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+    s0 = closure_sqdist(xq, c, idx.routers, idx.candidates, tab)
+    s1 = closure_sqdist(xq, c, idx.routers, idx.candidates, tab,
+                        bucketed=True)
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.parametrize("approx", [False, True])
+def test_server_transform_micro_batched(fitted, approx):
+    """`transform` (distance rows) rides the same padded micro-batch path
+    as labels: block-exact vs the model's direct runner, argmin-consistent
+    with predict, mixed-op batches served, empty requests short-circuit."""
+    x, model = fitted
+    with KMeansServer(model, batch_size=64, approx=approx,
+                      flush_ms=1.0) as srv:
+        q = x[:150]
+        lab = srv.predict(q)
+        dist = srv.transform(q)
+        k = model.centroids_.shape[0]
+        assert dist.shape == (150, k)
+        # block-wise parity with the direct model runner (same padding)
+        direct = np.empty_like(dist)
+        for i in range(0, 150, 64):
+            xb = q[i:i + 64]
+            m = xb.shape[0]
+            if m < 64:
+                xb = np.concatenate([xb, np.repeat(xb[-1:], 64 - m,
+                                                   axis=0)])
+            direct[i:i + m] = srv._model.dists(xb)[:m]
+        assert np.array_equal(dist, direct)
+        # a transform row's argmin IS the served label (closure fills
+        # non-candidate columns with +inf, so this holds on both paths)
+        assert np.array_equal(np.argmin(dist, axis=1).astype(np.int32),
+                              lab)
+        # mixed ops inside one flush window
+        f1 = srv.submit(q[:50], op="labels")
+        f2 = srv.submit_transform(q[50:120])
+        f3 = srv.submit(q[120:150])
+        assert np.array_equal(f1.result(30), lab[:50])
+        assert np.array_equal(f2.result(30), dist[50:120])
+        assert np.array_equal(f3.result(30), lab[120:150])
+        # empty requests resolve without a queue round-trip, op-shaped
+        assert srv.submit(q[:0]).result(5).shape == (0,)
+        assert srv.submit_transform(q[:0]).result(5).shape == (0, k)
+        with pytest.raises(ValueError, match="op"):
+            srv.submit(q[:4], op="energies")
