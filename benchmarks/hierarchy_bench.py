@@ -1,0 +1,174 @@
+"""Flat vs hierarchical solve at large K (DESIGN.md §Hierarchy).
+
+Each case fits the same synthetic dataset twice: the flat batched solver
+(`aa_kmeans_batched`, one K-cluster program) and the two-level
+divide-and-conquer engine (`aa_kmeans_hierarchical`, G ≈ √K
+super-clusters, all K/G-sub-problems one batched program).  Both arms are
+END-TO-END fits — seeding included — because that is the cost a codebook
+refresh actually pays; the record carries wall seconds and final energy
+for both plus their ratios.  The million-cluster arm runs the hierarchy
+only (its flat arm would price an N×K distance matrix no host here can
+hold — ``flat_wall_s: null`` is the honest record, not a timeout).
+
+Data is a low-intrinsic-dimension manifold plus noise (the
+`serving_bench` generator family): smooth density is the k²-means
+operating regime — on well-separated discrete blobs the uniform K/G
+split must merge blobs in overfull super-clusters and the energy ratio
+degrades, which `tests/test_hierarchy.py` documents instead of hiding.
+
+``--json [PATH]`` writes ``BENCH_hierarchy.json`` (schema
+``hierarchy_bench/v1``); ``--smoke`` runs a tiny case for CI
+(tests/test_perf_smoke.py pins the schema, and pins the committed
+K=65536 record's wall ratio < 1).
+
+    PYTHONPATH=src python -m benchmarks.hierarchy_bench --json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# name, k, n, d, n_groups, max_iter, mbar, flat block_n (0 = no flat arm),
+# super_max_iter, n_reassign, n_init.
+#
+# n_groups is the quality knob: G ≈ √K minimises per-row work (G + K/G)
+# but pins the most centroids per group; smaller G trades wall back for
+# energy (fewer, larger sub-problems ≈ closer to flat).  The flat-armed
+# cases pick the G meeting the ≤5% energy bar with wall to spare — the
+# measured ladder at K=65536 (n_init=2): G=256 → 9.3% over flat,
+# G=64 → 5.7%, G=16 → 4.2%.  The million-cluster arm runs G = √K: it
+# has no flat arm to chase, and √K is the throughput-optimal point.
+CASES = [
+    ("k4096", 4096, 65536, 16, 16, 10, 30, 8192, 30, 2, 2),
+    ("k65536", 65536, 131072, 16, 16, 8, 30, 4096, 30, 2, 2),
+    ("k1m", 2 ** 20, 2 ** 21, 4, 1024, 3, 5, 0, 5, 1, 1),
+]
+SMOKE_CASES = [
+    ("smoke", 256, 4096, 8, 16, 10, 10, 2048, 20, 1, 1),
+]
+
+
+def _make_case(n: int, d: int, seed: int):
+    """Smooth-density workload: latent gaussian through a tanh embedding
+    plus noise (see module docstring for why not discrete blobs)."""
+    rng = np.random.default_rng(seed)
+    dim_lat = max(2, min(d, 6))
+    z = rng.normal(size=(n, dim_lat))
+    basis = rng.normal(size=(dim_lat, d)) / np.sqrt(dim_lat)
+    x = np.tanh(z @ basis) + 0.05 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def _fit_flat(x, k, max_iter, mbar, block_n, seed):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.anderson import AAConfig
+    from repro.core.init_schemes import batched_init
+    from repro.core.kmeans import (KMeansConfig, aa_kmeans_batched,
+                                   select_best)
+    cfg = KMeansConfig(k=k, max_iter=max_iter, aa=AAConfig(mbar=mbar),
+                       block_n=block_n)
+    t0 = time.perf_counter()
+    keys = jax.random.split(jax.random.PRNGKey(seed), 1)
+    c0s = batched_init("kmeans++", keys, x, k)
+    best = select_best(aa_kmeans_batched(x, c0s, cfg, backend="blocked"))
+    jax.block_until_ready(best.centroids)
+    return time.perf_counter() - t0, float(best.energy)
+
+
+def _fit_hier(x, k, g, max_iter, mbar, super_max_iter, block_n, seed,
+              n_reassign, n_init):
+    import jax
+
+    from repro.core.anderson import AAConfig
+    from repro.core.hierarchy import aa_kmeans_hierarchical
+    from repro.core.kmeans import KMeansConfig
+    cfg = KMeansConfig(k=k, max_iter=max_iter, aa=AAConfig(mbar=mbar),
+                       block_n=block_n)
+    backend = "blocked" if block_n else "dense"
+    t0 = time.perf_counter()
+    res = aa_kmeans_hierarchical(x, k, cfg, backend=backend, n_groups=g,
+                                 n_reassign=n_reassign, n_init=n_init,
+                                 seed=seed,
+                                 super_max_iter=super_max_iter)
+    jax.block_until_ready(res.centroids)
+    return time.perf_counter() - t0, float(res.energy), int(res.n_rounds)
+
+
+def case_record(name, k, n, d, g, max_iter, mbar, flat_block_n,
+                super_max_iter, n_reassign, n_init, *,
+                seed: int = 0) -> dict:
+    import jax.numpy as jnp
+    x = jnp.asarray(_make_case(n, d, seed))
+    # a dense sub-assignment prices a (G·n_init, N_max, K/G) distance
+    # transient — gigabytes at these shapes — so the hierarchy arm runs
+    # blocked everywhere: the flat arm's block size where there is one
+    # (same engine both arms), a small block on the million-cluster arm
+    hier_block_n = 256 if flat_block_n == 0 else flat_block_n
+    hier_s, hier_e, n_rounds = _fit_hier(x, k, g, max_iter, mbar,
+                                         super_max_iter, hier_block_n,
+                                         seed, n_reassign, n_init)
+    rec = {
+        "case": name, "k": k, "n": n, "d": d,
+        "n_groups": g, "k_sub": k // g,
+        "max_iter": max_iter, "mbar": mbar,
+        "n_reassign": n_reassign, "n_init": n_init,
+        "hier_wall_s": hier_s, "hier_energy": hier_e,
+        "n_rounds": n_rounds,
+        "flat_wall_s": None, "flat_energy": None,
+        "wall_ratio": None, "energy_ratio": None,
+    }
+    if flat_block_n:
+        flat_s, flat_e = _fit_flat(x, k, max_iter, mbar, flat_block_n,
+                                   seed)
+        rec.update(flat_wall_s=flat_s, flat_energy=flat_e,
+                   wall_ratio=hier_s / flat_s,
+                   energy_ratio=hier_e / flat_e)
+    return rec
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_hierarchy.json",
+                        default=None, metavar="PATH",
+                        help="write records to PATH (default "
+                             "BENCH_hierarchy.json in the repo root)")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny case for CI (schema smoke)")
+    args = parser.parse_args(argv)
+
+    import jax
+
+    cases = SMOKE_CASES if args.smoke else CASES
+    records = []
+    for case in cases:
+        rec = case_record(*case)
+        records.append(rec)
+        flat = "flat=skipped" if rec["flat_wall_s"] is None else (
+            f"flat={rec['flat_wall_s']:.2f}s;"
+            f"wall_ratio={rec['wall_ratio']:.3f};"
+            f"energy_ratio={rec['energy_ratio']:.4f}")
+        print(f"hierarchy.{rec['case']},{rec['hier_wall_s']:.2f},"
+              f"E={rec['hier_energy']:.4g};rounds={rec['n_rounds']};"
+              f"{flat}", flush=True)
+    if args.json:
+        path = Path(args.json)
+        if not path.is_absolute():
+            path = Path(__file__).resolve().parents[1] / path
+        path.write_text(json.dumps(
+            {"schema": "hierarchy_bench/v1",
+             "backend": jax.default_backend(),
+             "smoke": args.smoke, "records": records},
+            indent=2, sort_keys=True))
+        print(f"wrote {path}")
+    return records
+
+
+if __name__ == "__main__":
+    main()

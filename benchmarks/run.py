@@ -87,6 +87,13 @@ def main() -> None:
     except Exception:
         traceback.print_exc()
 
+    print("# === Hierarchy: flat vs divide-and-conquer ===", flush=True)
+    try:
+        from benchmarks import hierarchy_bench
+        hierarchy_bench.main(["--json"] + (["--smoke"] if args.fast else []))
+    except Exception:
+        traceback.print_exc()
+
     print("# === Kernel roofline (fused vs split Lloyd pass) ===",
           flush=True)
     try:

@@ -188,12 +188,26 @@ def _transform_rows(model, x, chunk_size=None, approx=False):
 
 def _build_serving_index(model, n_candidates=None, n_groups=None, seed=0):
     """Build + attach the cluster-closure index (DESIGN.md §Serving) to a
-    fitted model; persisted by ``save`` and restored by ``load``."""
+    fitted model; persisted by ``save`` and restored by ``load``.
+
+    A hierarchically-fitted model (`AAKMeans(hierarchical=True)`) gets
+    its index FOR FREE: the solve's super-centroids are the routers and
+    each group's codebook rows are its candidate list
+    (`repro.serving.closure.hierarchy_closure_index`) — no codebook
+    re-clustering.  Passing explicit ``n_candidates``/``n_groups`` opts
+    back into the built-from-scratch index."""
     model._assert_fitted()
-    from repro.serving.closure import build_closure_index
-    idx = build_closure_index(jnp.asarray(model.centroids_),
-                              n_candidates=n_candidates,
-                              n_groups=n_groups, seed=seed)
+    if n_candidates is None and n_groups is None \
+            and getattr(model, "hier_routers_", None) is not None:
+        from repro.serving.closure import hierarchy_closure_index
+        idx = hierarchy_closure_index(jnp.asarray(model.centroids_),
+                                      jnp.asarray(model.hier_routers_),
+                                      jnp.asarray(model.hier_offsets_))
+    else:
+        from repro.serving.closure import build_closure_index
+        idx = build_closure_index(jnp.asarray(model.centroids_),
+                                  n_candidates=n_candidates,
+                                  n_groups=n_groups, seed=seed)
     model.closure_routers_ = idx.routers
     model.closure_candidates_ = idx.candidates
     return model
@@ -324,6 +338,13 @@ class AAKMeans:
     # with that candidate count.  `build_serving_index()` attaches one to
     # an already-fitted model either way.
     serving_index: object = None
+    # two-level divide-and-conquer fit (DESIGN.md §Hierarchy): False =
+    # flat batched solve; True = `aa_kmeans_hierarchical` with defaults
+    # (G = divisor of K nearest √K); a dict = keyword overrides for the
+    # hierarchy driver (n_groups=, n_reassign=, super_max_iter=, ...).
+    # The million-cluster regime — flat assignment work is O(N·K·d),
+    # hierarchical roughly O(N·(G + K/G)·d).
+    hierarchical: object = False
 
     # fitted state
     centroids_: Optional[jax.Array] = None
@@ -333,6 +354,10 @@ class AAKMeans:
     n_accepted_: Optional[int] = None
     closure_routers_: Optional[jax.Array] = None
     closure_candidates_: Optional[jax.Array] = None
+    # hierarchical fit extras: level-1 routers + group-major codebook
+    # offsets (the free serving index; see `_build_serving_index`)
+    hier_routers_: Optional[jax.Array] = None
+    hier_offsets_: Optional[jax.Array] = None
 
     def _config(self) -> KMeansConfig:
         return KMeansConfig(
@@ -347,6 +372,8 @@ class AAKMeans:
         n = x.shape[0]
         cfg = self._config()
         n_init = max(self.n_init, 1)
+        if self.hierarchical:
+            return self._fit_hierarchical(x, cfg, n_init)
         keys = jax.random.split(jax.random.PRNGKey(self.seed), n_init)
         c0s = jnp.asarray(batched_init(self.init, keys, x, self.n_clusters))
         if self.mesh is not None:
@@ -381,8 +408,48 @@ class AAKMeans:
         self.energy_ = energy
         self.n_iter_ = int(best.n_iter)
         self.n_accepted_ = int(best.n_accepted)
-        # fresh centroids invalidate any previous closure index; rebuild
-        # when requested, never serve a stale one
+        # fresh centroids invalidate any previous closure index (and any
+        # previous hierarchical structure); rebuild when requested, never
+        # serve a stale one
+        self.closure_routers_ = self.closure_candidates_ = None
+        self.hier_routers_ = self.hier_offsets_ = None
+        if self.serving_index:
+            self.build_serving_index(
+                n_candidates=self.serving_index
+                if isinstance(self.serving_index, int)
+                and not isinstance(self.serving_index, bool) else None)
+        return self
+
+    def _fit_hierarchical(self, x, cfg, n_init) -> "AAKMeans":
+        """k²-means divide-and-conquer fit (`repro.core.hierarchy`): the
+        million-cluster path.  Keeps the flat fit's contract (centroids_,
+        original-row-order labels_, finite-energy check) and additionally
+        records the two-level routing structure, which ``save`` persists
+        and the serving index reuses for free."""
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "hierarchical=True is a host-driven round loop; a "
+                "mesh-distributed hierarchy is a ROADMAP follow-up — fit "
+                "flat under the mesh or hierarchical on one device")
+        from repro.core.hierarchy import aa_kmeans_hierarchical
+        opts = dict(self.hierarchical) \
+            if isinstance(self.hierarchical, dict) else {}
+        res = aa_kmeans_hierarchical(
+            x, self.n_clusters, cfg, backend=self.backend,
+            n_init=n_init, init=self.init, seed=self.seed,
+            metrics=self.metrics, **opts)
+        energy = float(res.energy)
+        if not math.isfinite(energy):
+            raise FloatingPointError(
+                f"hierarchical fit produced a non-finite energy "
+                f"(E={energy}); check X for NaN/inf rows")
+        self.centroids_ = res.centroids
+        self.labels_ = res.labels
+        self.energy_ = energy
+        self.n_iter_ = int(res.n_rounds)
+        self.n_accepted_ = None
+        self.hier_routers_ = res.routers
+        self.hier_offsets_ = res.group_offsets
         self.closure_routers_ = self.closure_candidates_ = None
         if self.serving_index:
             self.build_serving_index(
@@ -461,6 +528,11 @@ class AAKMeans:
             arrays["closure_routers_"] = jnp.asarray(self.closure_routers_)
             arrays["closure_candidates_"] = \
                 jnp.asarray(self.closure_candidates_)
+        if self.hier_routers_ is not None:
+            # the two-level structure rides the same npz schema: load()
+            # restores every array named in meta["has"] generically
+            arrays["hier_routers_"] = jnp.asarray(self.hier_routers_)
+            arrays["hier_offsets_"] = jnp.asarray(self.hier_offsets_)
         scalars = {"energy_": self.energy_, "n_iter_": self.n_iter_,
                    "n_accepted_": self.n_accepted_}
         return _save_estimator(self, path, serialize.KIND_ESTIMATOR_AA,

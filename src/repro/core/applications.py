@@ -65,6 +65,30 @@ def kv_codebooks_batched(vectors: jax.Array, k: int, *, key=None,
     return res.centroids, res.labels, res
 
 
+def kv_codebook_hierarchical(vectors: jax.Array, k: int, *, seed: int = 0,
+                             max_iter: int = 60, n_groups=None,
+                             n_reassign: int = 1, backend=None):
+    """`kv_codebook` for codebooks too large to solve flat — the
+    65k-and-beyond PQ/cache regime (DESIGN.md §Hierarchy).
+
+    Flat `kv_codebook` materialises O(N·K) distance work per pass; at
+    K = 2^16 a serving-side codebook refresh stops being "trivia next to
+    the forward pass".  This variant routes through
+    `repro.core.hierarchy.aa_kmeans_hierarchical` (G ≈ √K super-clusters,
+    all sub-problems one batched AA program), returning the same
+    ``(codebook (k, d), codes (N,), res)`` triple — ``codes`` are global
+    codebook rows in original vector order, so reconstruction is still
+    ``codebook[codes]`` — plus the two-level routing structure on ``res``
+    for a free serving index (`serving.closure.hierarchy_closure_index`).
+    """
+    from repro.core.hierarchy import aa_kmeans_hierarchical
+    v32 = vectors.astype(jnp.float32)
+    res = aa_kmeans_hierarchical(
+        v32, k, KMeansConfig(k=k, max_iter=max_iter), backend=backend,
+        n_groups=n_groups, n_reassign=n_reassign, seed=seed)
+    return res.centroids, res.labels, res
+
+
 def compress_kv_cache(cache: dict, k: int, valid_len: int) -> Tuple[dict, float]:
     """Replace the K/V caches with their codebook reconstruction.
 

@@ -135,15 +135,20 @@ class Backend:
     name: str
     # (x, c, k, carry) -> (StepResult, carry): ONE logical pass over X.
     step_fn: Callable = None
-    # Optional natively-batched step: (x, cs, k, carries) -> (StepResult
-    # with a leading R axis, carries), where cs is (R, K, d) and x is
-    # (N, d) shared or (R, N, d) per-problem.  The batched driver prefers
-    # this over jax.vmap(step_fn) when set — a hand-batched formulation
-    # can share the X stream across restarts and use matmul cluster stats
-    # where the vmapped scatter would serialise; the pallas/fused engines
-    # run all R restarts as the leading grid axis of ONE kernel launch
-    # instead of vmapping pl.pallas_call.  Must match step_fn's semantics
-    # per row (same labels/energy up to reduction order).
+    # Optional natively-batched step: (x, cs, k, carries, w=None) ->
+    # (StepResult with a leading R axis, carries), where cs is (R, K, d)
+    # and x is (N, d) shared or (R, N, d) per-problem.  The batched driver
+    # prefers this over jax.vmap(step_fn) when set — a hand-batched
+    # formulation can share the X stream across restarts and use matmul
+    # cluster stats where the vmapped scatter would serialise; the
+    # pallas/fused engines run all R restarts as the leading grid axis of
+    # ONE kernel launch instead of vmapping pl.pallas_call.  Must match
+    # step_fn's semantics per row (same labels/energy up to reduction
+    # order).  ``w`` (R, N) >= 0, when given, scales each row's
+    # contribution to sums/counts/energy per problem — the hierarchy
+    # engine's padding mask (w = 0 rows vanish exactly, DESIGN.md
+    # §Hierarchy); labels/min_sqdist stay per-row and unweighted, exactly
+    # the minibatch contract lifted to the restart axis.
     batched_step_fn: Optional[Callable] = None
     # Optional weighted step for streaming chunks (DESIGN.md §Streaming):
     # (x, c, k, w, carry) -> (StepResult, carry), where w (N,) >= 0 scales
@@ -177,14 +182,24 @@ class Backend:
     def step(self, x, c, k, carry=()):
         return self.step_fn(x, c, k, carry)
 
-    def batched_step(self, x, cs, k, carries, x_batched: bool = False):
+    def batched_step(self, x, cs, k, carries, x_batched: bool = False,
+                     w=None):
         """R restarts' steps at once; falls back to vmapping ``step``.
-        ``x_batched`` marks x as (R, N, d) rather than shared (N, d)."""
+        ``x_batched`` marks x as (R, N, d) rather than shared (N, d);
+        ``w`` (R, N) adds per-problem row weights (see batched_step_fn)."""
         if self.batched_step_fn is not None:
-            return self.batched_step_fn(x, cs, k, carries)
-        return jax.vmap(lambda xx, cc, cr: self.step_fn(xx, cc, k, cr),
-                        in_axes=(0 if x_batched else None, 0, 0))(
-                            x, cs, carries)
+            return self.batched_step_fn(x, cs, k, carries, w=w)
+        xa = 0 if x_batched else None
+        if w is None:
+            return jax.vmap(lambda xx, cc, cr: self.step_fn(xx, cc, k, cr),
+                            in_axes=(xa, 0, 0))(x, cs, carries)
+        # weighted fallback: the minibatch slot per problem.  Valid as the
+        # batched slot because the hierarchy driver's per-problem rows are
+        # FIXED across steps (unlike streaming chunks), so a data-dependent
+        # carry keeps meaning between calls.
+        return jax.vmap(
+            lambda xx, cc, ww, cr: self.minibatch_step(xx, cc, k, ww, cr),
+            in_axes=(xa, 0, 0, 0))(x, cs, w, carries)
 
     def minibatch_step(self, x, c, k, w, carry=()):
         """Weighted single pass over a chunk (DESIGN.md §Streaming).
@@ -328,8 +343,8 @@ def distribute(backend: Backend, axes: Sequence[str]) -> Backend:
     # skip the reduction; when the local backend has none, None makes the
     # batched driver fall back to vmapping the psum-wrapped step above.
     if backend.batched_step_fn is not None:
-        def batched_step_fn(x, cs, k, carries):
-            res, carries = backend.batched_step_fn(x, cs, k, carries)
+        def batched_step_fn(x, cs, k, carries, w=None):
+            res, carries = backend.batched_step_fn(x, cs, k, carries, w=w)
             return StepResult(
                 labels=res.labels,
                 min_sqdist=res.min_sqdist,
@@ -438,9 +453,9 @@ def instrument(backend: Backend, on_step: Callable[[], None]) -> Backend:
         return backend.step_fn(x, c, k, carry)
 
     if backend.batched_step_fn is not None:
-        def batched_step_fn(x, cs, k, carries):
+        def batched_step_fn(x, cs, k, carries, w=None):
             jax.debug.callback(lambda: on_step())
-            return backend.batched_step_fn(x, cs, k, carries)
+            return backend.batched_step_fn(x, cs, k, carries, w=w)
     else:
         batched_step_fn = None
 

@@ -91,8 +91,8 @@ def _batched_step(precision: Precision):
     R*N*K approaches device memory, use the blocked backend: its vmapped
     fallback bounds the distance intermediate at (R, block_n, K) per
     step and never materialises a one-hot (DESIGN.md §Batching)."""
-    def batched_step_fn(x, cs, k, carries):
-        # x: (N, d) shared or (R, N, d); cs: (R, K, d)
+    def batched_step_fn(x, cs, k, carries, w=None):
+        # x: (N, d) shared or (R, N, d); cs: (R, K, d); w: None or (R, N)
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(cs)
         c_sq = jnp.sum(cc * cc, axis=-1)                       # (R, K)
@@ -107,14 +107,22 @@ def _batched_step(precision: Precision):
         labels = jnp.argmin(d2, axis=-1).astype(jnp.int32)     # (R, N)
         mind = jnp.min(d2, axis=-1).astype(precision.accum_dtype)
         onehot = jax.nn.one_hot(labels, k, dtype=precision.accum_dtype)
+        if w is not None:
+            # per-problem row weights scale the one-hot, so sums/counts/
+            # energy weight in the same contraction; labels/mind stay
+            # unweighted (the minibatch contract on the restart axis)
+            onehot = onehot * w.astype(precision.accum_dtype)[:, :, None]
         xa = x.astype(precision.accum_dtype)
         if x.ndim == 2:
             sums = jnp.einsum("rnk,nd->rkd", onehot, xa)
         else:
             sums = jnp.einsum("rnk,rnd->rkd", onehot, xa)
         counts = jnp.sum(onehot, axis=1)                       # (R, K)
-        return StepResult(labels, mind, sums, counts,
-                          jnp.sum(mind, axis=-1)), carries
+        if w is None:
+            energy = jnp.sum(mind, axis=-1)
+        else:
+            energy = jnp.sum(mind * w.astype(mind.dtype), axis=-1)
+        return StepResult(labels, mind, sums, counts, energy), carries
     return batched_step_fn
 
 

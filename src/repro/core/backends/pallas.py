@@ -112,7 +112,17 @@ def _split_step(precision: Precision):
 
 
 def _split_batched(precision: Precision):
-    def batched_step_fn(x, cs, k, carries):
+    def batched_step_fn(x, cs, k, carries, w=None):
+        if w is not None:
+            # the split engine's update kernel takes one (N,) weight
+            # vector; per-problem weights route through the vmapped
+            # minibatch slot (one launch per problem — the fused engine
+            # is the batched-weighted fast path)
+            mb = _split_minibatch(precision)
+            return jax.vmap(
+                lambda xx, cc, ww, cr: mb(xx, cc, k, ww, cr),
+                in_axes=(0 if x.ndim == 3 else None, 0, 0, 0))(
+                    x, cs, w, carries)
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(cs)
         labels, mind = assignment_pallas(xc, cc, interpret=_interpret())
@@ -159,11 +169,11 @@ def _fused_step(precision: Precision):
 
 
 def _fused_batched(precision: Precision):
-    def batched_step_fn(x, cs, k, carries):
+    def batched_step_fn(x, cs, k, carries, w=None):
         xc = precision.compute_cast(x)
         cc = precision.compute_cast(cs)
         labels, mind, sums, counts, energy = fused_lloyd_pallas(
-            xc, cc, interpret=_interpret())
+            xc, cc, w, interpret=_interpret())
         return _pack(precision, labels, mind, sums, counts, energy), carries
     return batched_step_fn
 
@@ -247,8 +257,8 @@ def fused_bounds_backend(precision: Precision = DEFAULT_PRECISION,
     def step_fn(x, c, k, carry):
         return _run(x, c, k, carry)
 
-    def batched_step_fn(x, cs, k, carries):
-        return _run(x, cs, k, carries, batched=True)
+    def batched_step_fn(x, cs, k, carries, w=None):
+        return _run(x, cs, k, carries, w=w, batched=True)
 
     def minibatch_step_fn(x, c, k, w, carry):
         return _run(x, c, k, carry, w=w)

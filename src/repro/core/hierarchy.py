@@ -1,0 +1,405 @@
+"""Million-cluster hierarchical engine: k²-means divide-and-conquer as
+ONE batched Anderson-accelerated program (DESIGN.md §Hierarchy).
+
+Flat Algorithm 1 at K clusters pays O(N·K·d) per X-pass; past ~10^4
+clusters the (N, K) distance work dominates everything else.  The k²-means
+observation (Agustsson & Timofte; PAPERS.md) is that a codebook of K
+centroids factors: cluster X into G ≈ √K super-clusters, then solve an
+independent K/G-cluster problem *inside* each super-cluster.  Each
+sub-problem sees only its own rows, so total assignment work drops from
+N·K to roughly N·(G + K/G) — at K = 2^16 that is a ~128x arithmetic
+reduction before any bound or kernel tricks.
+
+What makes this module an *engine* rather than a loop over `aa_kmeans` is
+that all G sub-problems run as ONE `aa_kmeans_batched` call:
+
+  * the partition step lays every super-cluster's rows into its own
+    padded stripe of a (G, N_max, d) tensor with NO host argsort —
+    `counting_sort_perm_segmented` against the offset table
+    ``arange(G) * N_max`` (core/locality.py);
+  * padding rows carry weight 0 through the drivers' first-class
+    per-problem row weights, so they vanish exactly from cluster stats,
+    energy AND the per-problem masked convergence check;
+  * seeding is segment-aware: `batched_init(..., weights=...)` never
+    seeds a padding row;
+  * best-of-n_init selection is per-problem: `select_best(groups=...)`.
+
+Reassignment rounds then repair the one thing the decomposition got
+wrong — rows whose nearest router (super-centroid) changed after the
+sub-solves: rows move between sub-problems, the partition is rebuilt,
+and all G sub-problems re-solve warm from their previous centroids.  A
+best-snapshot energy guard makes the returned result monotone: a round
+that increases total energy is never returned.
+
+The result flattens to a (K, d) codebook (group-major: group g owns rows
+[g·k_sub, (g+1)·k_sub)) plus labels in ORIGINAL row order, and the
+(routers, group offsets) pair is a free two-level routing index —
+`repro.serving.closure.hierarchy_closure_index` turns it into a serving
+`ClosureIndex` with zero extra clustering work.
+
+Persistence: the round loop is a pure state -> state function, so a
+round-granular snapshot (`KIND_HIERARCHY`) restores a run bit-exactly —
+`resume_from` a snapshot and the remaining rounds replay what the
+uninterrupted run would have done.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import serialize
+from repro.core.init_schemes import batched_init, kmeanspp_init
+from repro.core.kmeans import (
+    BackendLike,
+    KMeansConfig,
+    aa_kmeans,
+    aa_kmeans_batched,
+    resolve_backend,
+    select_best,
+)
+from repro.core.locality import counting_sort_perm_segmented
+from repro.runtime.metrics import as_metrics
+from repro.runtime.metrics import should_stop as _metrics_stop
+from repro.runtime.writer import write_snapshot
+
+KIND_HIERARCHY = serialize.KIND_HIERARCHY
+
+
+class HierarchyResult(NamedTuple):
+    """Flattened two-level solve: codebook + original-row-order labels
+    plus the routing structure that produced them."""
+
+    centroids: jax.Array      # (K, d) codebook, group-major
+    labels: jax.Array         # (N,) int32 global labels, ORIGINAL row order
+    energy: jax.Array         # scalar total energy (sum of sub_energies)
+    routers: jax.Array        # (G, d) super-centroids (level-1 routers)
+    group_offsets: jax.Array  # (G+1,) int32; group g owns [off[g], off[g+1])
+    labels_super: jax.Array   # (N,) int32 super-cluster per row
+    sub_energies: jax.Array   # (G,) per-group masked energies
+    n_rounds: int             # reassignment rounds executed
+
+
+def default_n_groups(k: int) -> int:
+    """The divisor of ``k`` nearest √k — the k²-means balance point where
+    per-row routing work G + K/G is minimised.  A prime ``k`` has no
+    useful divisor and degenerates to G = 1 (the flat solve)."""
+    if k <= 0:
+        raise ValueError(f"k must be positive; got {k}")
+    root = math.sqrt(k)
+    best = 1
+    for g in range(1, int(root) + 1):
+        if k % g == 0:
+            for cand in (g, k // g):
+                if abs(cand - root) < abs(best - root):
+                    best = cand
+    return best
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _partition(x, labels_super, g: int, k_sub: int, pad_multiple: int,
+               sort_tile):
+    """Stripe rows by super-cluster label into (G, N_max, d) + weights.
+
+    N_max is the max group population rounded up to ``pad_multiple``
+    (bucketing the compiled shapes so reassignment rounds rarely
+    recompile), floored at k_sub (every sub-problem must offer at least
+    k_sub candidate seed rows) and capped at N.  Returns
+    ``(xg, wg, perm, n_max)`` where ``wg`` is 1 for live rows, 0 for
+    padding — the drivers' native per-problem weight column."""
+    n, d = x.shape
+    counts = jnp.bincount(labels_super, length=g)
+    counts_max = int(jax.device_get(jnp.max(counts)))
+    n_max = min(max(_ceil_to(counts_max, pad_multiple), k_sub), n)
+    n_max = max(n_max, counts_max)   # the cap at N never loses a row
+    offsets = jnp.arange(g, dtype=jnp.int32) * n_max
+    perm, _, _ = counting_sort_perm_segmented(
+        labels_super, g, offsets, g * n_max, sort_tile=sort_tile)
+    # Sentinel perm slots (== N, the unfilled padding) gather the zero row.
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xg = jnp.take(x_pad, perm, axis=0).reshape(g, n_max, d)
+    wg = (perm < n).astype(x.dtype).reshape(g, n_max)
+    return xg, wg, perm, n_max
+
+
+def _flatten(best, perm, g: int, k_sub: int, n: int, n_max: int):
+    """(G,...) winners -> global codebook / labels / energies.
+
+    Global label = g·k_sub + local label.  The inverse scatter sends
+    every sentinel perm slot to index N of an (N+1,) buffer — the one
+    collision point — and slices it off, recovering ORIGINAL row order
+    without a second sort."""
+    d = best.centroids.shape[-1]
+    codebook = best.centroids.reshape(g * k_sub, d)
+    gid = jnp.repeat(jnp.arange(g, dtype=jnp.int32), n_max)
+    codes = gid * k_sub + best.labels.reshape(-1).astype(jnp.int32)
+    labels = jnp.zeros((n + 1,), jnp.int32).at[perm].set(codes)[:n]
+    sub_e = best.energy.astype(jnp.float32)
+    return codebook, labels, sub_e, jnp.sum(sub_e)
+
+
+def _routers_of(x, labels_super, g: int, prev):
+    """Per-super-cluster row means; an emptied group keeps its previous
+    router instead of collapsing to the origin (which would vacuum up
+    rows on the next reassignment)."""
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    sums = jnp.zeros((g, x.shape[1]), acc).at[labels_super].add(x.astype(acc))
+    cnt = jnp.zeros((g,), acc).at[labels_super].add(
+        jnp.ones((x.shape[0],), acc))
+    mean = (sums / jnp.maximum(cnt, 1.0)[:, None]).astype(x.dtype)
+    return jnp.where((cnt > 0)[:, None], mean, prev)
+
+
+def hierarchy_state_like(x, k: int, n_groups: int):
+    """ShapeDtypeStruct tree matching the round-granular snapshot —
+    derived from the problem shape so `serialize.restore` can never
+    drift from the engine (DESIGN.md §Persistence)."""
+    n, d = x.shape
+    g = int(n_groups)
+    k_sub = k // g
+    sds = jax.ShapeDtypeStruct
+    f32, i32 = jnp.float32, jnp.int32
+    return {
+        "labels_super": sds((n,), i32),
+        "c_subs": sds((g, k_sub, d), x.dtype),
+        "routers": sds((g, d), x.dtype),
+        "best_centroids": sds((k, d), x.dtype),
+        "best_labels": sds((n,), i32),
+        "best_labels_super": sds((n,), i32),
+        "best_routers": sds((g, d), x.dtype),
+        "best_sub_e": sds((g,), f32),
+        "best_energy": sds((), f32),
+    }
+
+
+def _solve_groups(xg, wg, c0s, sub_cfg, bk, g: int, n_init: int):
+    """All G sub-problems (x n_init seeds) as ONE batched AA program,
+    reduced to per-group winners."""
+    if n_init > 1:
+        xg = jnp.repeat(xg, n_init, axis=0)
+        wg = jnp.repeat(wg, n_init, axis=0)
+    res = aa_kmeans_batched(xg, c0s, sub_cfg, backend=bk, weights=wg)
+    groups = jnp.repeat(jnp.arange(g, dtype=jnp.int32), n_init)
+    return select_best(res, groups=groups, n_groups=g)
+
+
+def _check_hier_meta(meta: dict, k: int, g: int, what: str):
+    for name, want in (("k", k), ("n_groups", g)):
+        got = meta.get(name)
+        if got is not None and int(got) != int(want):
+            raise ValueError(
+                f"{what}: snapshot was taken at {name}={got}, this run "
+                f"uses {name}={want} — resume must target the identical "
+                f"hierarchy configuration")
+
+
+def aa_kmeans_hierarchical(x: jax.Array, k: int,
+                           cfg: Optional[KMeansConfig] = None,
+                           backend: BackendLike = None, *,
+                           n_groups: Optional[int] = None,
+                           n_init: int = 1,
+                           init: str = "kmeans++",
+                           seed: int = 0,
+                           n_reassign: int = 2,
+                           super_max_iter: int = 50,
+                           pad_multiple: int = 256,
+                           sort_tile=None,
+                           c0s: Optional[jax.Array] = None,
+                           metrics=None,
+                           checkpoint_dir=None,
+                           resume_from=None,
+                           keep_last_n: int = 0,
+                           keep_every_m: int = 0) -> HierarchyResult:
+    """Two-level Anderson-accelerated K-Means (module docstring).
+
+    ``cfg`` configures the SUB-problems (its ``k`` must equal the global
+    ``k``; the engine derives the k/G sub-config); ``backend`` is any
+    solver backend and is shared by the super-solve, the batched
+    sub-solves and the reassignment step.  ``n_groups`` defaults to the
+    divisor of k nearest √k; ``n_init`` seeds per sub-problem compete
+    through per-group `select_best` (warm reassignment rounds keep a
+    single warm seed).  ``c0s`` overrides the cold seeds — (n_init, K, d)
+    when G = 1, else (G·n_init, K/G, d) — for conformance tests that pin
+    the seeding.
+
+    G = 1 degenerates to the flat batched solve: shared X, no weights, no
+    reassignment — bitwise-identical to
+    ``select_best(aa_kmeans_batched(x, c0s, cfg))`` by construction.
+
+    ``n_reassign`` nearest-router repair rounds run after the initial
+    solve; each recomputes routers as super-cluster row means, moves rows
+    to their nearest router, rebuilds the partition and re-solves all G
+    sub-problems warm.  The returned result is the best round under total
+    energy (monotone by snapshot), and the loop exits early when no row
+    moves or a ``metrics=`` sink (e.g. `EarlyStopHook`) trips.
+
+    ``checkpoint_dir`` snapshots the round state (``KIND_HIERARCHY``)
+    after every round; ``resume_from`` (a path or a restored state dict
+    plus its ``round`` in meta) replays the remaining rounds
+    bit-identically to the uninterrupted run.
+    """
+    x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"x must be (N, d); got shape {x.shape}")
+    n, d = x.shape
+    if cfg is None:
+        cfg = KMeansConfig(k=k)
+    if cfg.k != k:
+        raise ValueError(f"cfg.k={cfg.k} disagrees with k={k}")
+    if not (0 < k <= n):
+        raise ValueError(f"need 0 < k <= N; got k={k}, N={n}")
+    g = int(n_groups) if n_groups else default_n_groups(k)
+    if g < 1 or k % g != 0:
+        raise ValueError(
+            f"n_groups={g} must be a positive divisor of k={k} "
+            f"(uniform k_sub keeps the batched solve one program); "
+            f"default_n_groups(k) picks the divisor nearest √k")
+    k_sub = k // g
+    bk = resolve_backend(backend, cfg=cfg)
+    mx = as_metrics(metrics)
+    sub_cfg = dataclasses.replace(cfg, k=k_sub)
+    root = jax.random.PRNGKey(seed)
+    i32 = jnp.int32
+
+    # -- G = 1: literally the flat batched solve ---------------------------
+    if g == 1:
+        if checkpoint_dir is not None or resume_from is not None:
+            raise ValueError(
+                "G=1 degenerates to the flat batched solve, which has its "
+                "own checkpoint kind — call aa_kmeans_batched with "
+                "checkpoint_dir/resume_from directly")
+        if c0s is None:
+            keys = jax.random.split(jax.random.fold_in(root, 1), n_init)
+            c0s = batched_init(init, keys, x, k)
+        best = select_best(aa_kmeans_batched(x, c0s, cfg, backend=bk,
+                                             metrics=metrics))
+        labels = best.labels.astype(i32)
+        return HierarchyResult(
+            centroids=best.centroids, labels=labels,
+            energy=best.energy.astype(jnp.float32),
+            routers=jnp.mean(x, axis=0, dtype=jnp.float32
+                             ).astype(x.dtype)[None],
+            group_offsets=jnp.asarray([0, k], i32),
+            labels_super=jnp.zeros((n,), i32),
+            sub_energies=best.energy.astype(jnp.float32)[None],
+            n_rounds=0)
+
+    # -- resume or cold round 0 --------------------------------------------
+    state = None
+    start_round = 0
+    if resume_from is not None:
+        like = hierarchy_state_like(x, k, g)
+        if isinstance(resume_from, (str, bytes)) or hasattr(
+                resume_from, "__fspath__"):
+            state, meta = serialize.restore(resume_from, like,
+                                            expect_kind=KIND_HIERARCHY)
+            _check_hier_meta(meta, k, g, str(resume_from))
+            start_round = int(meta.get("round", meta.get("t", 0))) + 1
+        else:
+            state, meta = resume_from
+            _check_hier_meta(meta, k, g, "resume_from")
+            start_round = int(meta["round"]) + 1
+        state = {name: jnp.asarray(a) for name, a in state.items()}
+
+    def _snapshot(state, r):
+        if checkpoint_dir is None:
+            return
+        write_snapshot(checkpoint_dir, state, kind=KIND_HIERARCHY, step=r,
+                       extra={"round": r, "k": k, "n_groups": g,
+                              "k_sub": k_sub, "backend": bk.name},
+                       keep_last_n=keep_last_n, keep_every_m=keep_every_m)
+
+    last_round = start_round - 1
+    if state is None:
+        t0 = time.perf_counter()
+        super_cfg = dataclasses.replace(cfg, k=g, max_iter=super_max_iter)
+        c0_super = kmeanspp_init(jax.random.fold_in(root, 0), x, g)
+        sup = aa_kmeans(x, c0_super, super_cfg, backend=bk)
+        labels_super = sup.labels.astype(i32)
+        routers = sup.centroids
+
+        xg, wg, perm, n_max = _partition(x, labels_super, g, k_sub,
+                                         pad_multiple, sort_tile)
+        if c0s is None:
+            keys = jax.random.split(jax.random.fold_in(root, 1),
+                                    g * n_init)
+            w_rep = wg if n_init == 1 else jnp.repeat(wg, n_init, axis=0)
+            x_rep = xg if n_init == 1 else jnp.repeat(xg, n_init, axis=0)
+            c0s = batched_init(init, keys, x_rep, k_sub, weights=w_rep)
+        elif c0s.shape != (g * n_init, k_sub, d):
+            raise ValueError(
+                f"c0s must be (G*n_init, K/G, d) = "
+                f"({g * n_init}, {k_sub}, {d}); got {c0s.shape}")
+        best = _solve_groups(xg, wg, c0s, sub_cfg, bk, g, n_init)
+        codebook, labels, sub_e, total = _flatten(best, perm, g, k_sub,
+                                                  n, n_max)
+        state = {
+            "labels_super": labels_super,
+            "c_subs": best.centroids,
+            "routers": routers,
+            "best_centroids": codebook,
+            "best_labels": labels,
+            "best_labels_super": labels_super,
+            "best_routers": routers,
+            "best_sub_e": sub_e,
+            "best_energy": total.astype(jnp.float32),
+        }
+        last_round = 0
+        mx.log_scalars(0, {"energy": total,
+                           "energy_best": state["best_energy"],
+                           "moved_frac": 1.0, "n_max": n_max,
+                           "round_s": time.perf_counter() - t0})
+        _snapshot(state, 0)
+        start_round = 1
+        if _metrics_stop(mx):
+            n_reassign = 0
+
+    # -- nearest-router reassignment rounds --------------------------------
+    for r in range(start_round, n_reassign + 1):
+        t0 = time.perf_counter()
+        routers = _routers_of(x, state["labels_super"], g, state["routers"])
+        ls_new = bk.assign(x, routers).labels.astype(i32)
+        moved = int(jax.device_get(
+            jnp.sum(ls_new != state["labels_super"])))
+        if moved == 0:
+            break
+        xg, wg, perm, n_max = _partition(x, ls_new, g, k_sub,
+                                         pad_multiple, sort_tile)
+        best = _solve_groups(xg, wg, state["c_subs"], sub_cfg, bk, g,
+                             n_init=1)
+        codebook, labels, sub_e, total = _flatten(best, perm, g, k_sub,
+                                                  n, n_max)
+        total32 = total.astype(jnp.float32)
+        improved = bool(jax.device_get(total32 <= state["best_energy"]))
+        state = dict(state, labels_super=ls_new, c_subs=best.centroids,
+                     routers=routers)
+        if improved:
+            state.update(best_centroids=codebook, best_labels=labels,
+                         best_labels_super=ls_new, best_routers=routers,
+                         best_sub_e=sub_e, best_energy=total32)
+        last_round = r
+        mx.log_scalars(r, {"energy": total,
+                           "energy_best": state["best_energy"],
+                           "moved_frac": moved / n, "n_max": n_max,
+                           "round_s": time.perf_counter() - t0})
+        _snapshot(state, r)
+        if _metrics_stop(mx):
+            break
+
+    return HierarchyResult(
+        centroids=state["best_centroids"],
+        labels=state["best_labels"],
+        energy=state["best_energy"],
+        routers=state["best_routers"],
+        group_offsets=jnp.arange(g + 1, dtype=i32) * k_sub,
+        labels_super=state["best_labels_super"],
+        sub_energies=state["best_sub_e"],
+        n_rounds=max(last_round, 0))

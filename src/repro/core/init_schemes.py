@@ -38,27 +38,52 @@ def _validate_seeding(x: jax.Array, k: int, scheme: str) -> None:
             f"samples; need k <= n")
 
 
-def random_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """Uniformly sample K distinct rows of X."""
+def random_init(key: jax.Array, x: jax.Array, k: int,
+                w=None) -> jax.Array:
+    """Uniformly sample K distinct rows of X.  ``w`` (N,) >= 0 biases the
+    draw (p ∝ w) — a zero-weight (padding) row is never picked."""
     _validate_seeding(x, k, "random_init")
-    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    p = None if w is None else w / jnp.maximum(jnp.sum(w), 1e-30)
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False, p=p)
     return x[idx]
 
 
 @partial(jax.jit, static_argnames=("k",))
-def kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
-    """K-Means++: D^2-weighted sequential sampling."""
+def kmeanspp_init(key: jax.Array, x: jax.Array, k: int,
+                  w=None) -> jax.Array:
+    """K-Means++: D^2-weighted sequential sampling.
+
+    ``w`` (N,) >= 0 makes the sampling SEGMENT-AWARE: the first pick
+    draws p ∝ w and every D^2 round draws p ∝ w·D^2, so a zero-weight
+    row — the hierarchy engine's segment padding — is never seeded
+    (DESIGN.md §Hierarchy).  ``w=None`` keeps the classic scheme
+    bit-for-bit (the unweighted draws use different PRNG primitives, so
+    ``w=ones`` is distributionally equal but not bitwise)."""
     _validate_seeding(x, k, "kmeanspp_init")
     n = x.shape[0]
     key, sub = jax.random.split(key)
-    first = jax.random.randint(sub, (), 0, n)
+    if w is None:
+        first = jax.random.randint(sub, (), 0, n)
+    else:
+        w = w.astype(jnp.float32)
+        first = jax.random.categorical(
+            sub, jnp.log(jnp.maximum(w / jnp.maximum(jnp.sum(w), 1e-30),
+                                     1e-38)))
     c0 = x[first]
     mind = jnp.sum((x - c0) ** 2, axis=-1)
 
     def body(carry, key_t):
         mind, _ = carry
-        # Sample proportional to D^2 (guard the all-zero corner case).
-        p = mind / jnp.maximum(jnp.sum(mind), 1e-30)
+        # Sample proportional to (w ·) D^2.  Weighted all-zero corner
+        # (every live row already a centroid): fall back to w itself so
+        # padding rows stay unseedable; unweighted keeps the classic
+        # uniform fallback via the clamp below.
+        if w is None:
+            score = mind
+        else:
+            s = mind * w
+            score = jnp.where(jnp.sum(s) > 0, s, w)
+        p = score / jnp.maximum(jnp.sum(score), 1e-30)
         idx = jax.random.categorical(key_t, jnp.log(jnp.maximum(p, 1e-38)))
         c_new = x[idx]
         d_new = jnp.sum((x - c_new) ** 2, axis=-1)
@@ -228,20 +253,32 @@ def make_init(name: str):
 
 
 def batched_init(name: str, keys: jax.Array, x: jax.Array,
-                 k: int) -> jax.Array:
+                 k: int, weights=None) -> jax.Array:
     """Seed R restarts at once: (R, 2) keys -> (R, K, d) centroid stacks.
 
     ``x`` is (N, d) shared across restarts, or (R, N, d) one dataset per
     problem.  Vmap-safe schemes produce the whole stack in one traced
     computation (feeding the batched solver without a host round-trip);
     the host-loop schemes (bf, clarans) are looped and stacked, which is
-    semantically identical — seeding cost only, never solver cost."""
+    semantically identical — seeding cost only, never solver cost.
+
+    ``weights`` (R, N) >= 0 makes the seeding segment-aware (the
+    hierarchy engine's padded sub-problems: padding rows weigh 0 and are
+    never seeded) — supported for the weighted schemes random/kmeans++
+    only."""
     fn = make_init(name)
     x_axis = 0 if x.ndim == 3 else None
     if x_axis == 0 and x.shape[0] != keys.shape[0]:
         raise ValueError(
             f"batched x has {x.shape[0]} problems but got "
             f"{keys.shape[0]} keys")
+    if weights is not None:
+        if name not in ("random", "kmeans++"):
+            raise ValueError(
+                f"batched_init(weights=...) supports the weighted schemes "
+                f"'random' and 'kmeans++' only; got {name!r}")
+        return jax.vmap(lambda kk, xx, ww: fn(kk, xx, k, w=ww),
+                        in_axes=(0, x_axis, 0))(keys, x, weights)
     if name in VMAP_SAFE_INITS:
         return jax.vmap(lambda kk, xx: fn(kk, xx, k),
                         in_axes=(0, x_axis))(keys, x)

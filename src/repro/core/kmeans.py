@@ -56,7 +56,7 @@ from repro.core.locality import maybe_reorder
 from repro.core.minibatch import (MiniBatchConfig, MiniBatchResult,
                                   guard_pick, minibatch_init,
                                   minibatch_iteration, run_epoch)
-from repro.runtime.metrics import as_metrics
+from repro.runtime.metrics import as_metrics, should_stop as _metrics_stop
 from repro.runtime.writer import CheckpointWriter, write_snapshot
 
 
@@ -128,12 +128,18 @@ def resolve_backend(backend: BackendLike, ops: Optional[LloydOps] = None,
     return get_backend("dense")
 
 
-def _init_state(x, c0, cfg: KMeansConfig, backend: Backend) -> _LoopState:
+def _init_state(x, c0, cfg: KMeansConfig, backend: Backend,
+                w=None) -> _LoopState:
     k = cfg.k
     # Line 1:  C^1 = C_AU^1 = G(C^0);  F^0 = C^1 - C^0;  E^0 = +inf
     # — one step: the same pass yields E(C^0), P^0 and the stats of G(C^0).
+    # ``w`` (N,) routes the init through the weighted slot — the hierarchy
+    # driver's padded rows (w = 0) must vanish from the seed stats too.
     carry = backend.init_carry(x, c0, k)
-    res0, carry = backend.step(x, c0, k, carry)
+    if w is None:
+        res0, carry = backend.step(x, c0, k, carry)
+    else:
+        res0, carry = backend.minibatch_step(x, c0, k, w, carry)
     c1 = backend.centroids_from_step(x, res0, k, c0)
     aa_state = anderson.aa_init(k * x.shape[1], cfg.aa, x.dtype)
     aa_state = anderson.aa_seed(aa_state, (c1 - c0).reshape(-1),
@@ -398,6 +404,8 @@ def _aa_kmeans_segmented(x, c0, cfg: KMeansConfig, bk: Backend,
                 "n_accepted": float(int(state.n_acc)),
                 "converged": float(bool(state.converged)),
                 "segment_s": seg_s, **_bound_scalars(state.carry)})
+            if _metrics_stop(mx):
+                break   # EarlyStopHook: improvement per segment stalled
     finally:
         if writer is not None:
             writer.close()   # drain + join; a failed write fails the run
@@ -510,7 +518,7 @@ def _is_active(state: _LoopState, max_iter: int):
 
 def _complete_batched_iteration(x, res, carry, bst: _BatchedState,
                                 cfg: KMeansConfig,
-                                backend: Backend) -> _BatchedState:
+                                backend: Backend, w=None) -> _BatchedState:
     """Per-restart completion logic of the split-phase batched body:
     everything in Algorithm 1's loop body *after* the backend step.
     Operates on one restart's (unbatched) state — the driver vmaps it."""
@@ -519,8 +527,18 @@ def _complete_batched_iteration(x, res, carry, bst: _BatchedState,
     c_eval = jnp.where(pending, st.c_au, st.c)
 
     # Line 4 (phase A only): the revert step never checks convergence.
+    # Under per-problem weights the check is MASKED: a padding row (w = 0)
+    # never holds up convergence — its label chases centroids it does not
+    # influence, so it may flip forever on ties while the real rows are
+    # long settled (DESIGN.md §Hierarchy).
+    if w is None:
+        lab_now, lab_prev = res.labels, st.p_prev
+    else:
+        live = w > 0
+        lab_now = jnp.where(live, res.labels, 0)
+        lab_prev = jnp.where(live, st.p_prev, 0)
     conv_now = jnp.logical_and(~pending,
-                               backend.all_equal(res.labels, st.p_prev))
+                               backend.all_equal(lab_now, lab_prev))
     # Lines 7-11 (phase A only): m adjusts before the revert decision.
     aa_adj = anderson.adjust_m(st.aa, res.energy, st.e_prev, st.e_prev2,
                                cfg.aa)
@@ -559,7 +577,8 @@ def _complete_batched_iteration(x, res, carry, bst: _BatchedState,
 
 
 def _batched_body(x, bst: _BatchedState, cfg: KMeansConfig,
-                  backend: Backend, x_batched: bool) -> _BatchedState:
+                  backend: Backend, x_batched: bool,
+                  w=None) -> _BatchedState:
     """One *backend step* of Algorithm 1 for the whole batch.
 
     Under vmap, ``lax.cond`` lowers to a select that executes both
@@ -587,16 +606,23 @@ def _batched_body(x, bst: _BatchedState, cfg: KMeansConfig,
     st = bst.inner
     c_eval = jnp.where(bst.pending[:, None, None], st.c_au, st.c)
     res, carry = backend.batched_step(x, c_eval, cfg.k, st.carry,
-                                      x_batched=x_batched)
+                                      x_batched=x_batched, w=w)
+    if w is None:
+        return jax.vmap(
+            lambda xx, r, cr, ob: _complete_batched_iteration(
+                xx, r, cr, ob, cfg, backend),
+            in_axes=(0 if x_batched else None, 0, 0, 0))(x, res, carry, bst)
     return jax.vmap(
-        lambda xx, r, cr, ob: _complete_batched_iteration(
-            xx, r, cr, ob, cfg, backend),
-        in_axes=(0 if x_batched else None, 0, 0, 0))(x, res, carry, bst)
+        lambda xx, r, cr, ob, ww: _complete_batched_iteration(
+            xx, r, cr, ob, cfg, backend, w=ww),
+        in_axes=(0 if x_batched else None, 0, 0, 0, 0))(x, res, carry, bst,
+                                                        w)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "backend", "x_batched"))
 def _run_batched_segment(x, bst: _BatchedState, max_trips, cfg: KMeansConfig,
-                         backend: Backend, x_batched: bool) -> _BatchedState:
+                         backend: Backend, x_batched: bool,
+                         w=None) -> _BatchedState:
     """Run up to ``max_trips`` batched loop trips (one backend step each).
 
     Restarts' iteration counters drift apart (a rejected iteration spans
@@ -611,7 +637,7 @@ def _run_batched_segment(x, bst: _BatchedState, max_trips, cfg: KMeansConfig,
 
     def body(carry):
         b, i = carry
-        new_b = _batched_body(x, b, cfg, backend, x_batched=x_batched)
+        new_b = _batched_body(x, b, cfg, backend, x_batched=x_batched, w=w)
         new_b = _tree_select_rows(_is_active(b.inner, cfg.max_iter),
                                   new_b, b)
         return new_b, i + 1
@@ -648,13 +674,20 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
                       keep_every_m: int = 0,
                       metrics=None,
                       sync_writes: bool = False,
-                      reorder=False) -> KMeansResult:
+                      reorder=False,
+                      weights=None) -> KMeansResult:
     """Batched Algorithm 1: R independent solves in one device program.
 
     ``c0s`` is (R, K, d) — one seed set per restart/problem.  ``x`` is
     either (N, d), shared by every restart (the multi-restart case), or
     (R, N, d), one dataset per problem (the grid / per-layer-codebook
     case; all problems must share N, d and K).
+
+    ``weights`` (R, N) >= 0, when given, scales each row's contribution
+    to the per-problem cluster stats and energy — the hierarchy engine
+    passes its padding mask here (w = 0 rows vanish exactly from stats,
+    energy AND the convergence check; DESIGN.md §Hierarchy).  Labels are
+    still emitted for every row, weighted or not.
 
     The loop body is ``_batched_body``: one (natively batched or vmapped)
     backend step plus the vmapped completion logic — every backend's
@@ -686,6 +719,11 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
         raise ValueError(
             f"batched x has {x.shape[0]} problems but c0s has "
             f"{c0s.shape[0]} seed sets")
+    if weights is not None and weights.shape != \
+            (c0s.shape[0], x.shape[-2]):
+        raise ValueError(
+            f"weights must be (R, N) = ({c0s.shape[0]}, {x.shape[-2]}); "
+            f"got {weights.shape}")
     bk = maybe_reorder(resolve_backend(backend, ops, cfg), reorder)
     x_axis = 0 if x.ndim == 3 else None
 
@@ -695,12 +733,9 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
         return _aa_kmeans_batched_segmented(
             x, c0s, cfg, bk, x_axis, checkpoint_every, checkpoint_dir,
             resume_from, checkpoint_cb, keep_last_n, keep_every_m,
-            metrics, sync_writes)
+            metrics, sync_writes, weights=weights)
 
-    inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, bk),
-                      in_axes=(x_axis, 0))(x, c0s)
-    r = c0s.shape[0]
-    states = _BatchedState(inner0, jnp.zeros((r,), bool))
+    states = _init_batched_state(x, c0s, cfg, bk, x_axis, w=weights)
 
     def active(bst: _BatchedState):
         # A pending restart never has t == max_iter (completion is what
@@ -711,7 +746,8 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
         return jnp.any(active(bst))
 
     def body(bst):
-        new_bst = _batched_body(x, bst, cfg, bk, x_batched=(x_axis == 0))
+        new_bst = _batched_body(x, bst, cfg, bk, x_batched=(x_axis == 0),
+                                w=weights)
         # Masked iteration: a finished restart is a no-op — its state is
         # frozen row-wise, so the shared loop cannot perturb it.
         return _tree_select_rows(active(bst), new_bst, bst)
@@ -722,9 +758,14 @@ def aa_kmeans_batched(x: jax.Array, c0s: jax.Array, cfg: KMeansConfig,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "backend", "x_axis"))
 def _init_batched_state(x, c0s, cfg: KMeansConfig, backend: Backend,
-                        x_axis) -> _BatchedState:
-    inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, backend),
-                      in_axes=(x_axis, 0))(x, c0s)
+                        x_axis, w=None) -> _BatchedState:
+    if w is None:
+        inner0 = jax.vmap(lambda xx, cc: _init_state(xx, cc, cfg, backend),
+                          in_axes=(x_axis, 0))(x, c0s)
+    else:
+        inner0 = jax.vmap(
+            lambda xx, cc, ww: _init_state(xx, cc, cfg, backend, w=ww),
+            in_axes=(x_axis, 0, 0))(x, c0s, w)
     return _BatchedState(inner0, jnp.zeros((c0s.shape[0],), bool))
 
 
@@ -733,7 +774,8 @@ def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
                                  resume_from, checkpoint_cb,
                                  keep_last_n: int = 0, keep_every_m: int = 0,
                                  metrics=None,
-                                 sync_writes: bool = False) -> KMeansResult:
+                                 sync_writes: bool = False,
+                                 weights=None) -> KMeansResult:
     _no_trace(x, "aa_kmeans_batched")
     mx = as_metrics(metrics)
     # Worst case every Algorithm-1 iteration rejects, costing two trips.
@@ -750,14 +792,15 @@ def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
         bst = resume_from
         trips = int(jnp.max(resume_from.inner.t))   # snapshot naming only
     else:
-        bst = _init_batched_state(x, c0s, cfg, bk, x_axis)
+        bst = _init_batched_state(x, c0s, cfg, bk, x_axis, w=weights)
     writer = _make_writer(checkpoint_dir, serialize.KIND_BATCHED,
                           keep_last_n, keep_every_m, mx, sync_writes)
     try:
         while bool(jnp.any(_is_active(bst.inner, cfg.max_iter))):
             t0 = time.perf_counter()
             bst = _run_batched_segment(x, bst, jnp.asarray(every, jnp.int32),
-                                       cfg, bk, x_batched=(x_axis == 0))
+                                       cfg, bk, x_batched=(x_axis == 0),
+                                       w=weights)
             trips += every   # upper bound on the final segment; monotone
             n_active = int(jnp.sum(_is_active(bst.inner, cfg.max_iter)))
             seg_s = time.perf_counter() - t0
@@ -777,13 +820,16 @@ def _aa_kmeans_batched_segmented(x, c0s, cfg: KMeansConfig, bk: Backend,
                 "n_active": float(n_active),
                 "n_accepted_total": float(int(jnp.sum(bst.inner.n_acc))),
                 "segment_s": seg_s})
+            if _metrics_stop(mx):
+                break   # EarlyStopHook: improvement per segment stalled
     finally:
         if writer is not None:
             writer.close()
     return _result_from_state(bst.inner)
 
 
-def select_best(results: KMeansResult) -> KMeansResult:
+def select_best(results: KMeansResult, groups=None,
+                n_groups: Optional[int] = None) -> KMeansResult:
     """On-device best-of-R selection: the restart with the lowest final
     energy, as an unbatched KMeansResult.  Ties break toward the lower
     index — the same winner the sequential strict-< loop keeps.
@@ -794,9 +840,26 @@ def select_best(results: KMeansResult) -> KMeansResult:
     energies are excluded from the comparison; if every restart is
     non-finite, the returned result keeps its NaN energy so the failure
     surfaces at the caller (the estimator raises on it) instead of being
-    masked by a plausible-looking winner."""
+    masked by a plausible-looking winner.
+
+    ``groups`` (R,) int32 generalises the selection to PER-PROBLEM masked
+    energies: restart r competes only within problem groups[r] (the
+    hierarchy driver runs G sub-problems x n_init seeds as one batch),
+    and the result keeps a leading axis of ``n_groups`` — row g is group
+    g's winner.  Per-group masking uses the same finite-energy rule; a
+    group whose every restart is non-finite surfaces its energy at row g.
+    """
     e = results.energy
-    best = jnp.argmin(jnp.where(jnp.isfinite(e), e, jnp.inf))
+    masked = jnp.where(jnp.isfinite(e), e, jnp.inf)
+    if groups is None:
+        best = jnp.argmin(masked)
+        return jax.tree_util.tree_map(lambda a: a[best], results)
+    if n_groups is None:
+        raise ValueError("select_best(groups=...) needs a static n_groups")
+    gid = jnp.arange(n_groups, dtype=jnp.int32)
+    emat = jnp.where(groups.astype(jnp.int32)[None, :] == gid[:, None],
+                     masked[None, :], jnp.inf)               # (G, R)
+    best = jnp.argmin(emat, axis=1)                          # (G,)
     return jax.tree_util.tree_map(lambda a: a[best], results)
 
 
@@ -894,6 +957,8 @@ def _aa_kmeans_minibatch_segmented(chunks, weights, x_val, c0,
                 "e_fallback": float(trace.e_fallback[-1]),
                 "n_accepted_epoch": float(n_acc_epoch),
                 "epoch_s": epoch_s})
+            if _metrics_stop(mx):
+                break   # EarlyStopHook: improvement per epoch stalled
     finally:
         if writer is not None:
             writer.close()

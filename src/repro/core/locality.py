@@ -104,6 +104,24 @@ def counting_sort_perm(labels: jax.Array, k: int, *, sort_tile=None):
     labels = labels.astype(jnp.int32)
     counts = jnp.zeros((k,), jnp.int32).at[labels].add(1)
     offsets = jnp.cumsum(counts) - counts          # exclusive segment starts
+    rank = label_ranks(labels, k, sort_tile=sort_tile)
+    inv = offsets[labels] + rank
+    # inv is a permutation of arange(n), so the scatter-set is exact
+    perm = jnp.zeros((n,), jnp.int32).at[inv].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return perm, inv
+
+
+def label_ranks(labels: jax.Array, k: int, *, sort_tile=None) -> jax.Array:
+    """Within-label stable ranks: rank[i] = #{j < i : labels[j] == labels[i]}.
+
+    The counting sorts' shared inner pass, exposed for segmented callers:
+    a label-tiled one-hot column cumsum whose transient (N, sort_tile)
+    buffer is bounded by the static tile width — no argsort, no
+    data-dependent control flow.
+    """
+    n = labels.shape[0]
+    labels = labels.astype(jnp.int32)
     t = _rank_tile(n, k, sort_tile)
 
     def body(i, rank):
@@ -112,12 +130,46 @@ def counting_sort_perm(labels: jax.Array, k: int, *, sort_tile=None):
         before = jnp.cumsum(hit.astype(jnp.int32), axis=0) - hit
         return rank + jnp.sum(jnp.where(hit, before, 0), axis=1)
 
-    rank = lax.fori_loop(0, -(-k // t), body, jnp.zeros((n,), jnp.int32))
-    inv = offsets[labels] + rank
-    # inv is a permutation of arange(n), so the scatter-set is exact
-    perm = jnp.zeros((n,), jnp.int32).at[inv].set(
-        jnp.arange(n, dtype=jnp.int32))
-    return perm, inv
+    return lax.fori_loop(0, -(-k // t), body, jnp.zeros((n,), jnp.int32))
+
+
+def counting_sort_perm_segmented(labels: jax.Array, k: int,
+                                 offsets: jax.Array, out_size: int, *,
+                                 sort_tile=None):
+    """Stable counting sort against a CALLER-SUPPLIED segment-offset table.
+
+    Where `counting_sort_perm` packs segments tightly (offsets = exclusive
+    cumsum of the counts), this variant scatters label-l rows to
+    consecutive slots starting at ``offsets[l]`` in an output of static
+    length ``out_size`` — the primitive behind (a) the hierarchy engine's
+    partition step, where offsets = arange(G) * N_max lays every
+    super-cluster's rows into its own padded stripe, and (b) distribute()
+    shards sorting against a SHARED centroid order so tiles align across
+    shards (each shard passes the same offset table; DESIGN.md §Locality).
+
+    Returns ``(perm, inv, counts)``:
+
+        perm   (out_size,) i32 — slot j holds original row perm[j], or the
+               sentinel N (= labels.shape[0]) for unfilled slots, so a
+               gather from X padded with one trailing sentinel row yields
+               the padding rows directly;
+        inv    (N,) i32 — original row i lands at slot inv[i];
+        counts (k,)  i32 — per-label row counts (segment fill levels).
+
+    The caller guarantees capacity: segment l must have room for
+    counts[l] rows before the next offset (overflowing rows are silently
+    DROPPED by JAX's out-of-bounds scatter rule — check counts when the
+    offsets are not derived from the data).  Rows sharing a label keep
+    their original relative order (stability), like `counting_sort_perm`.
+    """
+    n = labels.shape[0]
+    labels = labels.astype(jnp.int32)
+    counts = jnp.zeros((k,), jnp.int32).at[labels].add(1)
+    rank = label_ranks(labels, k, sort_tile=sort_tile)
+    inv = offsets.astype(jnp.int32)[labels] + rank
+    perm = jnp.full((out_size,), n, jnp.int32).at[inv].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return perm, inv, counts
 
 
 def churn_frac(labels_new: jax.Array, labels_ref: jax.Array) -> jax.Array:
@@ -246,13 +298,21 @@ def reorder_backend(inner: Backend,
         res_p, ic = inner.step_fn(xp, c, k, carry[5])
         return _post(x, k, carry, res_p, ic)
 
-    def batched_step_fn(x, cs, k, carries):
+    def batched_step_fn(x, cs, k, carries, w=None):
         # per-restart permutations; x may be shared (N, d) or per-problem
         # (R, N, d).  The sort/gather bookkeeping vmaps (lax.cond lowers to
         # a select under vmap, so batched restarts pay the sort every step
         # once warm — the correctness path; see DESIGN.md §Locality), while
         # the inner step keeps its native batched kernel on the gathered
         # (R, N, d) X.
+        if w is not None:
+            raise TypeError(
+                "reorder_backend has no weighted batched path: _post "
+                "recomputes unweighted stats in original row order.  Use "
+                "an unwrapped backend for weighted/hierarchical batched "
+                "solves — the hierarchy engine's padded segments are "
+                "already contiguous by construction, so reordering would "
+                "buy nothing there anyway")
         xb = x.ndim == 3
         xp, carries = jax.vmap(
             lambda xx, cr: _pre(xx, k, cr),

@@ -51,6 +51,7 @@ SCHEMA_VERSION = 1
 KIND_LOOP = "loop_state"             # kmeans._LoopState
 KIND_BATCHED = "batched_state"       # kmeans._BatchedState
 KIND_MINIBATCH = "minibatch_stream"  # {"state": MiniBatchState, "key",...}
+KIND_HIERARCHY = "hierarchy_state"   # hierarchy round state (core/hierarchy)
 KIND_ESTIMATOR_AA = "estimator/aa_kmeans"
 KIND_ESTIMATOR_MB = "estimator/minibatch_aa_kmeans"
 

@@ -91,7 +91,7 @@ def _fused_kernel(x_ref, c_ref, csq_ref, w_ref,
     def _emit():
         labels = amin_s[...]
         mind = mind_s[...]
-        w = w_ref[...]                                 # (TN,) f32
+        w = w_ref[...].reshape(-1)                     # (TN,) f32
         labels_ref[...] = labels.reshape(labels_ref.shape)
         mind_ref[...] = mind.reshape(mind_ref.shape)
 
@@ -191,7 +191,7 @@ def _fused_bounds_kernel(x_ref, c_ref, csq_ref, w_ref, lb_ref, ub_ref,
     def _emit():
         labels = amin_s[...]
         mind = mind_s[...]
-        w = w_ref[...]
+        w = w_ref[...].reshape(-1)
         labels_ref[...] = labels.reshape(labels_ref.shape)
         mind_ref[...] = mind.reshape(mind_ref.shape)
 
@@ -229,7 +229,8 @@ def _fused_bounds_call(x, cs, w, lab0, lb_sq, ub_sq, *, tn: int, tk: int,
 
     xp = pad_to(pad_to(x, -2, tn), -1, tiles.LANE)
     cp = pad_to(pad_to(cs, -2, tk), -1, tiles.LANE)
-    wp = pad_to(w, 0, tn)
+    wp = pad_to(w, -1, tn)
+    w_batched = w.ndim == 2
     fmax = jnp.float32(jnp.finfo(jnp.float32).max)
     # padding rows must never force a tile's computation: their lower
     # bound is +max and their upper bound 0, so lb <= ub is always false
@@ -253,6 +254,10 @@ def _fused_bounds_call(x, cs, w, lab0, lb_sq, ub_sq, *, tn: int, tk: int,
         x_spec = pl.BlockSpec((1, tn, dp), lambda rr, i, j: (rr, i, 0))
     else:
         x_spec = pl.BlockSpec((tn, dp), lambda rr, i, j: (i, 0))
+    if w_batched:
+        w_spec = pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i))
+    else:
+        w_spec = pl.BlockSpec((tn,), lambda rr, i, j: (i,))
 
     return pl.pallas_call(
         functools.partial(_fused_bounds_kernel, tk=tk),
@@ -261,7 +266,7 @@ def _fused_bounds_call(x, cs, w, lab0, lb_sq, ub_sq, *, tn: int, tk: int,
             x_spec,
             pl.BlockSpec((1, tk, dp), lambda rr, i, j: (rr, j, 0)),
             pl.BlockSpec((1, tk), lambda rr, i, j: (rr, j)),
-            pl.BlockSpec((tn,), lambda rr, i, j: (i,)),
+            w_spec,
             pl.BlockSpec((1, tn, g), lambda rr, i, j: (rr, i, 0)),
             pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
             pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
@@ -301,7 +306,8 @@ def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
 
     xp = pad_to(pad_to(x, -2, tn), -1, tiles.LANE)
     cp = pad_to(pad_to(cs, -2, tk), -1, tiles.LANE)
-    wp = pad_to(w, 0, tn)            # tile-padding rows weigh 0 -> inert
+    wp = pad_to(w, -1, tn)           # tile-padding rows weigh 0 -> inert
+    w_batched = w.ndim == 2
 
     cpf = cp.astype(jnp.float32)
     csq = jnp.sum(cpf * cpf, axis=-1)                  # (R, Kp)
@@ -319,6 +325,10 @@ def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
         x_spec = pl.BlockSpec((1, tn, dp), lambda rr, i, j: (rr, i, 0))
     else:
         x_spec = pl.BlockSpec((tn, dp), lambda rr, i, j: (i, 0))
+    if w_batched:
+        w_spec = pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i))
+    else:
+        w_spec = pl.BlockSpec((tn,), lambda rr, i, j: (i,))
 
     return pl.pallas_call(
         functools.partial(_fused_kernel, tk=tk),
@@ -327,7 +337,7 @@ def _fused_call(x, cs, w, *, tn: int, tk: int, interpret: bool):
             x_spec,
             pl.BlockSpec((1, tk, dp), lambda rr, i, j: (rr, j, 0)),
             pl.BlockSpec((1, tk), lambda rr, i, j: (rr, j)),
-            pl.BlockSpec((tn,), lambda rr, i, j: (i,)),
+            w_spec,
         ],
         out_specs=[
             pl.BlockSpec((1, tn), lambda rr, i, j: (rr, i)),
@@ -362,7 +372,9 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
     x: (N, d) — or (R, N, d) for per-problem batches; c: (K, d) — or
     (R, K, d) to run R centroid sets in one launch (the batched slot).
     w: optional (N,) row weights folded into sums/counts/energy (the
-    minibatch slot; labels/min_sqdist stay unweighted).
+    minibatch slot; labels/min_sqdist stay unweighted) — or (R, N)
+    per-problem weights in the batched case, the masking column of the
+    hierarchy engine's padded segments (DESIGN.md §Hierarchy).
 
     Returns (labels i32, min_sqdist f32, sums (K,d) f32, counts (K,) f32,
     energy () f32), each gaining a leading R axis when c is (R, K, d).
@@ -392,6 +404,10 @@ def fused_lloyd_pallas(x: jax.Array, c: jax.Array, w=None, *,
         w = jnp.ones((n,), jnp.float32)
     else:
         w = w.astype(jnp.float32)
+    if w.ndim == 2 and not batched:
+        raise ValueError(
+            f"per-problem w {w.shape} needs a per-problem c (R, K, d); "
+            f"got {c.shape}")
     kind = "fused" if bounds is None else "fused_bounds"
     if tn is None or tk is None:
         ct, ck = tiles.choose_tiles(n, k, d, jnp.dtype(x.dtype).itemsize,

@@ -129,6 +129,80 @@ class CollectMetrics:
         pass
 
 
+class EarlyStopHook(CollectMetrics):
+    """Metrics-driven early stop: a collect sink that watches the energy
+    stream and raises ``should_stop`` when per-segment improvement stalls
+    (ROADMAP runtime follow-up).
+
+    Passed as the ``metrics=`` sink of any segmented driver (the solver
+    drivers check ``should_stop`` after each boundary's ``log_scalars``
+    and exit the host loop early), it needs no driver-specific wiring —
+    it rides the same one-method protocol every sink uses, and keeps
+    `CollectMetrics`' ``records`` for inspection of the decision.
+
+    ``metric`` names the scalar(s) to watch, first match wins per call —
+    the default covers the segmented drivers' spellings ("energy" for the
+    single solve, "energy_best" batched, "e_val" minibatch, "energy"
+    again for hierarchy rounds).  A stall is a boundary whose best-so-far
+    value improves by a RELATIVE margin below ``rel_tol``;
+    ``patience`` consecutive stalls (after ``min_records`` boundaries)
+    trip the stop.  Non-finite and metric-free records are ignored.
+    Thread-safe like its base; ``should_stop`` is monotone (never reset).
+    """
+
+    def __init__(self, metric=("energy", "energy_best", "e_val"),
+                 rel_tol: float = 1e-3, patience: int = 2,
+                 min_records: int = 1):
+        super().__init__()
+        self.metric = (metric,) if isinstance(metric, str) else tuple(metric)
+        self.rel_tol = float(rel_tol)
+        self.patience = int(patience)
+        self.min_records = int(min_records)
+        self.should_stop = False
+        self.stopped_at: Optional[int] = None
+        self._best: Optional[float] = None
+        self._stall = 0
+        self._seen = 0
+
+    def log_scalars(self, step, scalars) -> None:
+        super().log_scalars(step, scalars)
+        val = next((scalars[m] for m in self.metric if m in scalars), None)
+        if val is None:
+            return
+        v = _to_float(val)
+        if v != v or v in (float("inf"), float("-inf")):
+            return
+        with self._lock:
+            self._seen += 1
+            if self._best is None:
+                self._best = v
+                return
+            denom = max(abs(self._best), 1e-30)
+            if (self._best - v) / denom > self.rel_tol:
+                self._best, self._stall = v, 0
+                return
+            self._best = min(self._best, v)
+            self._stall += 1
+            if self._stall >= self.patience and self._seen > self.min_records:
+                if not self.should_stop:
+                    self.stopped_at = int(step)
+                self.should_stop = True
+
+
+def should_stop(metrics) -> bool:
+    """Driver-side probe: True when the sink requests an early exit.
+    Any sink exposing a truthy ``should_stop`` attribute qualifies —
+    plain sinks (no such attribute) never stop a driver — and a
+    `TeeMetrics` fan-out is searched recursively, so a hook composes
+    with a JSONL log."""
+    if bool(getattr(metrics, "should_stop", False)):
+        return True
+    sinks = getattr(metrics, "sinks", None)
+    if sinks:
+        return any(should_stop(s) for s in sinks)
+    return False
+
+
 def as_metrics(obj) -> MetricsLogger:
     """Normalise the ``metrics=`` argument every driver accepts: None ->
     the null sink; a string -> a named built-in ("null" | "stdout");

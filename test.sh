@@ -44,7 +44,7 @@ if [[ "${1:-}" == "--interpret" ]]; then
     exec python -m pytest -x -q -m 'not slow' \
         tests/test_kernels.py tests/test_kernels_v2.py \
         tests/test_conformance.py tests/test_bounds.py \
-        tests/test_locality.py "$@"
+        tests/test_locality.py tests/test_hierarchy.py "$@"
 fi
 if [[ "${1:-}" == "--slow" ]]; then
     shift

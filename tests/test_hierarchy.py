@@ -1,0 +1,265 @@
+"""Hierarchy-engine conformance (DESIGN.md §Hierarchy).
+
+The divide-and-conquer engine's contract is tested at its seams:
+
+  * G = 1 IS the flat batched solve — bitwise, not approximately;
+  * the per-problem weight machinery it rides on is exact: weight-1 rows
+    match the unweighted solve bitwise, weight-0 padding rows change
+    nothing;
+  * reassignment rounds never increase the RETURNED energy (the
+    best-snapshot guard), and labels come back in original row order;
+  * the two-level structure survives estimator save/load and the round
+    loop survives checkpoint/resume bit-exactly.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.api import AAKMeans
+from repro.core.hierarchy import (HierarchyResult, aa_kmeans_hierarchical,
+                                  default_n_groups, hierarchy_state_like)
+from repro.core.init_schemes import batched_init
+from repro.core.kmeans import (KMeansConfig, aa_kmeans_batched, select_best)
+from repro.runtime.metrics import CollectMetrics, EarlyStopHook
+from repro.serving.closure import closure_assign, hierarchy_closure_index
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _smooth(n=2048, d=8, seed=1):
+    """Smooth-density manifold — the k²-means operating regime (see
+    benchmarks/hierarchy_bench.py for why not well-separated blobs)."""
+    rng = np.random.default_rng(seed)
+    z = rng.normal(size=(n, 3))
+    basis = rng.normal(size=(3, d)) / np.sqrt(3)
+    return jnp.asarray((np.tanh(z @ basis)
+                        + 0.05 * rng.normal(size=(n, d))).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# degenerate exactness
+# ---------------------------------------------------------------------------
+
+def test_default_n_groups_divisor_near_root():
+    assert default_n_groups(4096) == 64
+    assert default_n_groups(65536) == 256
+    assert default_n_groups(2 ** 20) == 1024
+    assert default_n_groups(12) in (3, 4)
+    assert default_n_groups(7) == 1          # prime: no useful divisor
+
+
+def test_g1_bitwise_matches_flat_batched():
+    """The ISSUE acceptance: G=1 is the flat batched solve bit for bit —
+    same seeds, same driver, same leaves."""
+    x = _smooth(512, 5)
+    cfg = KMeansConfig(k=8, max_iter=40)
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    c0s = batched_init("kmeans++", keys, x, 8)
+    flat = select_best(aa_kmeans_batched(x, c0s, cfg, backend="dense"))
+    hier = aa_kmeans_hierarchical(x, 8, cfg, backend="dense",
+                                  n_groups=1, n_init=2, c0s=c0s)
+    assert bool(jnp.array_equal(hier.centroids, flat.centroids))
+    assert bool(jnp.array_equal(hier.labels, flat.labels.astype(jnp.int32)))
+    assert bool(jnp.array_equal(hier.energy,
+                                flat.energy.astype(jnp.float32)))
+    assert hier.n_rounds == 0
+    assert np.array_equal(np.asarray(hier.group_offsets), [0, 8])
+
+
+def test_weight_one_rows_bitwise_and_padding_exact():
+    """The weights refactor the engine rides on: dense weights=1 is the
+    unweighted solve bitwise, and appended weight-0 rows perturb
+    nothing."""
+    x = _smooth(256, 4)
+    cfg = KMeansConfig(k=6, max_iter=30)
+    c0s = batched_init("kmeans++",
+                       jax.random.split(jax.random.PRNGKey(1), 1), x, 6)
+    plain = aa_kmeans_batched(x, c0s, cfg, backend="dense")
+    ones = aa_kmeans_batched(x, c0s, cfg, backend="dense",
+                             weights=jnp.ones((1, 256), x.dtype))
+    for a, b in zip(plain, ones):
+        assert bool(jnp.array_equal(a, b))
+    xp = jnp.concatenate([x, jnp.full((32, 4), 7.7, x.dtype)])
+    wp = jnp.concatenate([jnp.ones(256), jnp.zeros(32)]).astype(x.dtype)
+    padded = aa_kmeans_batched(xp[None][0], c0s, cfg, backend="dense",
+                               weights=wp[None])
+    assert bool(jnp.array_equal(padded.centroids, plain.centroids))
+    assert bool(jnp.array_equal(padded.energy, plain.energy))
+    assert bool(jnp.array_equal(padded.labels[:, :256], plain.labels))
+
+
+# ---------------------------------------------------------------------------
+# round loop invariants
+# ---------------------------------------------------------------------------
+
+def test_reassignment_never_increases_energy():
+    """energy_best is monotone non-increasing across rounds, and the
+    returned energy equals the best logged one — a crude super-solve
+    (super_max_iter=1) forces rows to actually move."""
+    x = _smooth(2048, 8, seed=2)
+    cfg = KMeansConfig(k=64, max_iter=25)
+    mx = CollectMetrics()
+    res = aa_kmeans_hierarchical(x, 64, cfg, backend="dense", n_groups=8,
+                                 n_reassign=3, super_max_iter=1,
+                                 metrics=mx, seed=0)
+    eb = [r["energy_best"] for _, r in mx.records]
+    assert len(eb) >= 2          # at least one reassignment round ran
+    assert all(a >= b - 1e-6 * abs(a) for a, b in zip(eb, eb[1:]))
+    assert float(res.energy) == pytest.approx(eb[-1], rel=1e-6)
+
+
+def test_labels_original_row_order_and_consistent():
+    """Labels index the flattened group-major codebook in ORIGINAL row
+    order: recomputing the energy from (labels, centroids) reproduces the
+    reported energy, and every row's label lands inside its super-
+    cluster's codebook slice."""
+    x = _smooth(1024, 6, seed=3)
+    res = aa_kmeans_hierarchical(x, 32, KMeansConfig(k=32, max_iter=25),
+                                 backend="dense", n_groups=4,
+                                 n_reassign=1, seed=4)
+    e2 = float(jnp.sum(jnp.sum((x - res.centroids[res.labels]) ** 2,
+                               axis=1)))
+    assert float(res.energy) == pytest.approx(e2, rel=1e-4)
+    off = np.asarray(res.group_offsets)
+    grp = np.asarray(res.labels_super)
+    lab = np.asarray(res.labels)
+    assert ((lab >= off[grp]) & (lab < off[grp + 1])).all()
+
+
+def test_sub_energies_sum_to_total():
+    x = _smooth(512, 4, seed=5)
+    res = aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16, max_iter=20),
+                                 backend="dense", n_groups=4, seed=5)
+    assert float(res.energy) == pytest.approx(
+        float(jnp.sum(res.sub_energies)), rel=1e-6)
+
+
+def test_early_stop_hook_halts_rounds():
+    """An EarlyStopHook with an impossible improvement bar stops the
+    round loop at its patience, not at n_reassign."""
+    x = _smooth(1024, 6, seed=6)
+    hook = EarlyStopHook(rel_tol=10.0, patience=1, min_records=1)
+    res = aa_kmeans_hierarchical(x, 32, KMeansConfig(k=32, max_iter=20),
+                                 backend="dense", n_groups=4,
+                                 n_reassign=5, super_max_iter=1,
+                                 metrics=hook, seed=6)
+    assert hook.should_stop
+    assert res.n_rounds < 5
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_bitwise(tmp_path):
+    """Round-granular KIND_HIERARCHY snapshots: resuming from a mid-run
+    artifact replays the remaining rounds bit-identically."""
+    x = _smooth(1024, 6, seed=7)
+    cfg = KMeansConfig(k=32, max_iter=20)
+    kw = dict(backend="dense", n_groups=4, n_reassign=3,
+              super_max_iter=1, seed=7)
+    full = aa_kmeans_hierarchical(x, 32, cfg, checkpoint_dir=tmp_path, **kw)
+    snaps = sorted(glob.glob(os.path.join(tmp_path, "it_*.npz")))
+    assert len(snaps) >= 2       # round 0 + at least one reassignment
+    resumed = aa_kmeans_hierarchical(x, 32, cfg, resume_from=snaps[0],
+                                     **kw)
+    assert bool(jnp.array_equal(full.centroids, resumed.centroids))
+    assert bool(jnp.array_equal(full.labels, resumed.labels))
+    assert bool(jnp.array_equal(full.energy, resumed.energy))
+    assert bool(jnp.array_equal(full.labels_super, resumed.labels_super))
+
+
+def test_resume_rejects_config_mismatch(tmp_path):
+    x = _smooth(512, 4, seed=8)
+    aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16, max_iter=10),
+                           backend="dense", n_groups=4, n_reassign=1,
+                           checkpoint_dir=tmp_path, seed=8)
+    snap = sorted(glob.glob(os.path.join(tmp_path, "it_*.npz")))[0]
+    # either guard is a loud refusal: the per-leaf shape check (different
+    # G changes every group-axis leaf) or the meta n_groups check
+    with pytest.raises(ValueError, match="n_groups|shape mismatch"):
+        aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16, max_iter=10),
+                               backend="dense", n_groups=2,
+                               resume_from=snap, seed=8)
+
+
+def test_state_like_matches_snapshot(tmp_path):
+    x = _smooth(512, 4, seed=9)
+    aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16, max_iter=10),
+                           backend="dense", n_groups=4, n_reassign=1,
+                           checkpoint_dir=tmp_path, seed=9)
+    from repro.core import serialize
+    snap = sorted(glob.glob(os.path.join(tmp_path, "it_*.npz")))[-1]
+    state, meta = serialize.restore(snap, hierarchy_state_like(x, 16, 4),
+                                    expect_kind=serialize.KIND_HIERARCHY)
+    assert state["best_centroids"].shape == (16, 4)
+    assert int(meta["n_groups"]) == 4
+
+
+def test_estimator_roundtrip_and_free_index(tmp_path):
+    """AAKMeans(hierarchical=...) fit -> save -> load keeps the labels in
+    original row order and the two-level structure; the serving index is
+    the solve's own routing (agreement with fit labels)."""
+    x = np.asarray(_smooth(2048, 8, seed=10))
+    m = AAKMeans(n_clusters=64, max_iter=25, seed=2, serving_index=True,
+                 hierarchical={"n_groups": 8, "n_reassign": 1}).fit(x)
+    assert m.hier_routers_.shape == (8, 8)
+    assert np.array_equal(np.asarray(m.hier_offsets_),
+                          np.arange(9) * 8)
+    p = m.save(os.path.join(tmp_path, "model"))
+    m2 = AAKMeans.load(p)
+    assert bool(jnp.array_equal(m2.centroids_, m.centroids_))
+    assert bool(jnp.array_equal(m2.labels_, m.labels_))
+    assert bool(jnp.array_equal(m2.hier_routers_, m.hier_routers_))
+    assert bool(jnp.array_equal(m2.hier_offsets_, m.hier_offsets_))
+    # the persisted closure index is the hierarchy's free one: candidate
+    # lists partition the codebook group by group
+    cands = np.sort(np.asarray(m2.closure_candidates_), axis=1)
+    assert np.array_equal(cands.reshape(-1), np.arange(64))
+    la = m2.predict(x, approx=True)
+    assert float((la == np.asarray(m.labels_)).mean()) > 0.95
+
+
+def test_hierarchy_closure_index_prefix_contract():
+    x = _smooth(1024, 6, seed=11)
+    res = aa_kmeans_hierarchical(x, 32, KMeansConfig(k=32, max_iter=20),
+                                 backend="dense", n_groups=4, seed=11)
+    idx = hierarchy_closure_index(res.centroids, res.routers,
+                                  res.group_offsets)
+    assert idx.candidates.shape == (4, 8)
+    labels, _ = closure_assign(x, res.centroids, idx.routers,
+                               idx.candidates)
+    assert float((labels == res.labels).mean()) > 0.9
+    small = idx.shrink(3)
+    assert bool(jnp.array_equal(small.candidates, idx.candidates[:, :3]))
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_rejects_non_divisor_groups():
+    x = _smooth(256, 4)
+    with pytest.raises(ValueError, match="divisor"):
+        aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16), n_groups=5)
+
+
+def test_rejects_g1_checkpointing(tmp_path):
+    x = _smooth(256, 4)
+    with pytest.raises(ValueError, match="aa_kmeans_batched"):
+        aa_kmeans_hierarchical(x, 16, KMeansConfig(k=16), n_groups=1,
+                               checkpoint_dir=tmp_path)
+
+
+def test_result_is_named_tuple_with_expected_fields():
+    assert set(HierarchyResult._fields) == {
+        "centroids", "labels", "energy", "routers", "group_offsets",
+        "labels_super", "sub_energies", "n_rounds"}

@@ -85,6 +85,44 @@ def test_counting_sort_empty_clusters_and_tiles():
                           np.argsort(expect, kind="stable"))
 
 
+def test_counting_sort_segmented_matches_tight_pack():
+    """With offsets = the exclusive cumsum of the counts (the tight
+    packing), the segmented variant IS counting_sort_perm plus sentinel-
+    free slots."""
+    from repro.core.locality import counting_sort_perm_segmented
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        n = int(rng.integers(1, 150))
+        k = int(rng.integers(1, 12))
+        labels = rng.integers(0, k, size=n).astype(np.int32)
+        counts = np.bincount(labels, minlength=k)
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        perm, inv, cnt = counting_sort_perm_segmented(
+            jnp.asarray(labels), k, jnp.asarray(offsets, np.int32), n)
+        tight, tight_inv = counting_sort_perm(jnp.asarray(labels), k)
+        assert np.array_equal(np.asarray(perm), np.asarray(tight))
+        assert np.array_equal(np.asarray(inv), np.asarray(tight_inv))
+        assert np.array_equal(np.asarray(cnt), counts)
+
+
+def test_counting_sort_segmented_padded_stripes():
+    """The hierarchy layout: offsets = arange(k)*stride lays label-l rows
+    into stripe l (stable within the stripe), unfilled slots carry the
+    sentinel N, and inv points each row at its stripe slot."""
+    from repro.core.locality import counting_sort_perm_segmented
+    labels = jnp.asarray([2, 0, 2, 1, 0, 2], jnp.int32)
+    stride, k, n = 4, 3, 6
+    perm, inv, cnt = counting_sort_perm_segmented(
+        labels, k, jnp.arange(k, dtype=jnp.int32) * stride, k * stride,
+        sort_tile=2)
+    p = np.asarray(perm)
+    assert np.array_equal(cnt, [2, 1, 3])
+    assert np.array_equal(p[0:2], [1, 4]) and (p[2:4] == n).all()
+    assert np.array_equal(p[4:5], [3]) and (p[5:8] == n).all()
+    assert np.array_equal(p[8:11], [0, 2, 5]) and (p[11:] == n).all()
+    assert np.array_equal(np.asarray(inv), [8, 0, 9, 4, 1, 10])
+
+
 # ---------------------------------------------------------------------------
 # driver-level bitwise equality
 # ---------------------------------------------------------------------------

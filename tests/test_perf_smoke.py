@@ -120,6 +120,47 @@ def test_checkpoint_bench_emits_json(tmp_path):
     assert rec["async_to_sync_overhead_ratio"] < 1.0
 
 
+def test_hierarchy_bench_emits_json(tmp_path):
+    """`benchmarks/hierarchy_bench.py --smoke`: the flat-vs-hierarchical
+    comparison runs end to end and BENCH_hierarchy.json is well formed
+    (ISSUE 10 wires the full run into run.py)."""
+    sys.path.insert(0, str(BENCH_DIR.parent))
+    try:
+        from benchmarks import hierarchy_bench
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "BENCH_hierarchy.json"
+    records = hierarchy_bench.main(["--smoke", "--json", str(out)])
+    payload = json.loads(out.read_text())
+    assert payload["schema"] == "hierarchy_bench/v1"
+    assert payload["smoke"] is True and payload["records"] == records
+    assert records
+    for r in records:
+        assert {"case", "k", "n", "d", "n_groups", "k_sub", "hier_wall_s",
+                "hier_energy", "n_rounds", "flat_wall_s", "flat_energy",
+                "wall_ratio", "energy_ratio"} <= set(r)
+        assert r["hier_wall_s"] > 0 and r["hier_energy"] > 0
+        assert r["k"] == r["n_groups"] * r["k_sub"]
+        if r["flat_wall_s"] is not None:
+            assert r["wall_ratio"] > 0 and r["energy_ratio"] > 0
+
+
+def test_hierarchy_bench_committed_pin():
+    """The committed BENCH_hierarchy.json pins the ISSUE 10 acceptance:
+    at K=65536 the hierarchical engine beats the flat batched solve on
+    wall clock without giving up energy."""
+    path = BENCH_DIR.parent / "BENCH_hierarchy.json"
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == "hierarchy_bench/v1"
+    by_k = {r["k"]: r for r in payload["records"]}
+    big = by_k[65536]
+    assert big["wall_ratio"] < 1.0          # hier strictly faster
+    assert big["energy_ratio"] <= 1.05      # <= 5% energy regression
+    # the million-cluster arm exists and solved hierarchically
+    assert any(r["k"] >= 2 ** 20 and r["hier_energy"] > 0
+               for r in payload["records"])
+
+
 def test_serving_bench_emits_json(tmp_path):
     """`benchmarks/serving_bench.py --smoke`: the recall-vs-latency sweep
     runs end to end and BENCH_serving.json is well formed (ISSUE 8

@@ -134,6 +134,49 @@ def test_collect_and_tee_and_jsonl(tmp_path):
                      {"step": 2, "e": 1.25}]
 
 
+def test_early_stop_hook_trips_on_stall():
+    from repro.runtime.metrics import EarlyStopHook, should_stop
+    hook = EarlyStopHook(rel_tol=1e-3, patience=2, min_records=1)
+    hook.log_scalars(0, {"energy": 100.0})
+    hook.log_scalars(1, {"energy": 50.0})     # big improvement: no stall
+    assert not hook.should_stop
+    hook.log_scalars(2, {"energy": 49.999})   # stall 1
+    assert not hook.should_stop
+    hook.log_scalars(3, {"energy": 49.998})   # stall 2 -> trip
+    assert hook.should_stop and hook.stopped_at == 3
+    assert should_stop(hook)
+    # monotone: later improvement does not un-trip
+    hook.log_scalars(4, {"energy": 1.0})
+    assert hook.should_stop
+    # records kept for inspecting the decision (CollectMetrics base)
+    assert len(hook.records) == 5
+
+
+def test_early_stop_hook_metric_fallbacks_and_nonfinite():
+    from repro.runtime.metrics import EarlyStopHook, should_stop
+    hook = EarlyStopHook(rel_tol=1e-3, patience=1, min_records=1)
+    hook.log_scalars(0, {"segment_s": 0.5})            # no watched metric
+    hook.log_scalars(1, {"e_val": float("nan")})       # ignored
+    hook.log_scalars(2, {"energy_best": 10.0})         # batched spelling
+    assert not hook.should_stop
+    hook.log_scalars(3, {"energy_best": 10.0})
+    assert hook.should_stop
+    # plain sinks never stop a driver; a Tee fan-out is searched
+    assert not should_stop(CollectMetrics())
+    assert should_stop(TeeMetrics(CollectMetrics(), hook))
+
+
+def test_early_stop_hook_halts_segmented_driver():
+    """Wired as the metrics= sink of the segmented single-solve driver:
+    an impossible improvement bar stops the host loop before max_iter."""
+    from repro.runtime.metrics import EarlyStopHook
+    x, c0, cfg = _problem(max_iter=200)
+    hook = EarlyStopHook(rel_tol=10.0, patience=1, min_records=1)
+    res = aa_kmeans(x, c0, cfg, checkpoint_every=1, metrics=hook)
+    assert hook.should_stop
+    assert int(res.n_iter) < 200
+
+
 def test_jsonl_is_thread_safe(tmp_path):
     jl = JsonlMetrics(tmp_path / "m.jsonl")
 

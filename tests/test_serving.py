@@ -101,6 +101,82 @@ def test_fit_builds_and_refit_invalidates_index():
     assert not np.allclose(np.asarray(m.closure_routers_), first)
 
 
+def test_adaptive_index_counts_and_label_validity(fitted):
+    """adaptive=True sizes each router's live prefix by its radius:
+    counts land in [1, C], and every served label comes from the nearest
+    router's VALID prefix — a masked column can never win the argmin."""
+    x, model = fitted
+    idx = build_closure_index(model.centroids_, n_candidates=8, n_groups=4,
+                              adaptive=True)
+    n_valid = np.asarray(idx.n_valid)
+    c_max = idx.candidates.shape[1]
+    assert n_valid.shape == (4,)
+    assert n_valid.min() >= 1 and n_valid.max() <= c_max
+    labels, d2 = closure_assign(jnp.asarray(x), model.centroids_,
+                                idx.routers, idx.candidates,
+                                n_valid=idx.n_valid)
+    g = np.argmin(((x[:, None, :] - np.asarray(idx.routers)) ** 2
+                   ).sum(-1), axis=1)
+    cand = np.asarray(idx.candidates)
+    ok = [labels[i] in cand[g[i], :n_valid[g[i]]] for i in range(len(x))]
+    assert all(ok)
+    assert np.isfinite(np.asarray(d2)).all()
+
+
+def test_adaptive_shrink_clamps_and_uniform_contract_unchanged(fitted):
+    x, model = fitted
+    idx = build_closure_index(model.centroids_, n_candidates=8, n_groups=4,
+                              adaptive=True)
+    small = idx.shrink(3)
+    assert small.candidates.shape[1] == 3
+    assert np.asarray(small.n_valid).max() <= 3
+    assert np.asarray(small.n_valid).min() >= 1
+    # the shrunken adaptive index still serves in-prefix labels
+    labels, _ = closure_assign(jnp.asarray(x[:256]), model.centroids_,
+                               small.routers, small.candidates,
+                               n_valid=small.n_valid)
+    assert np.asarray(labels).min() >= 0 and np.asarray(labels).max() < 32
+    # uniform indexes are untouched by the new field
+    uni = build_closure_index(model.centroids_, n_candidates=8, n_groups=4)
+    assert uni.n_valid is None and uni.shrink(3).n_valid is None
+
+
+def test_adaptive_recall_tracks_uniform(fitted):
+    """Adaptive pricing reallocates candidates, it does not give up
+    recall wholesale: stay within a few points of the uniform index at
+    the same C on blob data."""
+    x, model = fitted
+    exact = model.predict(x)
+    uni = build_closure_index(model.centroids_, n_candidates=12, n_groups=4)
+    ada = build_closure_index(model.centroids_, n_candidates=12, n_groups=4,
+                              adaptive=True)
+    ru = np.mean(np.asarray(closure_assign(
+        jnp.asarray(x), model.centroids_, uni.routers,
+        uni.candidates)[0]) == exact)
+    ra = np.mean(np.asarray(closure_assign(
+        jnp.asarray(x), model.centroids_, ada.routers, ada.candidates,
+        n_valid=ada.n_valid)[0]) == exact)
+    assert ra >= ru - 0.1
+    assert ra >= 0.7
+
+
+def test_adaptive_sqdist_masked_columns_filled(fitted):
+    x, model = fitted
+    ada = build_closure_index(model.centroids_, n_candidates=8, n_groups=4,
+                              adaptive=True)
+    t = closure_sqdist(jnp.asarray(x[:64]), model.centroids_, ada.routers,
+                       ada.candidates, n_valid=ada.n_valid)
+    t = np.asarray(t)
+    finite = np.isfinite(t)
+    assert (finite.sum(axis=1) >= 1).all()
+    assert (finite.sum(axis=1) <= ada.candidates.shape[1]).all()
+    # argmin agreement with adaptive closure_assign
+    labels, _ = closure_assign(jnp.asarray(x[:64]), model.centroids_,
+                               ada.routers, ada.candidates,
+                               n_valid=ada.n_valid)
+    assert np.array_equal(np.argmin(t, axis=1), np.asarray(labels))
+
+
 def test_legacy_artifact_without_index_falls_back(fitted, tmp_path):
     """approx=True on an index-less (legacy) artifact serves the exact
     full scan — no crash, no silent wrong answers."""
